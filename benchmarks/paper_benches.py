@@ -1,0 +1,207 @@
+"""One benchmark per paper table/figure. Each returns rows of
+(name, value, expected, note); run.py prints CSV and wall-times."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import headers, messaging
+from repro.core.lb.schemes import LBScheme
+from repro.core.types import MsgProtocol, TransportMode
+from repro.network import workloads
+from repro.network.ecmp import RoutingTables
+from repro.network.fabric import SimParams, simulate
+from repro.network.topology import paper_fig2
+
+import jax.numpy as jnp
+
+
+def bench_ecmp_collisions():
+    """Sec. 2.1: EV path-collision probability on the Fig. 2 fat tree —
+    25% same-pod (4 paths), 6.25% cross-pod (16 paths)."""
+    g = paper_fig2()
+    rt = RoutingTables(g)
+    n = 200_000
+    rng = np.random.default_rng(0)
+    ev1 = jnp.asarray(rng.integers(0, 65536, n), jnp.int32)
+    ev2 = jnp.asarray(rng.integers(0, 65536, n), jnp.int32)
+
+    # same pod, different leaves: host 0 (leaf 0) -> host 5 (leaf 1)
+    src = jnp.zeros((n,), jnp.int32)
+    dst = jnp.full((n,), 5, jnp.int32)
+    fp1 = rt.path_fingerprint(src, dst, ev1)
+    fp2 = rt.path_fingerprint(src, dst, ev2)
+    same_pod = float(np.mean(np.asarray(fp1) == np.asarray(fp2)))
+
+    # cross pod: host 0 -> host 17 (pod 1)
+    dst2 = jnp.full((n,), 17, jnp.int32)
+    fp1x = rt.path_fingerprint(src, dst2, ev1)
+    fp2x = rt.path_fingerprint(src, dst2, ev2)
+    cross_pod = float(np.mean(np.asarray(fp1x) == np.asarray(fp2x)))
+
+    return [
+        ("ev_collision_same_pod", same_pod, 0.25,
+         "4 equal-cost paths in-pod"),
+        ("ev_collision_cross_pod", cross_pod, 0.0625,
+         "16 equal-cost paths cross-pod"),
+        ("paths_same_pod", g.num_paths_same_pod, 4, ""),
+        ("paths_cross_pod", g.num_paths_cross_pod, 16, ""),
+    ]
+
+
+def bench_headers():
+    """Sec. 3.2.2 / Fig. 3: header stack byte counts and wire efficiency."""
+    rows = []
+    stacks = {
+        "rud_udp_ipv4": headers.HeaderConfig(),
+        "rud_rccc": headers.HeaderConfig(rccc=True),
+        "rud_native_ip_min": headers.HeaderConfig(
+            native_ip=True, ses=headers.SES_HEADER_MIN),
+        "rud_tss_ipv6": headers.HeaderConfig(ipv6=True, tss=True),
+        "uud_min": headers.HeaderConfig(mode=TransportMode.UUD,
+                                        ses=headers.SES_HEADER_MIN),
+        "rudi_min": headers.HeaderConfig(mode=TransportMode.RUDI,
+                                         ses=headers.SES_HEADER_MIN),
+    }
+    expect_overhead = {"rud_udp_ipv4": 102, "rud_rccc": 106,
+                       "rud_native_ip_min": 74, "rud_tss_ipv6": 150,
+                       "uud_min": 70, "rudi_min": 74}
+    for name, cfg in stacks.items():
+        rows.append((f"overhead_{name}", cfg.overhead_bytes(),
+                     expect_overhead[name], "bytes/packet"))
+        rows.append((f"efficiency_{name}", round(cfg.efficiency(4096), 4),
+                     None, "goodput fraction @4KiB MTU"))
+    return rows
+
+
+def bench_messaging():
+    """Sec. 3.1.3 table: completion time of the three large-message
+    protocols, expected and unexpected, playout vs alpha/beta model."""
+    link = messaging.LinkModel(alpha=1.0, beta=0.01)
+    size = 1000.0
+    rows = []
+    for proto in MsgProtocol:
+        for expected in (True, False):
+            ts, tr = (5.0, 2.0) if expected else (2.0, 12.0)
+            model = messaging.model_completion(proto, expected, size, ts,
+                                               tr, link)
+            sim = messaging.simulate_protocol(proto, size, ts, tr, link,
+                                              eager_limit=2000.0)
+            tag = f"{proto.name.lower()}_{'exp' if expected else 'unexp'}"
+            rows.append((f"t_complete_{tag}", sim.receiver_complete, model,
+                         "playout == table model"))
+    return rows
+
+
+def bench_congestion():
+    """Fig. 7: incast / outcast / in-network bandwidth shares."""
+    rows = []
+    g, wl, exp = workloads.incast(4, size=100000)
+    r = simulate(g, wl, SimParams(ticks=1200, rccc=True, nscc=False))
+    rows.append(("incast_rccc_share", round(float(
+        r.goodput((300, 1200)).mean()), 3), exp["share"],
+        "4->1 incast, RCCC exact fair share"))
+
+    g, wl, exp = workloads.outcast(4, size=100000)
+    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    rows.append(("outcast_rccc_w_share", round(float(
+        r.goodput((800, 2500))[4]), 3), exp["rccc_w_share"],
+        "RCCC blind grant wastes 25%"))
+    r = simulate(g, wl, SimParams(ticks=2500, rccc=False, nscc=True))
+    rows.append(("outcast_nscc_w_share", round(float(
+        r.goodput((1200, 2500))[4]), 3), exp["nscc_w_share"],
+        "NSCC converges to the optimum"))
+
+    g, wl, exp = workloads.in_network(12, 4, size=100000)
+    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    gp = r.goodput((800, 2500))
+    rows.append(("innetwork_cross_share", round(float(gp[:12].mean()), 3),
+                 exp["cross_share"], "12 flows over 4 uplinks"))
+    rows.append(("innetwork_rccc_local", round(float(gp[12]), 3),
+                 exp["rccc_local_share"], "granted 50% though 67% free"))
+    return rows
+
+
+def bench_loadbalance():
+    """Sec. 2.1 + 3.3.5: polarization vs spraying vs REPS/EV-bitmap."""
+    g, wl, _ = workloads.permutation(k=8, pods=4, shift=17, size=100000)
+    rows = []
+    for scheme in (LBScheme.STATIC, LBScheme.OBLIVIOUS, LBScheme.RR_SLOTS,
+                   LBScheme.REPS, LBScheme.EVBITMAP):
+        r = simulate(g, wl, SimParams(ticks=1500, nscc=True, lb=scheme))
+        gp = r.goodput((700, 1500))
+        rows.append((f"perm_goodput_{scheme.name.lower()}",
+                     round(float(gp.mean()), 3), None,
+                     f"min {gp.min():.3f} trims {int(r.state.trims)}"))
+    return rows
+
+
+def bench_loss_detection():
+    """Sec. 3.2.4: trimming vs OOO-count vs timeout-only recovery."""
+    rows = []
+    # short burst: recovery latency (not downlink capacity) dominates
+    g, wl, _ = workloads.incast(8, size=48)
+    base = dict(ticks=2500, rccc=False, nscc=True, timeout_ticks=300)
+    r = simulate(g, wl, SimParams(trimming=True, **base))
+    rows.append(("completion_trimming", int(r.completion_tick().mean()),
+                 None, f"trims {int(r.state.trims)}"))
+    r = simulate(g, wl, SimParams(trimming=False, ooo_threshold=48, **base))
+    ct = r.completion_tick()
+    rows.append(("completion_ooo_count",
+                 int(ct.mean()) if (ct >= 0).all() else -1, None,
+                 f"drops {int(r.state.drops)}"))
+    r = simulate(g, wl, SimParams(trimming=False, **base))
+    ct = r.completion_tick()
+    rows.append(("completion_timeout_only",
+                 int(ct.mean()) if (ct >= 0).all() else -1, None,
+                 f"drops {int(r.state.drops)} (-1 = unfinished)"))
+    return rows
+
+
+def bench_collective_efficiency():
+    """Framework integration: achieved goodput of collective-shaped
+    traffic under UET transport options (feeds the roofline collective
+    term; see repro/distributed/netmodel.py)."""
+    from repro.distributed.netmodel import simulated_efficiency
+    rows = []
+    for kind in ("all-reduce", "all-to-all"):
+        for lb, name in ((LBScheme.STATIC, "static"),
+                         (LBScheme.OBLIVIOUS, "spray"),
+                         (LBScheme.REPS, "reps")):
+            eff = simulated_efficiency(kind=kind, hosts=32, size_pkts=1200,
+                                       lb=lb, ticks=2000)
+            rows.append((f"eff_{kind.replace('-', '_')}_{name}",
+                         round(eff, 3), None, "goodput fraction"))
+    return rows
+
+
+def bench_failure_mitigation():
+    """REPS failure mitigation [5]: one of 4 uplinks dead; 8 flows share 3
+    live uplinks (optimum 3/8 = 0.375/flow). REPS converges near optimum;
+    oblivious spraying keeps paying the dead path."""
+    from repro.network.fabric import Workload
+    from repro.network.topology import leaf_spine
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    wl = Workload.of(list(range(8)), [8 + i for i in range(8)], 100000)
+    dead = (int(g.up1_table[0, 0]),)
+    rows = []
+    for scheme in (LBScheme.OBLIVIOUS, LBScheme.REPS):
+        p = SimParams(ticks=3000, nscc=True, lb=scheme, failed_queues=dead,
+                      timeout_ticks=64, ooo_threshold=24)
+        r = simulate(g, wl, p)
+        rows.append((f"fail_goodput_{scheme.name.lower()}",
+                     round(float(r.goodput((1500, 3000)).mean()), 3),
+                     0.375 if scheme == LBScheme.REPS else None,
+                     "optimum 3/8 with 1 of 4 uplinks dead"))
+    return rows
+
+
+ALL_BENCHES = [
+    ("ecmp_collisions(Fig2/Sec2.1)", bench_ecmp_collisions),
+    ("headers(Sec3.2.2/Fig3)", bench_headers),
+    ("messaging(Sec3.1.3/Fig5)", bench_messaging),
+    ("congestion(Fig7)", bench_congestion),
+    ("loadbalance(Sec3.3.5)", bench_loadbalance),
+    ("loss_detection(Sec3.2.4)", bench_loss_detection),
+    ("collective_efficiency(netmodel)", bench_collective_efficiency),
+    ("failure_mitigation(REPS[5])", bench_failure_mitigation),
+]

@@ -1,0 +1,43 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``bench,name,value,expected,us_per_call,note`` CSV. Heavier
+simulator benches report their wall time; value==expected (within printed
+tolerance) reproduces the corresponding paper claim.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.paper_benches import ALL_BENCHES
+
+    print("bench,name,value,expected,us_per_call,note")
+    failures = 0
+    for bench_name, fn in ALL_BENCHES:
+        if args.only and args.only not in bench_name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # pragma: no cover
+            print(f"{bench_name},ERROR,{e!r},,,", flush=True)
+            failures += 1
+            continue
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        for name, value, expected, note in rows:
+            exp = "" if expected is None else expected
+            print(f"{bench_name},{name},{value},{exp},{us:.0f},{note}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the UET transport in 60 seconds.
+
+Builds the paper's Fig. 2 fabric (64 endpoints, 8-port switches), runs a
+4->1 incast under RCCC and an 8-flow permutation under REPS spraying, and
+prints the bandwidth shares the paper predicts (Fig. 7 / Sec. 2.1).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.lb.schemes import LBScheme
+from repro.network import workloads
+from repro.network.fabric import SimParams, simulate
+
+
+def main():
+    print("=== UET quickstart ===")
+
+    print("\n[1] incast 4->1 with receiver-credit CC (RCCC, Sec 3.3.2)")
+    g, wl, exp = workloads.incast(4, size=100000)
+    r = simulate(g, wl, SimParams(ticks=1200, rccc=True, nscc=False))
+    gp = r.goodput((300, 1200))
+    print(f"    per-flow goodput: {np.round(gp, 3)} "
+          f"(paper: {exp['share']:.2f} each — optimal)")
+
+    print("\n[2] permutation traffic: static ECMP vs REPS spraying "
+          "(Sec 2.1 polarization)")
+    g, wl, _ = workloads.permutation(k=8, pods=4, shift=17, size=100000)
+    for scheme in (LBScheme.STATIC, LBScheme.REPS):
+        r = simulate(g, wl, SimParams(ticks=1500, nscc=True, lb=scheme))
+        gp = r.goodput((700, 1500))
+        print(f"    {scheme.name:9s}: mean {gp.mean():.3f}  "
+              f"worst flow {gp.min():.3f}")
+
+    print("\n[3] packet trimming vs timeout-only recovery (Sec 3.2.4)")
+    g, wl, _ = workloads.incast(8, size=300)
+    for trim in (True, False):
+        p = SimParams(ticks=5000, nscc=True, trimming=trim,
+                      timeout_ticks=300)
+        r = simulate(g, wl, p)
+        ct = r.completion_tick()
+        done = "all done" if (ct >= 0).all() else "UNFINISHED"
+        print(f"    trimming={str(trim):5s}: mean completion "
+              f"{ct[ct >= 0].mean():7.1f} ticks ({done}, "
+              f"trims={int(r.state.trims)}, drops={int(r.state.drops)})")
+
+
+if __name__ == "__main__":
+    main()

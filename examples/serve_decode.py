@@ -1,0 +1,64 @@
+"""Serving example: batched prefill + greedy decode with ring KV caches.
+
+Uses a reduced mixtral-family config (MoE + sliding-window attention) to
+exercise the full serving path: prefill fills the cache, then the decode
+step extends it one token per request.
+
+Run: PYTHONPATH=src python examples/serve_decode.py --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+from repro.serve.serve_step import make_decode_step, sample_greedy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.reduced("mixtral-8x22b", seq=64)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+
+    B, P = args.batch, args.prompt_len
+    cache_len = P + args.tokens
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+
+    # prefill: run the prompt through decode steps to warm the cache (a
+    # batched single-pass prefill-with-cache-export is the production
+    # path; token-at-a-time keeps this example minimal and exercises the
+    # ring-slot write P times)
+    cache = lm.init_cache(cfg, B, cache_len, jnp.float32)
+    dstep = jax.jit(make_decode_step(cfg, mesh=None))
+    t0 = time.time()
+    logits = None
+    for i in range(P):
+        logits, cache = dstep(params, cache, prompts[:, i:i + 1],
+                              jnp.int32(i))
+    print(f"prefill: {P} steps in {time.time()-t0:.2f}s")
+
+    out = []
+    tok = sample_greedy(logits)[:, None]
+    t0 = time.time()
+    for i in range(args.tokens):
+        out.append(tok)
+        logits, cache = dstep(params, cache, tok, jnp.int32(P + i))
+        tok = sample_greedy(logits)[:, None]
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decode: {args.tokens} tokens x {B} requests in {dt:.2f}s "
+          f"({args.tokens*B/dt:.1f} tok/s)")
+    print("generated ids (request 0):", gen[0].tolist())
+    assert bool(jnp.isfinite(logits).all())
+
+
+if __name__ == "__main__":
+    main()

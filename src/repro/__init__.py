@@ -1,0 +1,4 @@
+"""repro: Ultra Ethernet Transport (UET) reproduced as a multi-pod JAX
+training/serving framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

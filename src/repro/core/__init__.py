@@ -1,0 +1,3 @@
+"""UET transport core: semantics (addressing, matching, messaging),
+packet delivery (PDC, PSN/SACK), congestion management (cms/), load
+balancing (lb/), security (tss), link layer (link)."""

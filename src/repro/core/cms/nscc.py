@@ -1,0 +1,170 @@
+"""Network Signal-based Congestion Control (Sec. 3.3.1).
+
+NSCC runs a control loop at the *source*, combining two signals per ACK:
+
+* ECN — a fast statistical 1-bit signal, marked at switch **egress** (the
+  spec's departure from RFC 3168) so it skips the queue it describes;
+* RTT — a lagging multi-bit signal measured request->response, excluding
+  receiver service time.
+
+Four cases on each arriving ACK (paper's enumeration):
+
+  1. ECN && low RTT   -> congestion *building*: do not react.
+  2. ECN && high RTT  -> congested/overloaded: aggressive multiplicative
+                         decrease per incoming ACK.
+  3. !ECN && low RTT  -> underloaded: quick increase, sized by the gap
+                         between measured and expected RTT.
+  4. !ECN && high RTT -> congestion draining: gentle additive increase.
+
+Plus **Quick Adapt (QA)**: on packet-loss evidence (e.g. trimming NACKs),
+once per RTT-epoch rescale the window to the fraction of traffic actually
+delivered — the incast fast path.
+
+All state is SoA over congestion-control contexts (CCCs) and the update is
+a pure function over a batch of ACKs, so one call services every CCC in
+one fused op — mirroring a hardware NIC pipeline. The Pallas kernel in
+repro/kernels/nscc_update.py implements `nscc_update` blockwise; this
+module is the reference semantics (its `ref.py` re-exports from here).
+
+Windows are measured in MTU packet units (float32); the fabric simulator
+works in packet-time ticks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class NSCCParams:
+    """Control-loop gains. Class-level defaults; tune via replace()."""
+
+    base_rtt: float = 8.0        # unloaded RTT estimate, ticks
+    target_factor: float = 1.25  # high/low RTT threshold = base_rtt * this
+    md: float = 0.65             # case-2 multiplicative decrease per ACK
+    quick_gain: float = 0.60     # case-3 increase gain (packets per ACK max)
+    ai: float = 1.0              # case-4 additive increase (pkts per cwnd ACKs)
+    min_cwnd: float = 1.0
+    max_cwnd: float = 64.0       # slightly above BDP; optimistic start value
+    qa_min_frac: float = 0.125   # QA floor as a fraction of max_cwnd
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class NSCCState:
+    """Per-CCC state (SoA over N contexts).
+
+    cwnd:        [N] float32 congestion window, packets
+    epoch_acked: [N] int32 packets delivered in current QA epoch
+    epoch_lost:  [N] int32 packets reported lost in current QA epoch
+    epoch_tick:  [N] int32 tick when the current QA epoch started
+    """
+
+    cwnd: jax.Array
+    epoch_acked: jax.Array
+    epoch_lost: jax.Array
+    epoch_tick: jax.Array
+
+    @staticmethod
+    def create(n: int, params: NSCCParams) -> "NSCCState":
+        # Optimistic start: window at/near BDP, i.e. start at full rate
+        # (Sec. 3.3.3 "Both RCCC and NSCC ... start at full rate").
+        return NSCCState(
+            cwnd=jnp.full((n,), params.max_cwnd, jnp.float32),
+            epoch_acked=jnp.zeros((n,), jnp.int32),
+            epoch_lost=jnp.zeros((n,), jnp.int32),
+            epoch_tick=jnp.zeros((n,), jnp.int32),
+        )
+
+
+def classify(ecn: jax.Array, rtt: jax.Array, params: NSCCParams) -> jax.Array:
+    """Return the paper's case number (1..4) per ACK."""
+    high = rtt > params.base_rtt * params.target_factor
+    return jnp.where(ecn, jnp.where(high, 2, 1), jnp.where(high, 4, 3))
+
+
+def window_delta(cwnd: jax.Array, ecn: jax.Array, rtt: jax.Array,
+                 params: NSCCParams) -> jax.Array:
+    """Per-ACK window adjustment (packets); the four-case core.
+
+    Vectorized over ACKs; `cwnd` is the current window of the ACK's CCC.
+    """
+    target = params.base_rtt * params.target_factor
+    high = rtt > target
+    # case 2: aggressive MD proportional to RTT excess, per incoming ACK
+    overload = jnp.clip((rtt - target) / jnp.maximum(rtt, 1e-6), 0.0, 1.0)
+    dec = -params.md * overload  # packets per ACK
+    # case 3: quick increase guessing from measured vs expected RTT
+    gap = jnp.clip((target - rtt) / target, 0.0, 1.0)
+    quick = params.quick_gain * gap
+    # case 4: gentle additive increase (+ai per full window of ACKs)
+    gentle = params.ai / jnp.maximum(cwnd, 1.0)
+    return jnp.where(ecn, jnp.where(high, dec, 0.0),
+                     jnp.where(high, gentle, quick))
+
+
+def on_acks(state: NSCCState, params: NSCCParams, ccc: jax.Array,
+            ecn: jax.Array, rtt: jax.Array,
+            valid: jax.Array) -> NSCCState:
+    """Apply a batch of ACKs: ccc [B] int32, ecn [B] bool, rtt [B] float32.
+
+    Multiple ACKs may target the same CCC in one batch; deltas accumulate
+    via scatter-add (order-independent by construction).
+    """
+    cw = state.cwnd[ccc]
+    delta = window_delta(cw, ecn, rtt.astype(jnp.float32), params)
+    delta = jnp.where(valid, delta, 0.0)
+    n = state.cwnd.shape[0]
+    drop = jnp.where(valid, ccc, n)  # OOB -> dropped
+    cwnd = state.cwnd.at[drop].add(delta, mode="drop")
+    cwnd = jnp.clip(cwnd, params.min_cwnd, params.max_cwnd)
+    acked = state.epoch_acked.at[drop].add(
+        jnp.where(valid, 1, 0), mode="drop")
+    return replace(state, cwnd=cwnd, epoch_acked=acked)
+
+
+def on_loss(state: NSCCState, ccc: jax.Array, count: jax.Array,
+            valid: jax.Array) -> NSCCState:
+    """Record loss evidence (trim NACK / EV-inference / timeout) for QA."""
+    n = state.cwnd.shape[0]
+    drop = jnp.where(valid, ccc, n)
+    return replace(state, epoch_lost=state.epoch_lost.at[drop].add(
+        jnp.where(valid, count, 0), mode="drop"))
+
+
+def quick_adapt(state: NSCCState, params: NSCCParams,
+                now: jax.Array) -> NSCCState:
+    """Once per RTT-epoch: if losses were seen, rescale cwnd to the
+    delivered fraction (Sec. 3.3.1 QA / SMaRTT)."""
+    epoch_len = jnp.int32(params.base_rtt * params.target_factor)
+    due = (now - state.epoch_tick) >= epoch_len
+    delivered = state.epoch_acked.astype(jnp.float32)
+    lost = state.epoch_lost.astype(jnp.float32)
+    frac = delivered / jnp.maximum(delivered + lost, 1.0)
+    lossy = due & (state.epoch_lost > 0)
+    new_cwnd = jnp.where(
+        lossy,
+        jnp.clip(state.cwnd * frac, params.qa_min_frac * params.max_cwnd,
+                 params.max_cwnd),
+        state.cwnd)
+    reset = due
+    return NSCCState(
+        cwnd=jnp.maximum(new_cwnd, params.min_cwnd),
+        epoch_acked=jnp.where(reset, 0, state.epoch_acked),
+        epoch_lost=jnp.where(reset, 0, state.epoch_lost),
+        epoch_tick=jnp.where(reset, now, state.epoch_tick),
+    )
+
+
+def apply_dfc_penalty(state: NSCCState, params: NSCCParams, ccc: jax.Array,
+                      penalty: jax.Array, valid: jax.Array) -> NSCCState:
+    """Destination Flow Control for NSCC (Sec. 3.3.4): the receiver sends a
+    window *penalty* that scales the sender's congestion window."""
+    n = state.cwnd.shape[0]
+    drop = jnp.where(valid, ccc, n)
+    scale = jnp.clip(1.0 - penalty, 0.05, 1.0)
+    cwnd = state.cwnd.at[drop].mul(jnp.where(valid, scale, 1.0), mode="drop")
+    return replace(state, cwnd=jnp.clip(cwnd, params.min_cwnd, params.max_cwnd))

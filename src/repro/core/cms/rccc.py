@@ -1,0 +1,91 @@
+"""Receiver Credit-based Congestion Control (Sec. 3.3.2).
+
+Unlike NSCC, the sender does not interpret network signals: it spends
+credits granted by the *receiver*, which knows the exact number of
+incoming flows and divides its ingress capacity among them. This makes
+incast handling exact (each of F incoming flows gets 1/F of the line rate,
+Fig. 7 group 4) but is blind to in-network congestion and outcast — the
+scenarios that motivate running NSCC alongside (Sec. 3.3.3).
+
+Receiver side (`grant_credits`): once per tick, each destination splits its
+ingress line rate `rate * dfc` evenly across its currently-active incoming
+flows. Demand-aware weighting is supported via `demand` ("RCCC can also
+consider the sources' demands").
+
+Sender side: a flow may inject a packet when `balance >= 1`; injection
+deducts one credit. Optimistic start: balances begin at the BDP so flows
+start at full rate, exactly as the spec prescribes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class RCCCState:
+    """SoA over F flows.
+
+    balance: [F] float32 — credits available to spend at the sender (pkts)
+    seen:    [F] bool    — receiver has observed this flow (first packet
+                            arrived); credits flow only afterwards
+    """
+
+    balance: jax.Array
+    seen: jax.Array
+
+    @staticmethod
+    def create(f: int, initial_credit: float) -> "RCCCState":
+        return RCCCState(
+            balance=jnp.full((f,), initial_credit, jnp.float32),
+            seen=jnp.zeros((f,), jnp.bool_),
+        )
+
+
+def grant_credits(state: RCCCState, flow_dst: jax.Array, active: jax.Array,
+                  num_hosts: int, rate: float = 1.0,
+                  dfc: jax.Array | None = None,
+                  demand: jax.Array | None = None) -> RCCCState:
+    """One receiver scheduling round.
+
+    flow_dst: [F] int32 destination host of each flow
+    active:   [F] bool  flow still has data to move and has been seen
+    dfc:      [H] float32 per-destination rate scale (Destination Flow
+              Control, Sec. 3.3.4) — e.g. 0.5 when destination memory can
+              only absorb half rate
+    demand:   [F] float32 optional source demand weights
+
+    Each destination h grants `rate * dfc[h]` credits split across its
+    active incoming flows proportionally to demand (default: evenly).
+    """
+    act = active & state.seen
+    w = jnp.where(act, 1.0, 0.0) if demand is None else jnp.where(act, demand, 0.0)
+    # sum of weights per destination
+    per_dst = jnp.zeros((num_hosts,), jnp.float32).at[flow_dst].add(w)
+    share = jnp.where(per_dst[flow_dst] > 0, w / jnp.maximum(per_dst[flow_dst], 1e-9), 0.0)
+    scale = rate if dfc is None else rate * dfc[flow_dst]
+    grant = share * scale
+    return replace(state, balance=state.balance + grant)
+
+
+def mark_seen(state: RCCCState, flow: jax.Array, valid: jax.Array) -> RCCCState:
+    """Receiver observed first packet(s) of flow(s): credits start flowing."""
+    f = state.seen.shape[0]
+    drop = jnp.where(valid, flow, f)
+    return replace(state, seen=state.seen.at[drop].set(True, mode="drop"))
+
+
+def can_send(state: RCCCState) -> jax.Array:
+    """[F] bool: flow holds at least one packet credit."""
+    return state.balance >= 1.0
+
+
+def spend(state: RCCCState, flow: jax.Array, valid: jax.Array) -> RCCCState:
+    """Deduct one credit per injected packet."""
+    f = state.balance.shape[0]
+    drop = jnp.where(valid, flow, f)
+    return replace(state, balance=state.balance.at[drop].add(
+        jnp.where(valid, -1.0, 0.0), mode="drop"))

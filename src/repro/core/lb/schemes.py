@@ -1,0 +1,188 @@
+"""Entropy-Value load balancing schemes (Sec. 2.1, 3.3.5).
+
+UE cannot pick paths directly — only Entropy Values, which the fabric
+hashes to paths. Guarantees assumed: same EV => same path (failure-free);
+different EV *likely* different path. Schemes implemented:
+
+* STATIC    — one EV for the whole flow (ROD-like single path; the
+              polarization-prone baseline, Sec. 2.1).
+* OBLIVIOUS — fresh pseudo-random EV per packet ("oblivious spraying");
+              recommended together with a fast loss detector.
+* RR_SLOTS  — round-robin over k EV slots (ev_slot = psn % k); the layout
+              assumed by the EV-based loss detection scheme (Sec. 3.2.4:
+              "PSNs expected at each slot are i, i+k, i+2k, ...").
+* REPS      — Recycled Entropies Packet Spraying [5]: EVs returned by
+              (non-congested) ACKs are pushed onto a recycle ring and
+              reused first; fresh random EVs are drawn only when the ring
+              is empty. Self-clocking: path capacities are discovered by
+              the rate their EVs come back.
+* EVBITMAP  — the spec's other example: a set of K EVs with a congestion
+              bitmap; rotate through EVs, skip-and-clear marked ones [27].
+
+All state is SoA over flows; selection for every flow happens in one
+vectorized call per tick.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EV_SPACE
+
+
+class LBScheme(enum.IntEnum):
+    STATIC = 0
+    OBLIVIOUS = 1
+    RR_SLOTS = 2
+    REPS = 3
+    EVBITMAP = 4
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """xxhash-style avalanche finalizer (uint32 -> uint32)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class LBState:
+    """Unified LB state; schemes use the fields they need. SoA over F flows.
+
+    rr_ptr:    [F] int32  — round-robin pointer (RR_SLOTS / EVBITMAP)
+    reps_ring: [F, K] int32 — recycled EVs (REPS); -1 = empty slot
+    reps_head: [F] int32  — pop position
+    reps_size: [F] int32  — entries available
+    ev_set:    [F, K] int32 — candidate EV per slot (RR_SLOTS / EVBITMAP)
+    cong_bits: [F, K] bool  — EVBITMAP congestion marks
+    salt:      [F] uint32 — per-flow PRNG salt (OBLIVIOUS / fresh draws)
+    """
+
+    rr_ptr: jax.Array
+    reps_ring: jax.Array
+    reps_head: jax.Array
+    reps_size: jax.Array
+    ev_set: jax.Array
+    cong_bits: jax.Array
+    salt: jax.Array
+
+    @staticmethod
+    def create(f: int, k: int, seed: int = 0x5EED) -> "LBState":
+        flows = jnp.arange(f, dtype=jnp.uint32)
+        # per-flow, per-slot initial EVs: well-mixed distinct values
+        slot_ev = _mix32(flows[:, None] * jnp.uint32(977) +
+                         jnp.arange(k, dtype=jnp.uint32)[None, :] +
+                         jnp.uint32(seed)) % EV_SPACE
+        return LBState(
+            rr_ptr=jnp.zeros((f,), jnp.int32),
+            reps_ring=jnp.full((f, k), -1, jnp.int32),
+            reps_head=jnp.zeros((f,), jnp.int32),
+            reps_size=jnp.zeros((f,), jnp.int32),
+            ev_set=slot_ev.astype(jnp.int32),
+            cong_bits=jnp.zeros((f, k), jnp.bool_),
+            salt=_mix32(flows + jnp.uint32(seed * 2654435761 & 0xFFFFFFFF)),
+        )
+
+
+def select_ev(state: LBState, scheme: LBScheme, psn: jax.Array,
+              tick: jax.Array) -> tuple[LBState, jax.Array]:
+    """Choose the EV for the next packet of every flow.
+
+    psn: [F] uint32 — the PSN about to be stamped (drives RR slots).
+    Returns (state', ev [F] int32). Callers only use lanes for flows that
+    actually inject this tick; state advance for non-injecting flows is
+    prevented by the caller passing back the old state lanes (see
+    `commit_selection`).
+    """
+    F, K = state.ev_set.shape
+    flows = jnp.arange(F, dtype=jnp.uint32)
+
+    if scheme == LBScheme.STATIC:
+        return state, state.ev_set[:, 0]
+
+    if scheme == LBScheme.OBLIVIOUS:
+        ev = (_mix32(state.salt ^ _mix32(psn.astype(jnp.uint32) +
+                                         (tick.astype(jnp.uint32) << 8)))
+              % EV_SPACE).astype(jnp.int32)
+        return state, ev
+
+    if scheme == LBScheme.RR_SLOTS:
+        slot = (psn.astype(jnp.int32)) % K
+        return state, state.ev_set[jnp.arange(F), slot]
+
+    if scheme == LBScheme.REPS:
+        has = state.reps_size > 0
+        pos = state.reps_head % K
+        recycled = state.reps_ring[jnp.arange(F), pos]
+        fresh = (_mix32(state.salt ^ _mix32(psn.astype(jnp.uint32) *
+                                            jnp.uint32(2246822519)))
+                 % EV_SPACE).astype(jnp.int32)
+        ev = jnp.where(has, recycled, fresh)
+        return replace(
+            state,
+            reps_head=jnp.where(has, (state.reps_head + 1) % K, state.reps_head),
+            reps_size=jnp.where(has, state.reps_size - 1, state.reps_size),
+        ), ev
+
+    # EVBITMAP: advance the pointer, skipping (and clearing) congested slots.
+    # One skip per selection (the spec's skip-then-unset round semantics).
+    ptr = state.rr_ptr % K
+    congested = state.cong_bits[jnp.arange(F), ptr]
+    ptr2 = (ptr + 1) % K
+    use = jnp.where(congested, ptr2, ptr)
+    ev = state.ev_set[jnp.arange(F), use]
+    # clear the skipped bit so it is retried next round
+    cong = state.cong_bits.at[jnp.arange(F), ptr].set(
+        jnp.where(congested, False, state.cong_bits[jnp.arange(F), ptr]))
+    return replace(state, rr_ptr=(use + 1) % K, cong_bits=cong), ev
+
+
+def commit_selection(old: LBState, new: LBState, injected: jax.Array) -> LBState:
+    """Keep `new` lanes only where a packet was actually injected."""
+    pick = lambda a, b: jnp.where(
+        injected.reshape((-1,) + (1,) * (a.ndim - 1)), b, a)
+    return LBState(*(pick(a, b) for a, b in
+                     zip(jax.tree_util.tree_leaves(old),
+                         jax.tree_util.tree_leaves(new))))
+
+
+def on_ack(state: LBState, scheme: LBScheme, flow: jax.Array, ev: jax.Array,
+           congested: jax.Array, valid: jax.Array) -> LBState:
+    """Feed ACK/NACK path feedback back into the scheme.
+
+    flow, ev: [B]; congested: [B] bool (ECN-CE marked ACK or trim NACK);
+    valid: [B] lane mask.
+    """
+    F, K = state.ev_set.shape
+    if scheme == LBScheme.REPS:
+        # Recycle EVs that came back clean; congested EVs are dropped from
+        # circulation (their slot refills with a fresh random draw later).
+        ok = valid & ~congested
+        drop_f = jnp.where(ok, flow, F)
+        pos = (state.reps_head + state.reps_size) % K
+        # room check: ring holds at most K
+        room = state.reps_size[jnp.where(ok, flow, 0)] < K
+        drop_f = jnp.where(ok & room, flow, F)
+        ring = state.reps_ring.at[drop_f, pos[jnp.where(ok, flow, 0)]].set(
+            ev, mode="drop")
+        size = state.reps_size.at[drop_f].add(1, mode="drop")
+        return replace(state, reps_ring=ring, reps_size=size)
+    if scheme == LBScheme.EVBITMAP:
+        # mark the slot whose EV saw congestion
+        hit = (state.ev_set[jnp.where(valid, flow, 0)] ==
+               ev[:, None]) & congested[:, None] & valid[:, None]
+        # scatter OR across possibly-duplicate flows
+        upd = jnp.zeros((F, K), jnp.bool_).at[
+            jnp.where(valid, flow, F)[:, None].repeat(K, 1),
+            jnp.arange(K)[None, :].repeat(flow.shape[0], 0)].max(
+            hit, mode="drop")
+        return replace(state, cong_bits=state.cong_bits | upd)
+    return state

@@ -1,0 +1,143 @@
+"""Link-layer options: Link-Level Retry and Credit-Based Flow Control
+(Sec. 3.5).
+
+LLR: go-back-N retransmission confined to one link. Justified at this
+layer (unlike end-to-end, which UET redesigned away from go-back-N)
+because the link RTT is ~1 us, bounded, and congestion plays no role —
+only PHY corruption drops. Modeled as a replay-buffer state machine whose
+invariants (no loss escapes the link; buffer bounded by link BDP) are
+tested in tests/test_link_tss.py.
+
+CBFC: 20-bit cyclic credit counters at sender and receiver per virtual
+channel, periodically synchronized. Compared against PFC headroom:
+PFC needs RTT+MTU headroom per (port, priority) to be lossless; CBFC
+needs only the actual receive buffer it advertises (Sec. 3.5.2 claims
+(1)-(4); `pfc_headroom_bytes` / `cbfc_buffer_bytes` quantify claim (1)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+CTR_BITS = 20
+CTR_MOD = 1 << CTR_BITS
+
+
+# ---------------------------------------------------------------------------
+# LLR — go-back-N on one link
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LLRLink:
+    """One LLR-enabled link direction (host-side model, event-driven)."""
+
+    replay_capacity: int = 64
+    timeout: int = 8               # ~link RTT in frame times
+    # state
+    next_seq: int = 0              # next new frame sequence
+    send_base: int = 0             # oldest unacked
+    now: int = 0
+    last_progress: int = 0
+    retransmissions: int = 0
+
+    def in_flight(self) -> int:
+        return self.next_seq - self.send_base
+
+    def can_send(self) -> bool:
+        return self.in_flight() < self.replay_capacity
+
+    def send(self) -> int:
+        assert self.can_send()
+        seq = self.next_seq
+        self.next_seq += 1
+        return seq
+
+    def on_ack(self, seq: int):
+        """Cumulative ACK frees the replay buffer up to seq."""
+        if seq >= self.send_base:
+            self.send_base = seq + 1
+            self.last_progress = self.now
+
+    def on_nack(self, seq: int) -> list[int]:
+        """Receiver saw a gap: go-back-N from `seq`."""
+        self.retransmissions += self.next_seq - seq
+        resend = list(range(seq, self.next_seq))
+        return resend
+
+    def tick(self) -> list[int]:
+        """Timeout guard for tail loss: resend everything outstanding."""
+        self.now += 1
+        if (self.in_flight() > 0
+                and self.now - self.last_progress > self.timeout):
+            self.last_progress = self.now
+            self.retransmissions += self.in_flight()
+            return list(range(self.send_base, self.next_seq))
+        return []
+
+
+def llr_deliver(frames_sent: list[int], corrupt: set[int],
+                expected: int = 0) -> list[int]:
+    """Receiver view: frames arrive in order; corrupted ones are dropped
+    and NACK'd by the first out-of-order arrival. `expected` carries the
+    receiver's next-in-order sequence across retransmission rounds."""
+    delivered = []
+    for f in frames_sent:
+        if f in corrupt:
+            continue
+        if f == expected:
+            delivered.append(f)
+            expected += 1
+    return delivered
+
+
+# ---------------------------------------------------------------------------
+# CBFC — credit counters per virtual channel
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CBFCState:
+    """20-bit cyclic counters (Sec. 3.5.2): sender tracks consumed,
+    receiver tracks freed; available = buffer - (consumed - freed)."""
+
+    buffer_bytes: int
+    consumed: int = 0   # sender-side, mod 2^20 (units: cells/bytes)
+    freed: int = 0      # receiver-side, mod 2^20
+
+    def available(self) -> int:
+        return self.buffer_bytes - ((self.consumed - self.freed) % CTR_MOD)
+
+    def can_send(self, size: int) -> bool:
+        return self.available() >= size
+
+    def send(self, size: int) -> "CBFCState":
+        assert self.can_send(size), "CBFC never oversends"
+        return replace(self, consumed=(self.consumed + size) % CTR_MOD)
+
+    def drain(self, size: int) -> "CBFCState":
+        """Receiver forwards a packet out of its buffer -> credit update
+        message back to the sender."""
+        return replace(self, freed=(self.freed + size) % CTR_MOD)
+
+
+def pfc_headroom_bytes(link_gbps: float, cable_m: float, mtu: int,
+                       priorities: int = 8) -> float:
+    """Lossless PFC headroom per port: in-flight bytes during the pause
+    round trip (2x propagation + 2x MTU serialization + response time),
+    per priority class."""
+    c = 2e8  # m/s in fiber
+    rtt_s = 2 * cable_m / c
+    inflight = link_gbps * 1e9 / 8 * rtt_s
+    return priorities * (inflight + 2 * mtu)
+
+
+def cbfc_buffer_bytes(link_gbps: float, cable_m: float, mtu: int,
+                      active_vcs: int = 2) -> float:
+    """CBFC needs one link-BDP of credited buffer to keep the pipe full —
+    and only for the VCs actually in use (claims (1) and (4))."""
+    c = 2e8
+    rtt_s = 2 * cable_m / c
+    bdp = link_gbps * 1e9 / 8 * rtt_s
+    return active_vcs * (bdp + mtu)

@@ -1,0 +1,169 @@
+"""SES message matching (Sec. 3.1.2).
+
+Hardware message matching uses a packet-carried initiator ID (32b) and a
+64-bit matching key. Profiles differ:
+
+* HPC      — in-order *wildcard* matching (MPI semantics): the lowest-index
+             posted entry whose unmasked bits equal the message key wins.
+* AI FULL  — *exact* matching, unordered: any entry with full 64b+initiator
+             equality may match (CAM-style); we return the lowest index for
+             determinism, which a CAM is free to do.
+* AI BASE  — no transport-layer matching (handled by the libfabric provider).
+
+64-bit keys are carried as (hi, lo) uint32 pairs — the simulator runs in
+JAX's default 32-bit mode, and two 32-bit lanes is exactly how a hardware
+matcher would slice the key anyway.
+
+The receive queue is a fixed-capacity structure-of-arrays; matching a batch
+of arriving messages is one vectorized comparison — the shape of a hardware
+matcher. Unexpected messages (no posted entry) return -1 and the caller
+chooses the paper's options: discard + "buffer not ready", buffer headers,
+or buffer partial payload (Sec. 3.1.2-3.1.3).
+
+The message-id trick for in-order RUD matching (Sec. 3.2.1: the CCL places
+a sequence number in the match bits so an unordered wire still fills buffers
+in order) is `encode_match_key` / tested in tests/test_matching.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Profile
+
+ANY_INITIATOR = 0xFFFFFFFF
+
+# 64-bit key layout: [comm:16 | tag:24 | seq:24]
+#   hi word = [comm:16 | tag_hi:16], lo word = [tag_lo:8 | seq:24]
+_COMM_BITS, _TAG_BITS, _SEQ_BITS = 16, 24, 24
+
+
+def encode_match_key(comm_id: int, tag: int, msg_seq: int):
+    """Pack (communicator, user tag, message seq) into the 64b match key,
+    returned as (hi, lo) uint32. Placing a per-(src,dst) message sequence
+    number in the low bits is the paper's recipe for in-order message
+    matching over unordered RUD (Sec. 3.2.1)."""
+    comm = jnp.uint32(comm_id) & jnp.uint32(0xFFFF)
+    tag = jnp.uint32(tag) & jnp.uint32(0xFFFFFF)
+    seq = jnp.uint32(msg_seq) & jnp.uint32(0xFFFFFF)
+    hi = (comm << jnp.uint32(16)) | (tag >> jnp.uint32(8))
+    lo = ((tag & jnp.uint32(0xFF)) << jnp.uint32(24)) | seq
+    return hi, lo
+
+
+def wildcard_mask(match_comm: bool = True, match_tag: bool = True,
+                  match_seq: bool = True):
+    """Wildcard mask (hi, lo) for `encode_match_key` layout (HPC profile).
+    A field set to False is wildcarded (its bits are ignored)."""
+    hi = jnp.uint32(0)
+    lo = jnp.uint32(0)
+    if not match_comm:
+        hi |= jnp.uint32(0xFFFF) << jnp.uint32(16)
+    if not match_tag:
+        hi |= jnp.uint32(0xFFFF)
+        lo |= jnp.uint32(0xFF) << jnp.uint32(24)
+    if not match_seq:
+        lo |= jnp.uint32(0xFFFFFF)
+    return hi, lo
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class RecvQueue:
+    """Posted-receive table of one receive context (RI). All [E] arrays.
+
+    tag_hi/tag_lo:   uint32 match key words of posted entries
+    mask_hi/mask_lo: uint32 wildcard masks — a 1 bit means "ignore this bit"
+    initiators:      uint32 expected initiator, ANY_INITIATOR = wildcard
+    seq:             int32 posting order (for HPC in-order semantics)
+    valid:           bool
+    buffer_id:       int32 destination buffer handle
+    """
+
+    tag_hi: jax.Array
+    tag_lo: jax.Array
+    mask_hi: jax.Array
+    mask_lo: jax.Array
+    initiators: jax.Array
+    seq: jax.Array
+    valid: jax.Array
+    buffer_id: jax.Array
+
+    @staticmethod
+    def create(capacity: int) -> "RecvQueue":
+        u = jnp.zeros((capacity,), jnp.uint32)
+        return RecvQueue(
+            tag_hi=u, tag_lo=u, mask_hi=u, mask_lo=u, initiators=u,
+            seq=jnp.full((capacity,), -1, jnp.int32),
+            valid=jnp.zeros((capacity,), jnp.bool_),
+            buffer_id=jnp.full((capacity,), -1, jnp.int32),
+        )
+
+
+def post_receive(q: RecvQueue, slot, key_hi, key_lo, mask_hi, mask_lo,
+                 initiator, seq, buffer_id) -> RecvQueue:
+    """Post one receive into table slot `slot`."""
+    return RecvQueue(
+        tag_hi=q.tag_hi.at[slot].set(jnp.uint32(key_hi)),
+        tag_lo=q.tag_lo.at[slot].set(jnp.uint32(key_lo)),
+        mask_hi=q.mask_hi.at[slot].set(jnp.uint32(mask_hi)),
+        mask_lo=q.mask_lo.at[slot].set(jnp.uint32(mask_lo)),
+        initiators=q.initiators.at[slot].set(jnp.uint32(initiator)),
+        seq=q.seq.at[slot].set(jnp.int32(seq)),
+        valid=q.valid.at[slot].set(True),
+        buffer_id=q.buffer_id.at[slot].set(jnp.int32(buffer_id)),
+    )
+
+
+def _entry_hits(q: RecvQueue, key_hi, key_lo, initiator) -> jax.Array:
+    """[B, E] bool: does entry e match message b (ignoring order)."""
+    khi = key_hi.astype(jnp.uint32)[:, None]
+    klo = key_lo.astype(jnp.uint32)[:, None]
+    init = initiator.astype(jnp.uint32)[:, None]
+    hi_eq = (q.tag_hi[None, :] | q.mask_hi[None, :]) == (khi | q.mask_hi[None, :])
+    lo_eq = (q.tag_lo[None, :] | q.mask_lo[None, :]) == (klo | q.mask_lo[None, :])
+    init_eq = (q.initiators[None, :] == init) | (
+        q.initiators[None, :] == jnp.uint32(ANY_INITIATOR))
+    return hi_eq & lo_eq & init_eq & q.valid[None, :]
+
+
+@partial(jax.jit, static_argnames=("profile",))
+def match(q: RecvQueue, key_hi: jax.Array, key_lo: jax.Array,
+          initiator: jax.Array,
+          profile: Profile = Profile.AI_FULL) -> tuple[jax.Array, jax.Array]:
+    """Match a batch of arriving messages against the posted-receive table.
+
+    NOTE: entries are matched independently (a batch does not consume
+    entries as it goes); the caller consumes matched slots between batches.
+
+    Returns (slot [B] int32, matched [B] bool); slot == -1 if unexpected.
+    """
+    hits = _entry_hits(q, key_hi, key_lo, initiator)
+    if profile == Profile.HPC:
+        # In-order wildcard matching: lowest posting-seq valid hit wins.
+        BIG = jnp.int32(2 ** 30)
+        order = jnp.where(hits, q.seq[None, :], BIG)
+        best = jnp.argmin(order, axis=1)
+        matched = jnp.take_along_axis(hits, best[:, None], axis=1)[:, 0]
+    elif profile == Profile.AI_FULL:
+        # Exact matching: wildcard masks are illegal — treat masked entries
+        # as non-matching (the spec constrains AI Full to exact match).
+        exact = hits & (q.mask_hi[None, :] == 0) & (q.mask_lo[None, :] == 0)
+        best = jnp.argmax(exact, axis=1)
+        matched = exact.any(axis=1)
+    else:  # AI_BASE: no transport-layer matching
+        best = jnp.zeros(key_hi.shape[0], jnp.int32)
+        matched = jnp.zeros(key_hi.shape[0], jnp.bool_)
+    slot = jnp.where(matched, best.astype(jnp.int32), -1)
+    return slot, matched
+
+
+def consume(q: RecvQueue, slot: jax.Array, matched: jax.Array) -> RecvQueue:
+    """Invalidate a matched entry (one message per call)."""
+    safe = jnp.where(matched, slot, 0)
+    valid = q.valid.at[safe].set(jnp.where(matched, False, q.valid[safe]))
+    return RecvQueue(q.tag_hi, q.tag_lo, q.mask_hi, q.mask_lo,
+                     q.initiators, q.seq, valid, q.buffer_id)

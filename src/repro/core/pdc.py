@@ -1,0 +1,179 @@
+"""Ephemeral Packet Delivery Contexts — dynamic creation state machine
+(Sec. 3.2.3, Fig. 6).
+
+The defining property: a PDC is established *by the first arriving packet*
+with zero additional latency — the source keeps sending at full rate while
+still in SYN state, and the target-assigned PDCID is echoed back in ACKs.
+Closing drains via QUIESCE -> ACK_WAIT -> CLOSED, initiated by the source
+when idle (optionally nudged by the target via control packet/ACK flags).
+
+Implemented as a dense transition table over int32 codes so a whole pool of
+PDCs steps in one gather — the hardware-pipeline shape. The initiator and
+target machines share the state enum (`PDCState`) but use different tables.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import PDCState
+
+
+class InitEvent(enum.IntEnum):
+    """Initiator-side events."""
+
+    NONE = 0
+    SEND_FIRST = 1     # SES asks to send, no PDC yet -> allocate, go SYN
+    ACK_PDCID = 2      # first ACK carrying the target-assigned PDCID
+    CLOSE_REQ = 3      # idle close decision (or target-requested via flags)
+    DRAINED = 4        # all started messages fully sent
+    ALL_ACKED = 5      # every outstanding reply arrived -> send final close
+    CLOSE_ACK = 6      # final ACK for the close command
+
+
+class TgtEvent(enum.IntEnum):
+    """Target-side events."""
+
+    NONE = 0
+    RX_SYN = 1         # first packet w/ SYN -> create PDC, assign PDCID
+    RX_NOSYN = 2       # first packet without SYN -> initiator saw our PDCID
+    RX_CLOSE = 3       # final close command
+    SECURE_PENDING = 4  # TSS secure-PSN query (Sec. 3.4.2) -> PENDING
+    SECURE_OK = 5      # accepted starting PSN
+
+
+_S = PDCState
+_NUM_STATES = len(_S)
+
+
+def _table(rules: dict[tuple[int, int], int], num_events: int) -> np.ndarray:
+    t = np.tile(np.arange(_NUM_STATES, dtype=np.int32)[:, None],
+                (1, num_events))  # default: self-loop (event ignored)
+    for (s, e), ns in rules.items():
+        t[s, e] = ns
+    return t
+
+
+# Initiator transitions (Fig. 6 left). Unlisted (state, event) pairs hold.
+_INIT_TABLE = _table({
+    (_S.CLOSED, InitEvent.SEND_FIRST): _S.SYN,
+    (_S.SYN, InitEvent.ACK_PDCID): _S.ESTABLISHED,
+    # a close can begin from SYN too if the message drains before the ACK
+    (_S.SYN, InitEvent.CLOSE_REQ): _S.QUIESCE,
+    (_S.ESTABLISHED, InitEvent.CLOSE_REQ): _S.QUIESCE,
+    (_S.QUIESCE, InitEvent.DRAINED): _S.ACK_WAIT,
+    (_S.ACK_WAIT, InitEvent.CLOSE_ACK): _S.CLOSED,
+}, len(InitEvent))
+
+# Target transitions (Fig. 6 right).
+_TGT_TABLE = _table({
+    (_S.CLOSED, TgtEvent.RX_SYN): _S.SYN,
+    (_S.CLOSED, TgtEvent.SECURE_PENDING): _S.PENDING,
+    (_S.PENDING, TgtEvent.SECURE_OK): _S.SYN,
+    (_S.SYN, TgtEvent.RX_NOSYN): _S.ESTABLISHED,
+    (_S.SYN, TgtEvent.RX_CLOSE): _S.CLOSED,
+    (_S.ESTABLISHED, TgtEvent.RX_CLOSE): _S.CLOSED,
+}, len(TgtEvent))
+
+INIT_TABLE = jnp.asarray(_INIT_TABLE)
+TGT_TABLE = jnp.asarray(_TGT_TABLE)
+
+
+def step_initiator(state: jax.Array, event: jax.Array) -> jax.Array:
+    """Vectorized initiator transition: next = T[state, event]."""
+    return INIT_TABLE[state, event]
+
+
+def step_target(state: jax.Array, event: jax.Array) -> jax.Array:
+    return TGT_TABLE[state, event]
+
+
+def may_send_data(state: jax.Array) -> jax.Array:
+    """Full-rate sending is allowed in SYN (the headline feature: "the
+    source has been sending at full rate during PDC establishment!"),
+    ESTABLISHED, and QUIESCE (started messages drain)."""
+    return (state == _S.SYN) | (state == _S.ESTABLISHED) | (state == _S.QUIESCE)
+
+
+def may_accept_new_message(state: jax.Array) -> jax.Array:
+    """QUIESCE refuses new messages; CLOSED implicitly allocates."""
+    return (state == _S.CLOSED) | (state == _S.SYN) | (state == _S.ESTABLISHED)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PDCPool:
+    """SoA pool of initiator-side PDCs.
+
+    state:        [N] int32 PDCState
+    peer:         [N] int32 destination FEP (-1 = free slot)
+    local_id:     [N] int32 our PDCID (== slot index here)
+    remote_id:    [N] int32 target-assigned PDCID (-1 until first ACK)
+    next_psn:     [N] uint32 next PSN to stamp (starts random per Fig. 6)
+    start_psn:    [N] uint32 first PSN of this PDC (for close bookkeeping)
+    unacked:      [N] int32 packets outstanding
+    active_msgs:  [N] int32 messages started and not finished
+    tx_packets:   [N] int32 total request packets sent (TSS 2^31 close rule)
+    """
+
+    state: jax.Array
+    peer: jax.Array
+    local_id: jax.Array
+    remote_id: jax.Array
+    next_psn: jax.Array
+    start_psn: jax.Array
+    unacked: jax.Array
+    active_msgs: jax.Array
+    tx_packets: jax.Array
+
+    @staticmethod
+    def create(n: int) -> "PDCPool":
+        z = jnp.zeros((n,), jnp.int32)
+        return PDCPool(
+            state=jnp.full((n,), int(_S.CLOSED), jnp.int32),
+            peer=jnp.full((n,), -1, jnp.int32),
+            local_id=jnp.arange(n, dtype=jnp.int32),
+            remote_id=jnp.full((n,), -1, jnp.int32),
+            next_psn=jnp.zeros((n,), jnp.uint32),
+            start_psn=jnp.zeros((n,), jnp.uint32),
+            unacked=z, active_msgs=z, tx_packets=z,
+        )
+
+
+def open_pdc(pool: PDCPool, slot: jax.Array, peer: jax.Array,
+             start_psn: jax.Array) -> PDCPool:
+    """SES first-send: allocate slot, go SYN, PSN starts at a random value
+    (Fig. 6 starts at PSN 4)."""
+    return PDCPool(
+        state=pool.state.at[slot].set(int(_S.SYN)),
+        peer=pool.peer.at[slot].set(peer),
+        local_id=pool.local_id,
+        remote_id=pool.remote_id.at[slot].set(-1),
+        next_psn=pool.next_psn.at[slot].set(start_psn.astype(jnp.uint32)),
+        start_psn=pool.start_psn.at[slot].set(start_psn.astype(jnp.uint32)),
+        unacked=pool.unacked.at[slot].set(0),
+        active_msgs=pool.active_msgs.at[slot].set(1),
+        tx_packets=pool.tx_packets.at[slot].set(0),
+    )
+
+
+def on_ack(pool: PDCPool, slot: jax.Array, remote_id: jax.Array,
+           n_acked: jax.Array) -> PDCPool:
+    """Process an ACK: learn the remote PDCID (SYN->ESTABLISHED), retire
+    outstanding packets."""
+    got_id = remote_id >= 0
+    ev = jnp.where(got_id & (pool.state[slot] == _S.SYN),
+                   int(InitEvent.ACK_PDCID), int(InitEvent.NONE))
+    return PDCPool(
+        state=pool.state.at[slot].set(step_initiator(pool.state[slot], ev)),
+        peer=pool.peer, local_id=pool.local_id,
+        remote_id=pool.remote_id.at[slot].set(
+            jnp.where(got_id, remote_id, pool.remote_id[slot])),
+        next_psn=pool.next_psn, start_psn=pool.start_psn,
+        unacked=pool.unacked.at[slot].add(-n_acked),
+        active_msgs=pool.active_msgs, tx_packets=pool.tx_packets,
+    )

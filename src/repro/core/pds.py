@@ -1,0 +1,203 @@
+"""PDS packet tracking: PSN space, SACK bitmaps, CACK, MP_RANGE
+(Sec. 3.2.5).
+
+The target of an unordered (RUD/RUDI) flow tracks arrived packets in a ring
+bitmap anchored at the cumulative-ACK point:
+
+    bit i of the ring  <=>  PSN (base + i) has arrived
+
+* `record_rx` sets bits for a batch of arriving PSNs, enforcing MP_RANGE —
+  packets beyond the advertised tracking range are NOT accepted (this is
+  the receiver-resource protection; the source must back off).
+* `advance_cack` counts the contiguous prefix of received PSNs, advances
+  `base`, and shifts the ring — the hot loop a hardware PDS runs per ACK
+  coalescing interval. (Pallas kernel: repro/kernels/sack_bitmap.py.)
+* `sack_view` extracts the 64-bit SACK window + CACK PSN carried in ACK
+  packets.
+
+Duplicate arrivals (bit already set) are reported so RUD can drop them;
+RUDI by definition skips dedup (idempotent ops) and the tracker is not
+consulted for delivery there, only for ACK generation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32  # ring bitmap word width
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PSNTracker:
+    """Per-PDC receive tracking state (SoA over N PDCs).
+
+    base:   [N] uint32 — lowest not-cumulatively-acked PSN
+    ring:   [N, W] uint32 — ring bitmap covering mp_range = W*32 PSNs
+    rx_ok:  [N] uint32 — accepted packets (stats)
+    dup:    [N] uint32 — duplicate arrivals (stats)
+    oor:    [N] uint32 — rejected: outside MP_RANGE (stats)
+    """
+
+    base: jax.Array
+    ring: jax.Array
+    rx_ok: jax.Array
+    dup: jax.Array
+    oor: jax.Array
+
+    @staticmethod
+    def create(n: int, mp_range: int) -> "PSNTracker":
+        assert mp_range % WORD == 0
+        return PSNTracker(
+            base=jnp.zeros((n,), jnp.uint32),
+            ring=jnp.zeros((n, mp_range // WORD), jnp.uint32),
+            rx_ok=jnp.zeros((n,), jnp.uint32),
+            dup=jnp.zeros((n,), jnp.uint32),
+            oor=jnp.zeros((n,), jnp.uint32),
+        )
+
+    @property
+    def mp_range(self) -> int:
+        return self.ring.shape[1] * WORD
+
+
+def record_rx(t: PSNTracker, pdc: jax.Array, psn: jax.Array,
+              valid: jax.Array) -> tuple[PSNTracker, jax.Array]:
+    """Record a batch of arriving packets.
+
+    pdc, psn: int32/uint32 [B]; valid: bool [B] (False = no packet in lane).
+    Returns (tracker', accepted [B] bool) — accepted means in-range and not
+    a duplicate.
+    """
+    mp = t.mp_range
+    off = (psn.astype(jnp.uint32) - t.base[pdc]).astype(jnp.uint32)
+    in_range = (off < mp) & valid
+    word = (off // WORD).astype(jnp.int32)
+    bitpos = (off % WORD).astype(jnp.int32)
+    bit = jnp.uint32(1) << bitpos.astype(jnp.uint32)
+    safe_pdc = jnp.where(valid, pdc, 0)
+    safe_word = jnp.where(in_range, word, 0)
+    already = (t.ring[safe_pdc, safe_word] & bit) != 0
+    fresh = in_range & ~already
+
+    # OR-scatter with potentially duplicate (pdc, word) indices: scatter into
+    # a boolean bit plane (set(True) is idempotent under duplicates), then
+    # pack the plane back into uint32 words and OR onto the ring. Invalid
+    # lanes are routed out of bounds and dropped.
+    N, W = t.ring.shape
+    plane = jnp.zeros((N, W, WORD), jnp.bool_)
+    drop_pdc = jnp.where(in_range, safe_pdc, N)  # OOB => dropped
+    plane = plane.at[drop_pdc, safe_word, bitpos].set(True, mode="drop")
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    packed = (plane.astype(jnp.uint32) * weights[None, None, :]).sum(
+        axis=-1, dtype=jnp.uint32)
+    ring = t.ring | packed
+    one = jnp.uint32(1)
+    return PSNTracker(
+        base=t.base,
+        ring=ring,
+        rx_ok=t.rx_ok.at[safe_pdc].add(jnp.where(fresh, one, 0)),
+        dup=t.dup.at[safe_pdc].add(jnp.where(in_range & already, one, 0)),
+        oor=t.oor.at[safe_pdc].add(jnp.where(valid & ~in_range, one, 0)),
+    ), fresh
+
+
+def trailing_ones(ring: jax.Array) -> jax.Array:
+    """Per-row count of contiguous set bits from bit 0 of word 0.
+
+    ring: [N, W] uint32 -> [N] int32 in [0, W*32].
+    """
+    full = ring == jnp.uint32(0xFFFFFFFF)
+    # trailing ones within each word = trailing zeros of ~word
+    inv = ~ring
+    # count trailing zeros via bit twiddling: ctz(x) = popcount((x & -x) - 1)
+    lsb = inv & (jnp.uint32(0) - inv)
+    ctz = _popcount32(lsb - jnp.uint32(1))
+    ctz = jnp.where(inv == 0, WORD, ctz)  # all-ones word
+    # prefix: words before the first non-full word contribute 32 each
+    first_partial = jnp.argmin(full.astype(jnp.int32), axis=1)
+    all_full = full.all(axis=1)
+    W = ring.shape[1]
+    n_full = jnp.where(all_full, W, first_partial)
+    partial_bits = jnp.where(
+        all_full, 0, ctz[jnp.arange(ring.shape[0]), jnp.clip(first_partial, 0, W - 1)])
+    return (n_full * WORD + partial_bits).astype(jnp.int32)
+
+
+def _popcount32(x: jax.Array) -> jax.Array:
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def shift_ring(ring: jax.Array, count: jax.Array) -> jax.Array:
+    """Logical right-shift each row of the ring bitmap by `count` bits
+    (cross-word funnel shift), vectorized over rows."""
+    N, W = ring.shape
+    words = count // WORD
+    bits = (count % WORD).astype(jnp.uint32)
+    idx = jnp.arange(W)[None, :] + words[:, None]
+    lo = jnp.where(idx < W, ring[jnp.arange(N)[:, None], jnp.clip(idx, 0, W - 1)],
+                   jnp.uint32(0))
+    hi = jnp.where(idx + 1 < W,
+                   ring[jnp.arange(N)[:, None], jnp.clip(idx + 1, 0, W - 1)],
+                   jnp.uint32(0))
+    b = bits[:, None]
+    # (lo >> b) | (hi << (32-b)), careful with b == 0 (shift by 32 is UB-ish)
+    shifted = jnp.where(b == 0, lo, (lo >> b) | (hi << (jnp.uint32(WORD) - b)))
+    return shifted
+
+
+def advance_cack(t: PSNTracker) -> tuple[PSNTracker, jax.Array]:
+    """Advance the cumulative-ACK point past every contiguous received PSN.
+
+    Returns (tracker', advanced [N] int32). Reference implementation; the
+    Pallas kernel in repro/kernels/sack_bitmap.py computes the same thing
+    blockwise in VMEM.
+    """
+    adv = trailing_ones(t.ring)
+    ring = shift_ring(t.ring, adv)
+    return PSNTracker(
+        base=t.base + adv.astype(jnp.uint32),
+        ring=ring, rx_ok=t.rx_ok, dup=t.dup, oor=t.oor,
+    ), adv
+
+
+def sack_view(t: PSNTracker) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(cack_psn, sack_lo, sack_hi) per PDC: the ACK-carried fields.
+
+    cack_psn acknowledges every PSN < base; (sack_hi:sack_lo) is the 64-bit
+    SACK bitmap immediately above base (Sec. 3.2.5). Two uint32 words since
+    the simulator runs without x64 mode — exactly the two words a wire
+    header would carry.
+    """
+    cack = t.base
+    lo = t.ring[:, 0]
+    hi = t.ring[:, 1] if t.ring.shape[1] > 1 else jnp.zeros_like(lo)
+    return cack, lo, hi
+
+
+def ooo_distance(t: PSNTracker) -> jax.Array:
+    """Out-of-order span: distance between the highest received PSN and the
+    CACK point — the OOO_COUNT loss-inference signal (Sec. 3.2.4)."""
+    W = t.ring.shape[1]
+    any_bit = t.ring != 0
+    # highest set bit position per row
+    word_idx = (W - 1) - jnp.argmax(any_bit[:, ::-1].astype(jnp.int32), axis=1)
+    has = any_bit.any(axis=1)
+    w = t.ring[jnp.arange(t.ring.shape[0]), jnp.clip(word_idx, 0, W - 1)]
+    # floor(log2(w)) via popcount trick
+    msb = 31 - _clz32(w)
+    return jnp.where(has, word_idx * WORD + msb + 1, 0).astype(jnp.int32)
+
+
+def _clz32(x: jax.Array) -> jax.Array:
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return (WORD - _popcount32(x)).astype(jnp.int32)

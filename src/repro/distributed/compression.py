@@ -1,0 +1,86 @@
+"""Gradient compression with error feedback (beyond-paper optimization).
+
+int8 block-quantized gradient exchange: before the data-parallel
+all-reduce, gradients are quantized to int8 with a per-block f32 scale
+(block = last dim tile of 256), and the quantization error is carried to
+the next step (error feedback keeps SGD/Adam convergence — Karimireddy et
+al.). This cuts the dominant DP all-reduce bytes 4x (bf16 -> int8+scales),
+directly shrinking the roofline's collective term for the all-reduce-bound
+architectures; the fabric-level view is fewer packets through the UET
+transport for the same step.
+
+Used by train_step when `compress_grads=True`; exact-allclose invariants
+are property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(-1, BLOCK), n
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g (any shape, float) -> (int8 blocks [N, BLOCK], scales [N] f32)."""
+    blocks, _ = _pad_to_block(g.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: Any, error: Any | None):
+    """Quantize a gradient pytree, adding carried error feedback.
+
+    Returns (quantized tree of (q, scale), new_error tree).
+    """
+    if error is None:
+        error = jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    def one(g, e):
+        corrected = g + e.astype(g.dtype)
+        q, s = quantize(corrected)
+        deq = dequantize(q, s, g.shape, g.dtype)
+        return (q, s), (corrected - deq).astype(g.dtype)
+
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    qs = [l[0] for l in leaves]
+    errs = [l[1] for l in leaves]
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def decompress_tree(qtree: Any, ref: Any) -> Any:
+    """Inverse of compress_tree against reference shapes/dtypes."""
+    return jax.tree_util.tree_map(
+        lambda qs, r: dequantize(qs[0], qs[1], r.shape, r.dtype),
+        qtree, ref,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def compressed_bytes(tree: Any) -> int:
+    """Wire bytes after compression (int8 payload + f32 scales)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = leaf.size
+        blocks = -(-n // BLOCK)
+        total += blocks * BLOCK + blocks * 4
+    return total

@@ -1,0 +1,322 @@
+"""Sharding rules: parameter, activation, optimizer and cache layouts.
+
+Production mesh: (data=16, model=16) per pod; multi-pod adds a leading
+"pod" axis folded into data parallelism. Strategy per tensor family:
+
+* 2-D parameter sharding (FSDP x TP): every weight is sharded over "data"
+  on one dim (gathered per layer inside the scan — ZeRO-3 style) and over
+  "model" on the TP dim (Megatron column/row split).
+* Residual activations: sequence-sharded over "model" for attention
+  architectures (Megatron sequence parallelism); batch over data; SSM and
+  hybrid archs keep S unsharded (their time scan is sequential) and use
+  channel-TP instead.
+* MoE experts: FFN dim tensor-parallel; tokens stay on their data shard
+  (the shard_map'd block in models/lm.py).
+* Decode KV caches: head_dim over "model" for decode_32k (keeps the ring
+  write local); sequence over "data" + head_dim over "model" for the
+  B=1 long_500k cells (+ select-based ring write).
+
+`param_pspecs` is name-based: it pattern-matches parameter paths, so new
+architectures compose without new rules as long as they reuse the layer
+vocabulary.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+# name -> (spec for 2D [in, out]-style weights); leading R dim added later
+_MATMUL_IN_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_r", "w_k",
+                  "w_v", "w_g", "w_decay"}
+_MATMUL_OUT_IN = {"wo", "w_down", "w_out", "w_o"}
+
+
+def param_pspec(path, leaf, dp, stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _path_str(path).split("/")[-1]
+    pre = (None,) if stacked else ()
+    nd = leaf.ndim - (1 if stacked else 0)
+
+    if name in ("embed",):
+        return P("model", None)
+    if name in ("head",):
+        return P(dp, "model")
+    if name in ("scale", "final_norm"):
+        return P(*(pre + (None,) * nd))
+    if name == "router":
+        return P(*(pre + (dp, None)))
+    if name in _MATMUL_IN_OUT:
+        if nd == 3:  # MoE expert weights [E, D, F]
+            return P(*(pre + (None, dp, "model")))
+        return P(*(pre + (dp, "model")))
+    if name in _MATMUL_OUT_IN:
+        if nd == 3:  # MoE [E, F, D]
+            return P(*(pre + (None, "model", dp)))
+        return P(*(pre + ("model", dp)))
+    if name == "w_bcdt":
+        return P(*(pre + ("model", None)))
+    if name == "a_log":
+        return P(*(pre + ("model", None)))
+    if name == "decay_bias":
+        return P(*(pre + ("model",)))
+    if name == "bonus":
+        return P(*(pre + ("model", None)))
+    # mix vectors, dt_bias, anything small: replicate
+    return P(*(pre + (None,) * nd))
+
+
+def param_pspecs(params_shape: Any, mesh: Mesh) -> Any:
+    """Tree of PartitionSpecs matching a params pytree (from eval_shape)."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        stacked = _path_str(path).startswith("blocks/")
+        return param_pspec(path, leaf, dp, stacked)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_pspec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """Specs for the input batch dict."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_total = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_total *= mesh.shape[a]
+    bshard = dp if shape.global_batch % dp_total == 0 else None
+    if cfg.frontend == "vit_stub":
+        toks = P(bshard, None, None)
+    else:
+        toks = P(bshard, None)
+    return {"inputs": toks, "labels": P(bshard, None)}
+
+
+def activation_pspec(cfg: ArchConfig, mesh: Mesh) -> P:
+    """Residual-stream constraint: SP over model for attention archs."""
+    from repro.configs.base import MIXER_ATTN
+    pure_attn = all(m == MIXER_ATTN for m, _ in cfg.pattern)
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    if pure_attn:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                 cache_shape: Any) -> Any:
+    """Specs for the decode-cache pytree (stacked [R, ...])."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_total = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_total *= mesh.shape[a]
+    long_ctx = shape.global_batch < dp_total  # B=1 long_500k cells
+
+    def rule(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):  # [R, B, kv, C, hd]
+            if long_ctx:
+                return P(None, None, None, "data", "model")
+            return P(None, dp, None, None, "model")
+        if name == "pos" or name == "valid":
+            if nd == 2 and name == "pos":   # [R, C]
+                return P(None, "data") if long_ctx else P(None, None)
+            if nd == 2:                      # valid [R, C]
+                return P(None, "data") if long_ctx else P(None, None)
+            return P(*([None] * nd))
+        if name == "mamba" or name == "wkv":  # [R,B,di,N] / [R,B,H,hd,hd]
+            b = None if long_ctx else dp
+            if nd == 4:
+                return P(None, b, "model", None)
+            return P(None, b, "model", None, None)
+        if name == "prev" or name == "ffn_prev":  # [R, B, D]
+            return P(None, None if long_ctx else dp, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def attn_head_specs(cfg: ArchConfig, mesh: Mesh, decode: bool = False):
+    """(q_sharding, kv_sharding) for [B, H, S, hd] attention internals.
+
+    Train/prefill: heads over "model" (q heads are padded to divide TP;
+    kv heads replicated when the GQA kv count is below the TP width).
+
+    Decode: pin q/k/v to the KV cache's native layout — head_dim over
+    "model" — so the scores einsum contracts the sharded hd dim (partial
+    sums + one small all-reduce of [B,H,1,C]) instead of XLA choosing to
+    ALL-GATHER THE WHOLE CACHE to head-sharded form every token (the
+    dominant collective of the baseline decode cells; §Perf cell A).
+    """
+    if not any(m == "attn" for m, _ in cfg.pattern):
+        return None
+    if decode:
+        dp = dp_axes(mesh)
+        dp = dp if len(dp) > 1 else dp[0]
+        spec = P(dp, None, None, "model")
+        return (NamedSharding(mesh, spec), NamedSharding(mesh, spec))
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    tp = mesh.shape["model"]
+    q = P(dp, "model", None, None)
+    kv = P(dp, "model" if cfg.n_kv % tp == 0 else None, None, None)
+    return (NamedSharding(mesh, q), NamedSharding(mesh, kv))
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants (EXPERIMENTS.md §Perf; selected by dryrun --opt)
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs_tp_only(params_shape: Any, mesh: Mesh) -> Any:
+    """Serving layout: params sharded over "model" only (no FSDP axis).
+
+    Hypothesis (decode cells): FSDP storage forces an all-gather of every
+    weight on every decoded token — decode is latency-bound and re-gathers
+    the full model per step. Storing weights TP-only removes those
+    collectives entirely at the cost of params/16 per chip instead of
+    params/256 (fits: 33B bf16 / 16 = 4.1 GB).
+    """
+    def rule(path, leaf):
+        stacked = _path_str(path).startswith("blocks/")
+        spec = param_pspec(path, leaf, None, stacked)
+        # drop the dp axis (None), keep "model" placements
+        cleaned = tuple(a if a == "model" else None for a in spec)
+        return P(*cleaned)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_pspec_dp_wide(cfg: ArchConfig, shape: ShapeConfig,
+                        mesh: Mesh) -> Any:
+    """Small-model layout: the "model" axis joins data parallelism.
+
+    Hypothesis (musicgen/internvl-class, d_model < 2k): 16-way TP of tiny
+    matmuls is all gather latency and no math — run batch over
+    (data x model) = 256-way DP with ZeRO over "data" instead.
+    """
+    axes = tuple(mesh.axis_names)  # ("data","model") or ("pod",...)
+    if cfg.frontend == "vit_stub":
+        return {"inputs": P(axes, None, None), "labels": P(axes, None)}
+    return {"inputs": P(axes, None), "labels": P(axes, None)}
+
+
+def param_pspecs_dp_wide(params_shape: Any, mesh: Mesh) -> Any:
+    """Params for the dp-wide layout: ZeRO over "data", replicated over
+    "model" (every model-group holds the same shard)."""
+    def rule(path, leaf):
+        stacked = _path_str(path).startswith("blocks/")
+        spec = param_pspec(path, leaf, "data", stacked)
+        cleaned = tuple(a if a == "data" else None for a in spec)
+        return P(*cleaned)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+_ATTN_MLP = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}
+
+
+def param_pspecs_decode_row(params_shape: Any, mesh: Mesh) -> Any:
+    """Decode-optimized layout (§Perf cell A, iteration 3).
+
+    Attention/dense-MLP weights are ROW-parallel: the *contracting* (input)
+    dim is sharded over "model", so single-token matmuls produce partial
+    sums resolved by tiny [B,1,*] all-reduces — weights are never gathered
+    and activations stay replicated. MoE expert weights keep the
+    F-sharded layout (already gather-free under the shard_map block);
+    SSM mixers keep channel-TP (state locality).
+    """
+    def rule(path, leaf):
+        pathstr = _path_str(path)
+        name = pathstr.split("/")[-1]
+        stacked = pathstr.startswith("blocks/")
+        pre = (None,) if stacked else ()
+        nd = leaf.ndim - (1 if stacked else 0)
+        if name == "embed":
+            return P("model", None)
+        if name == "head":
+            return P("model", None)
+        if name in _ATTN_MLP and nd == 2:
+            return P(*(pre + ("model", None)))
+        if name in _ATTN_MLP and nd == 3:  # MoE expert weights
+            if name == "w_down":
+                return P(*(pre + (None, "model", None)))
+            return P(*(pre + (None, None, "model")))
+        # ssm / norms / misc: TP-only cleaning of the base rule
+        spec = param_pspec(path, leaf, None, stacked)
+        return P(*tuple(a if a == "model" else None for a in spec))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def cache_pspecs_decode_row(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                            cache_shape: Any) -> Any:
+    """KV cache sharded on the sequence (C) dim over "model" — the scores
+    softmax reduces over shards with scalar-sized all-reduces, and the
+    ring write uses select (iota-compare), which is layout-local."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):   # [R, B, kv, C, hd]
+            return P(None, dp, None, "model", None)
+        if name in ("pos", "valid") and nd == 2:  # [R, C]
+            return P(None, "model")
+        if name == "mamba" or name == "wkv":
+            b = dp
+            if nd == 4:
+                return P(None, b, "model", None)
+            return P(None, b, "model", None, None)
+        if name in ("prev", "ffn_prev"):
+            return P(None, dp, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def param_pspecs_zero2(params_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-2 layout (§Perf cell C): parameters TP-sharded over "model"
+    but REPLICATED over "data"; optimizer moments stay 2-D sharded.
+
+    Hypothesis: ZeRO-3 (2-D FSDP) gathers every weight over "data" in the
+    forward AND the remat'd backward — twice-plus per step. With params
+    replicated over "data" the gathers disappear; the cost is one
+    all-gather of the UPDATED params after the optimizer step (the update
+    itself computes on the 2-D-sharded moment slices) and bf16 params
+    resident per chip / "model" shard only.
+    """
+    def rule(path, leaf):
+        stacked = _path_str(path).startswith("blocks/")
+        spec = param_pspec(path, leaf, None, stacked)
+        return P(*tuple(a if a == "model" else None for a in spec))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)

@@ -1,0 +1,39 @@
+"""Public jit'd entry points for the kernel package.
+
+``use_pallas=True`` routes to the Pallas kernels (interpret mode on CPU,
+compiled on TPU); ``False`` routes to the pure-jnp oracles in ref.py.
+The fabric simulator uses the oracles by default on CPU (XLA fuses them
+well there); on a TPU deployment the Pallas path is the fast one.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.cms.nscc import NSCCParams
+from repro.kernels import ref
+from repro.kernels.ecmp_hash import ecmp_select as _ecmp_pallas
+from repro.kernels.nscc_update import nscc_update as _nscc_pallas
+from repro.kernels.sack_bitmap import sack_advance as _sack_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def nscc_update(cwnd, ecn, rtt, count, params: NSCCParams = NSCCParams(),
+                use_pallas: bool = False):
+    if use_pallas:
+        return _nscc_pallas(cwnd, ecn, rtt, count, params,
+                            interpret=not _ON_TPU)
+    return ref.nscc_update_ref(cwnd, ecn, rtt, count, params)
+
+
+def sack_advance(ring, base, use_pallas: bool = False):
+    if use_pallas:
+        return _sack_pallas(ring, base, interpret=not _ON_TPU)
+    return ref.sack_advance_ref(ring, base)
+
+
+def ecmp_select(src, dst, ev, salt, fanout: int, use_pallas: bool = False):
+    if use_pallas:
+        return _ecmp_pallas(src, dst, ev, salt, fanout,
+                            interpret=not _ON_TPU)
+    return ref.ecmp_hash_ref(src, dst, ev, salt, fanout)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel in this package is
+validated against these functions across shape/dtype sweeps in
+tests/test_kernels_*.py (interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cms.nscc import NSCCParams, window_delta
+from repro.core.pds import shift_ring, trailing_ones
+from repro.network.ecmp import ecmp_hash
+
+
+def nscc_update_ref(cwnd: jax.Array, ecn: jax.Array, rtt: jax.Array,
+                    count: jax.Array, params: NSCCParams) -> jax.Array:
+    """Batched NSCC window update.
+
+    cwnd: [N] f32 current windows; ecn: [N] bool aggregate ECN of the ACK
+    round; rtt: [N] f32 measured RTT; count: [N] i32 number of coalesced
+    ACKs this round (CACK/SACK may cover several packets, Sec. 3.2.5).
+    """
+    delta = window_delta(cwnd, ecn, rtt, params) * count.astype(jnp.float32)
+    active = count > 0
+    out = jnp.where(active, cwnd + delta, cwnd)
+    return jnp.clip(out, params.min_cwnd, params.max_cwnd)
+
+
+def sack_advance_ref(ring: jax.Array, base: jax.Array):
+    """Cumulative-ACK advance over [N, W] uint32 SACK rings.
+
+    Returns (new_ring, new_base, advanced): count the contiguous received
+    prefix, shift it out, advance the base PSN (Sec. 3.2.5).
+    """
+    adv = trailing_ones(ring)
+    return shift_ring(ring, adv), base + adv.astype(jnp.uint32), adv
+
+
+def ecmp_hash_ref(src: jax.Array, dst: jax.Array, ev: jax.Array,
+                  salt: jax.Array, fanout: int) -> jax.Array:
+    """Batched ECMP port selection: H(fields) mod fanout (Sec. 2.1)."""
+    return (ecmp_hash(src, dst, ev, salt) % jnp.uint32(fanout)).astype(jnp.int32)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: SACK-ring cumulative-ACK advance (Sec. 3.2.5).
+
+Per PDC, the receiver keeps a ring bitmap of arrived PSNs anchored at the
+CACK point. Every ACK-coalescing round the hardware must (a) count the
+contiguous prefix of received packets, (b) advance the base PSN, and
+(c) shift the ring down — across every active PDC. That is the hot loop
+this kernel implements blockwise.
+
+TPU adaptation: the per-row variable shift (a gather in the reference)
+is re-expressed as a one-hot masked reduction — for output word j we sum
+ring[:, k] * [k == j + word_shift] over k, an MXU/VPU-friendly W x W
+contraction with W = ring words (W <= 32), instead of a data-dependent
+gather which the TPU vector unit cannot do across lanes. Bit-level ops
+(ctz/popcount) stay in uint32 lanes.
+
+Block layout: (BLOCK_R rows) x (W words padded to 128 lanes) per grid
+step; every operand tile lives in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 64
+WORD = 32
+
+
+def _popcount32(x):
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _sack_kernel(ring_ref, base_ref, ring_out_ref, base_out_ref, adv_ref,
+                 *, w: int):
+    ring = ring_ref[...][:, :w]          # [R, W] uint32
+    base = base_ref[...]                 # [R, 128] uint32 (col 0 used)
+    R = ring.shape[0]
+
+    # --- trailing ones per row ---
+    inv = ~ring
+    lsb = inv & (jnp.uint32(0) - inv)
+    ctz = _popcount32(lsb - jnp.uint32(1))
+    ctz = jnp.where(inv == jnp.uint32(0), WORD, ctz)          # all-ones word
+    full = ring == jnp.uint32(0xFFFFFFFF)                      # [R, W]
+    # number of leading full words = index of first non-full word
+    not_full = ~full
+    col = jax.lax.broadcasted_iota(jnp.int32, (R, w), 1)
+    first_partial = jnp.min(jnp.where(not_full, col, w), axis=1)  # [R]
+    # bits from the first partial word (0 if none)
+    sel = col == first_partial[:, None]
+    partial_bits = jnp.sum(jnp.where(sel, ctz, 0), axis=1)
+    adv = jnp.where(first_partial == w, w * WORD,
+                    first_partial * WORD + partial_bits)       # [R]
+
+    # --- funnel shift right by adv bits, expressed gather-free ---
+    words = adv // WORD                                        # [R]
+    bits = (adv % WORD).astype(jnp.uint32)                     # [R]
+    # lo[i, j] = ring[i, j + words[i]] ; hi[i, j] = ring[i, j + words[i] + 1]
+    shift_idx = col + words[:, None]                           # [R, W]
+    k = jax.lax.broadcasted_iota(jnp.int32, (R, w, w), 2)      # [R, W, W]
+    one_hot_lo = (k == shift_idx[:, :, None]).astype(jnp.uint32)
+    one_hot_hi = (k == (shift_idx + 1)[:, :, None]).astype(jnp.uint32)
+    ring_b = ring[:, None, :]                                  # [R, 1, W]
+    lo = jnp.sum(ring_b * one_hot_lo, axis=2, dtype=jnp.uint32)
+    hi = jnp.sum(ring_b * one_hot_hi, axis=2, dtype=jnp.uint32)
+    b = bits[:, None]
+    shifted = jnp.where(b == 0, lo,
+                        (lo >> b) | (hi << (jnp.uint32(WORD) - b)))
+
+    out = ring_out_ref[...]
+    out = out.at[:, :w].set(shifted)
+    ring_out_ref[...] = out
+    base_out_ref[...] = base + adv.astype(jnp.uint32)[:, None] * (
+        jax.lax.broadcasted_iota(jnp.int32, base.shape, 1) == 0
+    ).astype(jnp.uint32)
+    adv_ref[...] = adv[:, None] * (
+        jax.lax.broadcasted_iota(jnp.int32, base.shape, 1) == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sack_advance(ring: jax.Array, base: jax.Array,
+                 interpret: bool = True):
+    """CACK-advance every PDC's SACK ring.
+
+    ring: [N, W] uint32 (W <= 32 words = up to 1024-PSN MP_RANGE window)
+    base: [N] uint32
+    Returns (new_ring, new_base, advanced[int32]).
+    """
+    n, w = ring.shape
+    assert w <= 128
+    rows = -(-n // BLOCK_R) * BLOCK_R
+    padr = rows - n
+    ring_p = jnp.pad(ring, ((0, padr), (0, 128 - w)))
+    base_p = jnp.pad(base.reshape(-1, 1), ((0, padr), (0, 127)))
+
+    grid = (rows // BLOCK_R,)
+    spec128 = pl.BlockSpec((BLOCK_R, 128), lambda i: (i, 0))
+    ring_o, base_o, adv_o = pl.pallas_call(
+        functools.partial(_sack_kernel, w=w),
+        grid=grid,
+        in_specs=[spec128, spec128],
+        out_specs=[spec128, spec128, spec128],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ring_p, base_p)
+    return ring_o[:n, :w], base_o[:n, 0], adv_o[:n, 0]

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, with 512 placeholder host devices.
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init). Do not set that flag anywhere global —
+smoke tests and benchmarks run on 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh pod                 # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Per cell this produces reports/dryrun/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (bytes/device), cost_analysis (FLOPs, bytes accessed),
+  per-collective byte totals parsed from the optimized HLO — the inputs
+  to the §Roofline table (repro/launch/roofline.py).
+
+Everything is lowered from ShapeDtypeStructs: no parameter or batch is
+ever materialized.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, shapes_for
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.serve.serve_step import make_decode_step
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+# bf16 moments for the 300B+ archs (HBM budget, see DESIGN.md)
+BF16_MOMENT_ARCHS = {"grok-1-314b", "jamba-1.5-large-398b"}
+# gradient accumulation for the MoE/hybrid trains (activation transients)
+MICROBATCH_ARCHS = {"grok-1-314b", "jamba-1.5-large-398b", "mixtral-8x22b"}
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([0-9,]*)\][^=]*\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in re.finditer(
+            r"= \(?([a-z0-9]+)\[([0-9,]*)\][^)]*?\)? (all-gather|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute)", hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        size = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        totals[kind] = totals.get(kind, 0) + size
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["total"] = sum(v for k, v in totals.items())
+    return {"bytes": totals, "counts": counts}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStructs (with shardings) for every model input —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_pspec(cfg, shape, mesh)
+    if shape.kind == "decode":
+        if cfg.frontend == "vit_stub":
+            toks = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return {"tokens": toks}
+    if cfg.frontend == "vit_stub":
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return {"inputs": inputs,
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def build_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                  scan_layers: bool = True, variant: str = "base"):
+    """Lower one (cfg, shape, mesh) cell; no compilation.
+
+    variant: "base" (paper-faithful baseline layout) or "opt" (the §Perf
+    hillclimbed layout for this cell — see sharding.py variant docs).
+    """
+    arch = cfg.name
+    dp = shd.dp_axes(mesh)
+
+    params_shape = jax.eval_shape(
+        partial(lm.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    dp_wide = variant == "opt" and cfg.d_model < 2048 \
+        and shape.kind == "train"
+    zero2 = variant == "opt" and cfg.d_model >= 2048 \
+        and shape.kind == "train"
+    tp_only = variant == "opt" and shape.kind == "decode"
+    if dp_wide:
+        pspecs = shd.param_pspecs_dp_wide(params_shape, mesh)
+    elif zero2:
+        pspecs = shd.param_pspecs_zero2(params_shape, mesh)
+    elif tp_only:
+        pspecs = shd.param_pspecs_decode_row(params_shape, mesh)
+    else:
+        pspecs = shd.param_pspecs(params_shape, mesh)
+    psharding = shd.named(mesh, pspecs)
+    if dp_wide:
+        axes = tuple(mesh.axis_names)
+        act_spec = NamedSharding(mesh, P(axes, None, None))
+        head_specs = None
+    else:
+        act_spec = NamedSharding(mesh, shd.activation_pspec(cfg, mesh))
+        head_specs = shd.attn_head_specs(cfg, mesh)
+    dpx = dp if len(dp) > 1 else dp[0]
+    if dp_wide:
+        loss_spec = NamedSharding(mesh, P(tuple(mesh.axis_names), None, None))
+    else:
+        loss_spec = NamedSharding(mesh, P(dpx, None, None))
+
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    moe_tokens_shardable = (shape.global_batch * (
+        1 if shape.kind == "decode" else shape.seq_len)) % dp_total == 0
+    moe_spec = (P(dp, None) if moe_tokens_shardable else P(None, None))
+
+    ins = input_specs(cfg, shape, mesh)
+    bspec = (shd.batch_pspec_dp_wide(cfg, shape, mesh) if dp_wide
+             else shd.batch_pspec(cfg, shape, mesh))
+    if dp_wide:
+        moe_spec = P(tuple(mesh.axis_names), None)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype=jnp.bfloat16 if arch in BF16_MOMENT_ARCHS
+            else jnp.float32)
+        step = make_train_step(cfg, mesh=mesh, dp_axes=dp, opt_cfg=opt_cfg,
+                               act_spec=act_spec, moe_token_spec=moe_spec,
+                               scan_layers=scan_layers,
+                               attn_head_specs=head_specs,
+                               loss_spec=loss_spec,
+                               microbatches=2 if arch in MICROBATCH_ARCHS
+                               else 1,
+                               remat_policy="nothing")
+        opt_shape = jax.eval_shape(
+            partial(init_opt_state, cfg=opt_cfg), params_shape)
+        mspecs = (shd.param_pspecs(params_shape, mesh) if zero2 else pspecs)
+        ospecs = {"m": mspecs, "v": mspecs, "step": P()}
+        osharding = shd.named(mesh, ospecs)
+        bsharding = shd.named(mesh, bspec)
+        jitted = jax.jit(
+            step,
+            in_shardings=(psharding, osharding, bsharding),
+            out_shardings=(psharding, osharding, None),
+            donate_argnums=(0, 1))
+        args = (params_shape, opt_shape,
+                {"inputs": ins["inputs"], "labels": ins["labels"]})
+        lowered = jitted.lower(*args)
+    elif shape.kind == "prefill":
+        from repro.serve.serve_step import make_prefill
+        pf = make_prefill(cfg, mesh=mesh, dp_axes=dp, act_spec=act_spec,
+                          moe_token_spec=moe_spec, scan_layers=scan_layers,
+                          attn_head_specs=head_specs)
+        bsharding = shd.named(mesh, bspec["inputs"])
+        jitted = jax.jit(pf, in_shardings=(psharding, bsharding),
+                         out_shardings=None)
+        lowered = jitted.lower(params_shape, ins["inputs"])
+    else:  # decode
+        long_ctx = shape.global_batch < dp_total
+        dstep = make_decode_step(cfg, mesh=mesh, dp_axes=dp,
+                                 select_write=long_ctx or variant == "opt",
+                                 moe_token_spec=(
+                                     P(dp, None) if moe_tokens_shardable
+                                     else P(None, None)),
+                                 scan_layers=scan_layers,
+                                 sharded_cache_attn=variant == "opt"
+                                 and not long_ctx)
+        cache_len = min(shape.seq_len, cfg.sliding_window) \
+            if cfg.sliding_window else shape.seq_len
+        cache_shape = jax.eval_shape(
+            partial(lm.init_cache, cfg, shape.global_batch, cache_len,
+                    jnp.bfloat16))
+        cspecs = (shd.cache_pspecs_decode_row(cfg, shape, mesh, cache_shape)
+                  if variant == "opt" and not long_ctx
+                  else shd.cache_pspecs(cfg, shape, mesh, cache_shape))
+        csharding = shd.named(mesh, cspecs)
+        tsharding = shd.named(mesh, shd.batch_pspec(cfg, shape, mesh)["inputs"])
+        jitted = jax.jit(
+            dstep,
+            in_shardings=(psharding, csharding, tsharding, None),
+            out_shardings=(None, csharding),
+            donate_argnums=(1,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jitted.lower(params_shape, cache_shape, ins["tokens"], pos)
+    return lowered
+
+
+def _analyze(lowered):
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": coll,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "base"):
+    """Lower + compile one cell and its R=1/R=2 FLOP-calibration variants.
+
+    XLA's cost analysis counts a while-loop (lax.scan) body ONCE and
+    reports per-device numbers. The scanned full model gives the true
+    memory analysis; two Python-unrolled variants with 1 and 2 repeating
+    units give per-unit FLOPs/bytes/collectives, from which the true
+    per-device totals are reconstructed:
+        total = f(1) + (f(2) - f(1)) * (R - 1).
+    """
+    import dataclasses
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    full = _analyze(build_lowered(cfg, shape, mesh, scan_layers=True,
+                                  variant=variant))
+    t_full = time.time() - t0
+
+    cfg1 = dataclasses.replace(cfg, num_layers=cfg.unit_len)
+    cfg2 = dataclasses.replace(cfg, num_layers=2 * cfg.unit_len)
+    a1 = _analyze(build_lowered(cfg1, shape, mesh, scan_layers=False,
+                                variant=variant))
+    a2 = _analyze(build_lowered(cfg2, shape, mesh, scan_layers=False,
+                                variant=variant))
+    R = cfg.repeats
+
+    def extrap(key):
+        f1, f2 = a1[key], a2[key]
+        return f1 + (f2 - f1) * (R - 1)
+
+    coll_total = {}
+    for kind in set(a1["collectives"]["bytes"]) | set(
+            a2["collectives"]["bytes"]):
+        c1 = a1["collectives"]["bytes"].get(kind, 0)
+        c2 = a2["collectives"]["bytes"].get(kind, 0)
+        coll_total[kind] = c1 + (c2 - c1) * (R - 1)
+
+    report = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "compile_s": round(time.time() - t0, 1),
+        "compile_full_s": round(t_full, 1),
+        # per-device totals, loop-corrected via the R1/R2 calibration
+        "flops": extrap("flops"),
+        "bytes_accessed": extrap("bytes_accessed"),
+        "collectives": {"bytes": coll_total,
+                        "counts_full_hlo": full["collectives"]["counts"]},
+        # raw (body-counted-once) numbers from the scanned full build
+        "flops_scanned_raw": full["flops"],
+        "memory": full["memory"],
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return report
+
+
+def run_cell(arch, shape_name, multi_pod, outdir, variant="base"):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if variant != "base":
+        tag += f"__{variant}"
+    try:
+        rep = lower_cell(arch, shape_name, multi_pod, variant)
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(rep, f, indent=1)
+        dev_mem = (rep["memory"]["argument_bytes"]
+                   + rep["memory"]["temp_bytes"])
+        print(f"OK   {tag}: flops/dev={rep['flops']:.3e} "
+              f"coll/dev={rep['collectives']['bytes'].get('total', 0):.3e}B "
+              f"mem/dev={dev_mem/1e9:.2f}GB "
+              f"(compile {rep['compile_s']}s)", flush=True)
+        return True
+    except Exception as e:
+        print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+        traceback.print_exc()
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--out", default=os.path.abspath(REPORT_DIR))
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[
+        args.mesh]
+    ok = fail = 0
+    if args.all:
+        for arch in configs.ARCH_NAMES:
+            cfg = configs.get(arch)
+            for shape_name in shapes_for(cfg):
+                for mp in meshes:
+                    if run_cell(arch, shape_name, mp, args.out):
+                        ok += 1
+                    else:
+                        fail += 1
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            if run_cell(args.arch, args.shape, mp, args.out, args.variant):
+                ok += 1
+            else:
+                fail += 1
+    print(f"dry-run: {ok} ok, {fail} failed")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""ECMP hashing and per-hop routing (Sec. 2.1).
+
+Switches resolve a destination to a *set* of equal-cost ports and pick one
+with a deterministic hash of header fields including the Entropy Value:
+``p = H(x) mod n_ports``. Properties the transport relies on (Sec. 3.3.5):
+same EV => same path; different EV => likely different path (collisions
+expected and modeled — e.g. 4 same-pod paths vs 2^16 EVs => 25% pairwise
+collision probability, which `benchmarks/bench_ecmp_collisions.py`
+reproduces).
+
+`route_step` advances a batch of dequeued packets one hop through a
+`QueueGraph`; `injection_queue` picks the first queue at the source leaf.
+Hash = xxhash-style avalanche over (src, dst, ev, switch-salt) — the
+"well-mixing hash functions in use today" the paper assumes. The batched
+hash is also implemented as a Pallas kernel (repro/kernels/ecmp_hash.py);
+this module is its reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.network.topology import QueueGraph, Stage
+
+DELIVERED = jnp.int32(-2)
+INVALID = jnp.int32(-1)
+
+
+def ecmp_hash(src: jax.Array, dst: jax.Array, ev: jax.Array,
+              salt: jax.Array) -> jax.Array:
+    """Deterministic well-mixed 32-bit hash of the ECMP field set.
+
+    All inputs int32/uint32, broadcastable. Mirrors a hardware 5-tuple
+    hash: mix each field with distinct odd constants, then avalanche.
+    """
+    x = (src.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+         ^ dst.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+         ^ ev.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D)
+         ^ salt.astype(jnp.uint32) * jnp.uint32(0x27D4EB2F))
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x2C1B3C6D)
+    x = x ^ (x >> 12)
+    x = x * jnp.uint32(0x297A2D39)
+    x = x ^ (x >> 15)
+    return x
+
+
+class RoutingTables:
+    """Device-resident copies of the QueueGraph routing arrays."""
+
+    def __init__(self, g: QueueGraph):
+        self.g = g
+        self.stage = jnp.asarray(g.stage)
+        self.host_queue = jnp.asarray(g.host_queue)
+        self.host_leaf = jnp.asarray(g.host_leaf)
+        self.host_pod = jnp.asarray(g.host_pod)
+        self.up1 = jnp.asarray(g.up1_table)
+        self.down1 = jnp.asarray(g.down1_table)
+        self.up2 = jnp.asarray(g.up2_table) if g.up2_table.size else None
+        self.down2 = jnp.asarray(g.down2_table) if g.down2_table.size else None
+        self.next_switch = jnp.asarray(g.queue_next_switch)
+        self.three_level = g.up2_table.size > 0
+        self.leaves_per_pod = (g.down1_table.shape[1]
+                               if self.three_level else 1)
+        self.aggs_per_pod = g.fanout1
+
+    def injection_queue(self, src: jax.Array, dst: jax.Array,
+                        ev: jax.Array) -> jax.Array:
+        """First queue for a packet injected at host `src` toward `dst`."""
+        sleaf = self.host_leaf[src]
+        dleaf = self.host_leaf[dst]
+        same_leaf = sleaf == dleaf
+        h = ecmp_hash(src, dst, ev, sleaf) % jnp.uint32(self.g.fanout1)
+        up = self.up1[sleaf, h.astype(jnp.int32)]
+        return jnp.where(same_leaf, self.host_queue[dst], up)
+
+    def route_step(self, queue: jax.Array, src: jax.Array, dst: jax.Array,
+                   ev: jax.Array) -> jax.Array:
+        """Next queue for packets just dequeued from `queue`.
+
+        Returns DELIVERED for packets leaving a HOST queue.
+        """
+        st = self.stage[queue]
+        sw = self.next_switch[queue]  # switch the packet is *now* at
+        dleaf = self.host_leaf[dst]
+
+        if not self.three_level:
+            L = self.up1.shape[0]
+            spine = sw - L
+            nxt_up1 = self.down1[jnp.clip(spine, 0, self.down1.shape[0] - 1),
+                                 dleaf]
+            nxt_down1 = self.host_queue[dst]
+            out = jnp.where(st == Stage.UP1, nxt_up1,
+                            jnp.where(st == Stage.DOWN1, nxt_down1, DELIVERED))
+            return jnp.where(st == Stage.HOST, DELIVERED, out)
+
+        L = self.up1.shape[0]            # leaves
+        A = self.down1.shape[0]          # aggs
+        Lp = self.leaves_per_pod
+        Ap = self.aggs_per_pod
+        half = self.up2.shape[1]
+        dpod = self.host_pod[dst]
+
+        # at agg (arrived via UP1): same pod -> DOWN1; else UP2 via hash
+        agg = jnp.clip(sw - L, 0, A - 1)
+        agg_pod = agg // Ap
+        dleaf_local = dleaf % Lp
+        go_down = self.down1[agg, dleaf_local]
+        h2 = ecmp_hash(src, dst, ev, sw) % jnp.uint32(half)
+        go_up = self.up2[agg, h2.astype(jnp.int32)]
+        nxt_up1 = jnp.where(agg_pod == dpod, go_down, go_up)
+
+        # at core (arrived via UP2): down to the destination pod's agg
+        core = jnp.clip(sw - L - A, 0, self.down2.shape[0] - 1)
+        nxt_up2 = self.down2[core, dpod]
+
+        # at agg (arrived via DOWN2): down to destination leaf
+        nxt_down2 = self.down1[agg, dleaf_local]
+
+        # at leaf (arrived via DOWN1): host downlink
+        nxt_down1 = self.host_queue[dst]
+
+        out = jnp.where(st == Stage.UP1, nxt_up1,
+              jnp.where(st == Stage.UP2, nxt_up2,
+              jnp.where(st == Stage.DOWN2, nxt_down2,
+              jnp.where(st == Stage.DOWN1, nxt_down1, DELIVERED))))
+        return out
+
+    def path_fingerprint(self, src: jax.Array, dst: jax.Array,
+                         ev: jax.Array) -> jax.Array:
+        """Identify the full path an EV selects (for collision statistics).
+
+        Combines every hash choice along the path into one int32 id;
+        two packets share a fingerprint iff they traverse the same links.
+        Vectorized over (src, dst, ev) — no simulation involved.
+        """
+        sleaf = self.host_leaf[src]
+        dleaf = self.host_leaf[dst]
+        h1 = (ecmp_hash(src, dst, ev, sleaf)
+              % jnp.uint32(self.g.fanout1)).astype(jnp.int32)
+        if not self.three_level:
+            return jnp.where(sleaf == dleaf, -1, h1)
+        spod = self.host_pod[src]
+        dpod = self.host_pod[dst]
+        agg = spod * self.aggs_per_pod + h1
+        sw = self.up1.shape[0] + agg
+        half = self.up2.shape[1]
+        h2 = (ecmp_hash(src, dst, ev, sw) % jnp.uint32(half)).astype(jnp.int32)
+        same_pod = spod == dpod
+        same_leaf = sleaf == dleaf
+        fp = jnp.where(same_pod, h1, h1 * half + h2)
+        return jnp.where(same_leaf, -1, fp)

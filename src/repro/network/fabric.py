@@ -1,0 +1,584 @@
+"""Vectorized packet-level fabric simulator — the UET reproduction engine.
+
+One simulator tick == the serialization time of one MTU packet on one link.
+Every link is a FIFO queue; each tick every queue dequeues at most one
+packet (line rate) and forwards it one hop. All protocol state — PSN
+bitmaps, congestion windows, credit balances, EV recycle rings — is
+structure-of-arrays, and a tick is a pure function stepped by
+``jax.lax.scan`` under ``jit``. This is the TPU-native re-architecture of
+the paper's protocol: what a hardware UET NIC does per packet, the
+simulator does per *vector of flows* per tick.
+
+Modeled faithfully (paper sections in parens):
+
+* ECMP spraying with per-packet EVs through a real Clos topology (2.1)
+* egress ECN marking above a queue threshold (3.3.1)
+* packet trimming on overflow -> fast NACK to the source (3.2.4)
+* RUD selective-repeat with a source retransmit bitmap; ROD go-back-N on a
+  single static path (3.2.1)
+* receiver PSN tracking with SACK rings + MP_RANGE rejection (3.2.5)
+* NSCC 4-case window control + Quick Adapt; RCCC receiver credits; both
+  composable, as the spec prescribes (3.3)
+* LB schemes: static / oblivious / RR-slots / REPS / EV-bitmap (3.3.5)
+* OOO-count and EV-based loss inference, timeout fallback (3.2.4)
+* control traffic (ACKs, NACKs, credits) rides the second traffic class,
+  modeled as a fixed-latency uncongested return path (3.1.4)
+
+Simplifications recorded in DESIGN.md: RCCC credit grants apply without
+path delay (the grant *rate* is what the algorithm controls); trimmed
+headers travel on the control TC (elevated priority per the spec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pds
+from repro.core.cms import nscc as nscc_mod
+from repro.core.cms.rccc import RCCCState, grant_credits
+from repro.core.lb.schemes import LBScheme, LBState, select_ev, on_ack as lb_on_ack
+from repro.core.types import TransportMode
+from repro.network.ecmp import DELIVERED, RoutingTables
+from repro.network.topology import QueueGraph, Stage
+
+# packet meta bits
+META_TRIMMED = 1
+META_ECN = 2
+
+# event types
+EV_NONE, EV_ACK, EV_NACK, EV_OOO = 0, 1, 2, 3
+
+
+@dataclass(frozen=True)
+class SimParams:
+    """Static simulation parameters (hashable; closed over by jit)."""
+
+    ticks: int = 2000
+    queue_capacity: int = 64
+    ecn_threshold: int = 12
+    trimming: bool = True
+    mode: TransportMode = TransportMode.RUD
+    lb: LBScheme = LBScheme.OBLIVIOUS
+    #: queue ids whose link is DOWN: packets routed into them are silently
+    #: dropped (Configuration drops, Sec. 3.2.4) — the failure-mitigation
+    #: scenario for REPS (dead-path EVs never return and leave circulation)
+    failed_queues: tuple = ()
+    nscc: bool = True
+    rccc: bool = False
+    dfc: bool = False
+    ack_return_ticks: int = 4
+    mp_range: int = 512           # receiver tracking window (PSNs)
+    ev_slots: int = 16            # K for RR/REPS/EVBITMAP
+    timeout_ticks: int = 256
+    ooo_threshold: int = 0        # 0 = disabled
+    max_cwnd: float = 48.0        # ~BDP in packets (optimistic start)
+    base_rtt: float = 10.0        # unloaded RTT in ticks, for NSCC
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class Workload:
+    """Static flow set: src/dst host ids, message size (packets), start."""
+
+    src: jax.Array   # [F] int32
+    dst: jax.Array   # [F] int32
+    size: jax.Array  # [F] int32
+    start: jax.Array  # [F] int32
+
+    @staticmethod
+    def of(src, dst, size, start=None) -> "Workload":
+        src = jnp.asarray(src, jnp.int32)
+        f = src.shape[0]
+        return Workload(
+            src=src, dst=jnp.asarray(dst, jnp.int32),
+            size=jnp.asarray(size, jnp.int32) * jnp.ones((f,), jnp.int32),
+            start=(jnp.zeros((f,), jnp.int32) if start is None
+                   else jnp.asarray(start, jnp.int32)),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class SimState:
+    """The lax.scan carry: the entire fabric + protocol state."""
+
+    # queues (SoA ring buffers)
+    q_flow: jax.Array   # [Q, C] int32, -1 empty
+    q_psn: jax.Array    # [Q, C] int32
+    q_ev: jax.Array     # [Q, C] int32
+    q_meta: jax.Array   # [Q, C] int32
+    q_tsent: jax.Array  # [Q, C] int32
+    q_head: jax.Array   # [Q] int32
+    q_len: jax.Array    # [Q] int32
+    # sender state
+    next_psn: jax.Array     # [F] int32
+    inflight: jax.Array     # [F] int32
+    src_track: pds.PSNTracker  # ACK tracking at the source (base = CACK)
+    rtx: jax.Array          # [F, W] uint32 retransmit bitmap (rel. to base)
+    last_progress: jax.Array  # [F] int32
+    slot_last_ack: jax.Array  # [F, K] int32, EV-based loss detection
+    # receiver state
+    dst_track: pds.PSNTracker
+    last_ooo_nack: jax.Array  # [F] int32
+    # congestion control + LB
+    nscc: nscc_mod.NSCCState
+    rccc: RCCCState
+    lb: LBState
+    # control-TC delay ring
+    ev_type: jax.Array   # [D, E] int32
+    ev_flow: jax.Array   # [D, E] int32
+    ev_psn: jax.Array    # [D, E] int32
+    ev_val: jax.Array    # [D, E] int32 (EV of the packet)
+    ev_ecn: jax.Array    # [D, E] int32 (ECN bit seen)
+    ev_tsent: jax.Array  # [D, E] int32
+    # stats
+    delivered: jax.Array  # [F] int32 packets delivered (first copies)
+    trims: jax.Array      # [] int32
+    drops: jax.Array      # [] int32
+    dups: jax.Array       # [] int32
+    retransmits: jax.Array  # [] int32
+
+
+def _first_set_bit(ring: jax.Array) -> jax.Array:
+    """Per-row index of the lowest set bit of a [N, W] uint32 ring, or -1."""
+    nz = ring != 0
+    has = nz.any(axis=1)
+    W = ring.shape[1]
+    first_w = jnp.argmax(nz, axis=1)
+    w = ring[jnp.arange(ring.shape[0]), first_w]
+    lsb = w & (jnp.uint32(0) - w)
+    ctz = pds._popcount32(lsb - jnp.uint32(1))
+    return jnp.where(has, first_w * 32 + ctz, -1).astype(jnp.int32)
+
+
+def _clear_bit(ring: jax.Array, row: jax.Array, off: jax.Array,
+               valid: jax.Array) -> jax.Array:
+    safe = jnp.where(valid, row, ring.shape[0])
+    word = jnp.clip(off, 0, ring.shape[1] * 32 - 1) // 32
+    bit = jnp.uint32(1) << (jnp.clip(off, 0, ring.shape[1] * 32 - 1) % 32).astype(jnp.uint32)
+    cur = ring[jnp.where(valid, row, 0), word]
+    return ring.at[safe, word].set(cur & ~bit, mode="drop")
+
+
+def _set_bits(ring: jax.Array, row: jax.Array, off: jax.Array,
+              valid: jax.Array) -> jax.Array:
+    """OR-scatter bits (duplicate-safe, like pds.record_rx)."""
+    N, W = ring.shape
+    ok = valid & (off >= 0) & (off < W * 32)
+    word = jnp.clip(off, 0, W * 32 - 1) // 32
+    bitpos = jnp.clip(off, 0, W * 32 - 1) % 32
+    plane = jnp.zeros((N, W, 32), jnp.bool_)
+    plane = plane.at[jnp.where(ok, row, N), word, bitpos].set(True, mode="drop")
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = (plane.astype(jnp.uint32) * weights[None, None, :]).sum(
+        axis=-1, dtype=jnp.uint32)
+    return ring | packed
+
+
+def init_state(g: QueueGraph, wl: Workload, p: SimParams) -> SimState:
+    Q, C = g.num_queues, p.queue_capacity
+    F = wl.src.shape[0]
+    D = p.ack_return_ticks + 1
+    E = 2 * Q + 2 * F
+    W = p.mp_range // 32
+    nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    return SimState(
+        q_flow=jnp.full((Q, C), -1, jnp.int32),
+        q_psn=jnp.zeros((Q, C), jnp.int32),
+        q_ev=jnp.zeros((Q, C), jnp.int32),
+        q_meta=jnp.zeros((Q, C), jnp.int32),
+        q_tsent=jnp.zeros((Q, C), jnp.int32),
+        q_head=jnp.zeros((Q,), jnp.int32),
+        q_len=jnp.zeros((Q,), jnp.int32),
+        next_psn=jnp.zeros((F,), jnp.int32),
+        inflight=jnp.zeros((F,), jnp.int32),
+        src_track=pds.PSNTracker.create(F, p.mp_range),
+        rtx=jnp.zeros((F, W), jnp.uint32),
+        last_progress=jnp.zeros((F,), jnp.int32),
+        slot_last_ack=jnp.full((F, p.ev_slots), -1, jnp.int32),
+        dst_track=pds.PSNTracker.create(F, p.mp_range),
+        last_ooo_nack=jnp.full((F,), -10**6, jnp.int32),
+        nscc=nscc_mod.NSCCState.create(F, nparams),
+        rccc=RCCCState.create(F, p.max_cwnd),
+        lb=LBState.create(F, p.ev_slots),
+        ev_type=jnp.zeros((D, E), jnp.int32),
+        ev_flow=jnp.zeros((D, E), jnp.int32),
+        ev_psn=jnp.zeros((D, E), jnp.int32),
+        ev_val=jnp.zeros((D, E), jnp.int32),
+        ev_ecn=jnp.zeros((D, E), jnp.int32),
+        ev_tsent=jnp.zeros((D, E), jnp.int32),
+        delivered=jnp.zeros((F,), jnp.int32),
+        trims=jnp.int32(0), drops=jnp.int32(0), dups=jnp.int32(0),
+        retransmits=jnp.int32(0),
+    )
+
+
+def _rank_within(target: jax.Array, valid: jax.Array, n_targets: int,
+                 base: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """For candidate lanes with target queue ids, compute each lane's
+    arrival rank within its target and the resulting queue position.
+
+    Returns (pos, order_key) where pos[i] = base[target[i]] + rank.
+    """
+    n = target.shape[0]
+    t = jnp.where(valid, target, n_targets)  # invalid -> sentinel bucket
+    order = jnp.argsort(t, stable=True)
+    t_sorted = t[order]
+    idx = jnp.arange(n)
+    seg_start = jnp.concatenate(
+        [jnp.array([0]), jnp.cumsum((t_sorted[1:] != t_sorted[:-1]))])
+    # first index of each segment
+    is_first = jnp.concatenate(
+        [jnp.array([True]), t_sorted[1:] != t_sorted[:-1]])
+    first_idx = jnp.where(is_first, idx, 0)
+    first_idx = jax.lax.associative_scan(jnp.maximum, first_idx)
+    rank_sorted = idx - first_idx
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    pos = base[jnp.where(valid, target, 0)] + rank
+    return pos, rank
+
+
+def make_step(g: QueueGraph, wl: Workload, p: SimParams):
+    """Build the jitted per-tick transition function."""
+    rt = RoutingTables(g)
+    F = int(wl.src.shape[0])
+    Q = g.num_queues
+    C = p.queue_capacity
+    D = p.ack_return_ticks + 1
+    E = 2 * Q + 2 * F
+    H = g.num_hosts
+    K = p.ev_slots
+    nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    lb_scheme = LBScheme.STATIC if p.mode == TransportMode.ROD else p.lb
+    is_rod = p.mode == TransportMode.ROD
+    is_rudi = p.mode == TransportMode.RUDI
+    host_q = jnp.asarray(g.host_queue)
+
+    flow_src = wl.src
+    flow_dst = wl.dst
+
+    def step(s: SimState, tick: jax.Array):
+        slot = tick % D
+
+        # ------------------------------------------------ 1. control events
+        et = s.ev_type[slot]
+        ef = s.ev_flow[slot]
+        ep = s.ev_psn[slot]
+        ee = s.ev_val[slot]
+        ec = s.ev_ecn[slot]
+        ets = s.ev_tsent[slot]
+        is_ack = et == EV_ACK
+        is_nack = (et == EV_NACK) | (et == EV_OOO)
+
+        # ACKs: record at source, retire inflight, CC + LB feedback
+        src_track, fresh_ack = pds.record_rx(
+            s.src_track, ef, ep.astype(jnp.uint32), is_ack)
+        src_track, adv = pds.advance_cack(src_track)
+        retire = jnp.zeros((F,), jnp.int32).at[
+            jnp.where(is_ack | is_nack, ef, F)].add(1, mode="drop")
+        inflight = jnp.maximum(s.inflight - retire, 0)
+        rtt = (tick - ets).astype(jnp.float32)
+        nst = nscc_mod.on_acks(s.nscc, nparams, ef, ec.astype(jnp.bool_),
+                               rtt, is_ack) if p.nscc else s.nscc
+        nst = nscc_mod.on_loss(nst, ef, jnp.ones_like(ef), is_nack) \
+            if p.nscc else nst
+        lbs = lb_on_ack(s.lb, lb_scheme, ef, ee,
+                        ec.astype(jnp.bool_) | is_nack, is_ack | is_nack)
+
+        # progress clock: any ACK freshens the flow
+        last_progress = s.last_progress.at[
+            jnp.where(is_ack, ef, F)].set(tick, mode="drop")
+
+        # ACK'd PSNs can't be pending retransmit anymore
+        rtx = s.rtx
+        ack_off = ep - src_track.base[jnp.where(is_ack, ef, 0)].astype(jnp.int32)
+        rtx = _clear_bit(rtx, ef, ack_off,
+                         is_ack & (ack_off >= 0) & (ack_off < rtx.shape[1] * 32))
+        # base advanced -> shift retransmit bitmap in lockstep
+        rtx = pds.shift_ring(rtx, adv)
+
+        # NACKs (trim / OOO): mark PSN for selective retransmit (RUD);
+        # ROD does go-back-N instead (handled at injection via next_psn).
+        nack_off = ep - src_track.base[jnp.where(is_nack, ef, 0)].astype(jnp.int32)
+        if not is_rod:
+            rtx = _set_bits(rtx, ef, nack_off, is_nack)
+        rod_gbn = jnp.zeros((F,), jnp.bool_).at[
+            jnp.where(is_nack, ef, F)].set(True, mode="drop")
+
+        # EV-based loss detection (Sec. 3.2.4), RR_SLOTS layout:
+        # slot i carries PSNs i, i+K, i+2K...; an ACK for PSN x implies
+        # every unacked PSN x-K, x-2K... in the same slot was lost.
+        slot_last_ack = s.slot_last_ack
+        if p.lb == LBScheme.RR_SLOTS and not is_rod:
+            sl = ep % K
+            prev = slot_last_ack[jnp.where(is_ack, ef, 0), jnp.where(is_ack, sl, 0)]
+            # mark up to 2 predecessors (losses per ACK are almost always <=1)
+            for back in (1, 2):
+                miss = ep - back * K
+                off = miss - src_track.base[jnp.where(is_ack, ef, 0)].astype(jnp.int32)
+                # skip PSNs already SACKed at the source (not actually lost)
+                w_i = jnp.clip(off, 0, rtx.shape[1] * 32 - 1)
+                sacked = (src_track.ring[jnp.where(is_ack, ef, 0), w_i // 32]
+                          >> (w_i % 32).astype(jnp.uint32)) & jnp.uint32(1)
+                lost = is_ack & (miss > prev) & (miss >= 0) & (sacked == 0)
+                rtx = _set_bits(rtx, ef, off, lost & (off >= 0))
+            slot_last_ack = slot_last_ack.at[
+                jnp.where(is_ack, ef, F), jnp.where(is_ack, sl, 0)].max(
+                ep, mode="drop")
+
+        # consume the slot
+        ev_type = s.ev_type.at[slot].set(jnp.zeros((E,), jnp.int32))
+
+        # ------------------------------------------- 2. RCCC receiver grants
+        done = src_track.base.astype(jnp.int32) >= wl.size
+        rcc = s.rccc
+        if p.rccc:
+            active = ~done & (tick >= wl.start)
+            rcc = grant_credits(rcc, flow_dst, active, H)
+
+        # --------------------------------------------------- 3. injection
+        has_rtx = (rtx != 0).any(axis=1) if not is_rod else jnp.zeros((F,), jnp.bool_)
+        # ROD go-back-N: on NACK or timeout, rewind next_psn to base
+        next_psn = s.next_psn
+        if is_rod:
+            timeout_rod = (inflight > 0) & (tick - last_progress > p.timeout_ticks)
+            rewind = rod_gbn | timeout_rod
+            next_psn = jnp.where(rewind, src_track.base.astype(jnp.int32), next_psn)
+            inflight = jnp.where(rewind, 0, inflight)
+            last_progress = jnp.where(rewind, tick, last_progress)
+
+        window = jnp.floor(nst.cwnd).astype(jnp.int32) if p.nscc \
+            else jnp.full((F,), int(p.max_cwnd), jnp.int32)
+        win_ok = inflight < window
+        if p.rccc:
+            win_ok = win_ok & (rcc.balance >= 1.0)
+        mp_ok = (next_psn - src_track.base.astype(jnp.int32)) < p.mp_range
+        can_new = (next_psn < wl.size) & mp_ok
+        eligible = (tick >= wl.start) & ~done & win_ok & (has_rtx | can_new)
+
+        # fair per-host pick: per-tick pseudo-random rotation, flow id in
+        # the low bits so exactly one winner exists per host
+        from repro.core.lb.schemes import _mix32
+        rot = (_mix32(jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(2654435761)
+                      ^ tick.astype(jnp.uint32)) >> 16).astype(jnp.int32)
+        key = rot * F + jnp.arange(F)
+        key = jnp.where(eligible, key, jnp.int32(2 ** 30))
+        host_min = jnp.full((H,), 2 ** 30, jnp.int32).at[flow_src].min(key)
+        injected = eligible & (key == host_min[flow_src]) & (key < 2 ** 30)
+
+        rtx_off = _first_set_bit(rtx)
+        rtx_psn = src_track.base.astype(jnp.int32) + rtx_off
+        use_rtx = injected & has_rtx & (rtx_off >= 0)
+        psn_out = jnp.where(use_rtx, rtx_psn, next_psn)
+        rtx = _clear_bit(rtx, jnp.arange(F), rtx_off, use_rtx)
+        next_psn = jnp.where(injected & ~use_rtx, next_psn + 1, next_psn)
+
+        lbs2, ev_sel = select_ev(lbs, lb_scheme, psn_out.astype(jnp.uint32), tick)
+        lbs = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(
+                injected.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
+            lbs, lbs2)
+        inj_q = rt.injection_queue(flow_src, flow_dst, ev_sel)
+        inflight = inflight + injected.astype(jnp.int32)
+        if p.rccc:
+            rcc = replace(rcc, balance=rcc.balance - injected.astype(jnp.float32))
+        retransmits = s.retransmits + use_rtx.sum(dtype=jnp.int32)
+
+        # ------------------------------------------------- 4. forwarding
+        qidx = jnp.arange(Q)
+        nonempty = s.q_len > 0
+        hpos = s.q_head
+        pf = s.q_flow[qidx, hpos]
+        pp = s.q_psn[qidx, hpos]
+        pe = s.q_ev[qidx, hpos]
+        pm = s.q_meta[qidx, hpos]
+        pt = s.q_tsent[qidx, hpos]
+        # egress ECN marking: queue length at departure above threshold
+        mark = nonempty & (s.q_len > p.ecn_threshold)
+        pm = jnp.where(mark, pm | META_ECN, pm)
+        q_head = jnp.where(nonempty, (s.q_head + 1) % C, s.q_head)
+        q_len = jnp.where(nonempty, s.q_len - 1, s.q_len)
+
+        safe_pf = jnp.where(nonempty, pf, 0)
+        nq = rt.route_step(qidx, flow_src[safe_pf], flow_dst[safe_pf], pe)
+        deliver = nonempty & (nq == DELIVERED)
+        forward = nonempty & (nq >= 0)
+
+        # --------------------------------------------- 5. delivery at FEPs
+        dtrim = deliver & ((pm & META_TRIMMED) != 0)
+        ddata = deliver & ~dtrim
+        dst_track, fresh = pds.record_rx(
+            s.dst_track, safe_pf, pp.astype(jnp.uint32), ddata)
+        dst_track, _ = pds.advance_cack(dst_track)
+        dups = s.dups + (ddata & ~fresh).sum(dtype=jnp.int32)
+        delivered_ctr = s.delivered.at[jnp.where(ddata & fresh, safe_pf, F)].add(
+            1, mode="drop")
+        if is_rudi:
+            # idempotent ops: re-applied duplicates also count as delivered
+            delivered_ctr = delivered_ctr  # (payload applied; stats keep first-copy)
+        if p.rccc:
+            from repro.core.cms.rccc import mark_seen
+            rcc = mark_seen(rcc, safe_pf, deliver)
+
+        # ------------------------------------- 6. OOO-count loss inference
+        ooo_fire = jnp.zeros((F,), jnp.bool_)
+        if p.ooo_threshold > 0:
+            dist = pds.ooo_distance(dst_track)
+            due = (dist > p.ooo_threshold) & (
+                tick - s.last_ooo_nack > jnp.int32(p.base_rtt))
+            ooo_fire = due
+        last_ooo_nack = jnp.where(ooo_fire, tick, s.last_ooo_nack)
+
+        # ------------------------------------------------- 7. enqueue phase
+        # candidates: forwarded packets (Q lanes) + injections (F lanes)
+        cand_q = jnp.concatenate([jnp.where(forward, nq, -1),
+                                  jnp.where(injected, inj_q, -1)])
+        cand_flow = jnp.concatenate([pf, jnp.arange(F)])
+        cand_psn = jnp.concatenate([pp, psn_out])
+        cand_ev = jnp.concatenate([pe, ev_sel])
+        cand_meta = jnp.concatenate([pm, jnp.zeros((F,), jnp.int32)])
+        cand_ts = jnp.concatenate([pt, jnp.full((F,), 1, jnp.int32) * tick])
+        cvalid = cand_q >= 0
+        if p.failed_queues:
+            dead = jnp.zeros((Q + 1,), jnp.bool_)
+            for fq in p.failed_queues:
+                dead = dead.at[fq].set(True)
+            is_dead = dead[jnp.where(cvalid, cand_q, Q)]
+            cvalid = cvalid & ~is_dead
+        else:
+            is_dead = None
+        pos, _ = _rank_within(cand_q, cvalid, Q, q_len)
+        fits = cvalid & (pos < C)
+        overflow = cvalid & ~fits
+
+        wslot = (q_head[jnp.where(cvalid, cand_q, 0)] + pos) % C
+        tq = jnp.where(fits, cand_q, Q)
+        q_flow = s.q_flow.at[tq, wslot].set(cand_flow, mode="drop")
+        q_psn = s.q_psn.at[tq, wslot].set(cand_psn, mode="drop")
+        q_ev = s.q_ev.at[tq, wslot].set(cand_ev, mode="drop")
+        q_meta = s.q_meta.at[tq, wslot].set(cand_meta, mode="drop")
+        q_tsent = s.q_tsent.at[tq, wslot].set(cand_ts, mode="drop")
+        added = jnp.zeros((Q,), jnp.int32).at[
+            jnp.where(fits, cand_q, Q)].add(1, mode="drop")
+        q_len = q_len + added
+
+        # overflow: trim (fast NACK via control TC) or drop
+        if p.trimming:
+            trims = s.trims + overflow.sum(dtype=jnp.int32)
+            drops = s.drops
+            nack_mask = overflow
+        else:
+            trims = s.trims
+            drops = s.drops + overflow.sum(dtype=jnp.int32)
+            nack_mask = jnp.zeros_like(overflow)
+        if is_dead is not None:
+            # failed links drop silently: no trim header, no NACK — only
+            # timeout / EV-based inference recovers (Sec. 3.2.4 config drops)
+            drops = drops + is_dead.sum(dtype=jnp.int32)
+
+        # ------------------------------------------- 8. schedule control TC
+        out_slot = (tick + p.ack_return_ticks) % D
+        # lanes [0, Q): ACKs from deliveries
+        ack_lane_t = jnp.where(ddata, EV_ACK, EV_NONE)
+        # lanes [Q, Q + (Q+F)): trim NACKs from enqueue overflow
+        nack_lane_t = jnp.where(nack_mask, EV_NACK, EV_NONE)
+        # lanes [2Q+F, 2Q+2F): OOO NACKs (psn = receiver base = first gap)
+        ooo_lane_t = jnp.where(ooo_fire, EV_OOO, EV_NONE)
+        new_type = jnp.concatenate([ack_lane_t, nack_lane_t, ooo_lane_t])
+        new_flow = jnp.concatenate([safe_pf, cand_flow, jnp.arange(F)])
+        new_psn = jnp.concatenate(
+            [pp, cand_psn, dst_track.base.astype(jnp.int32)])
+        new_val = jnp.concatenate([pe, cand_ev, jnp.zeros((F,), jnp.int32)])
+        new_ecn = jnp.concatenate(
+            [((pm & META_ECN) != 0).astype(jnp.int32),
+             jnp.zeros((Q + F,), jnp.int32), jnp.zeros((F,), jnp.int32)])
+        new_ts = jnp.concatenate([pt, cand_ts, jnp.zeros((F,), jnp.int32)])
+        ev_type = ev_type.at[out_slot].set(new_type)
+        ev_flow = s.ev_flow.at[out_slot].set(new_flow)
+        ev_psn = s.ev_psn.at[out_slot].set(new_psn)
+        ev_val = s.ev_val.at[out_slot].set(new_val)
+        ev_ecn = s.ev_ecn.at[out_slot].set(new_ecn)
+        ev_tsent = s.ev_tsent.at[out_slot].set(new_ts)
+
+        # ------------------------------------------------- 9. timeouts + QA
+        if not is_rod:
+            stalled = (inflight > 0) & (tick - last_progress > p.timeout_ticks) \
+                & ~done
+            rtx = _set_bits(rtx, jnp.arange(F), jnp.zeros((F,), jnp.int32),
+                            stalled)  # offset 0 == oldest unacked PSN
+            # a timeout implies the outstanding packets are gone (dropped
+            # without trim); reset the inflight estimate so the window
+            # reopens — otherwise non-trimmed drops leak inflight forever.
+            inflight = jnp.where(stalled, 0, inflight)
+            last_progress = jnp.where(stalled, tick, last_progress)
+            nst = nscc_mod.on_loss(nst, jnp.arange(F), jnp.ones((F,), jnp.int32),
+                                   stalled) if p.nscc else nst
+        if p.nscc:
+            nst = nscc_mod.quick_adapt(nst, nparams, tick)
+
+        ns = SimState(
+            q_flow=q_flow, q_psn=q_psn, q_ev=q_ev, q_meta=q_meta,
+            q_tsent=q_tsent, q_head=q_head, q_len=q_len,
+            next_psn=next_psn, inflight=inflight, src_track=src_track,
+            rtx=rtx, last_progress=last_progress, slot_last_ack=slot_last_ack,
+            dst_track=dst_track, last_ooo_nack=last_ooo_nack,
+            nscc=nst, rccc=rcc, lb=lbs,
+            ev_type=ev_type, ev_flow=ev_flow, ev_psn=ev_psn, ev_val=ev_val,
+            ev_ecn=ev_ecn, ev_tsent=ev_tsent,
+            delivered=delivered_ctr, trims=trims, drops=drops, dups=dups,
+            retransmits=retransmits,
+        )
+        out = {
+            "delivered": jnp.zeros((F,), jnp.int32).at[
+                jnp.where(ddata & fresh, safe_pf, F)].add(1, mode="drop"),
+            "cwnd": nst.cwnd,
+            "qlen_max": q_len.max(),
+        }
+        return ns, out
+
+    return step
+
+
+@dataclass(frozen=True)
+class SimResult:
+    state: SimState
+    delivered_per_tick: np.ndarray  # [T, F]
+    cwnd_per_tick: np.ndarray       # [T, F]
+    qlen_max: np.ndarray            # [T]
+
+    def completion_tick(self) -> np.ndarray:
+        """First tick by which each flow's full message was delivered."""
+        cum = self.delivered_per_tick.cumsum(axis=0)
+        size = cum[-1]
+        reached = cum >= size[None, :]
+        return np.where(reached.any(0), reached.argmax(axis=0), -1)
+
+    def goodput(self, window: tuple[int, int] | None = None) -> np.ndarray:
+        """Per-flow delivered packets / tick over a window (fraction of
+        line rate, since line rate == 1 packet/tick)."""
+        d = self.delivered_per_tick
+        if window is not None:
+            d = d[window[0]:window[1]]
+        return d.mean(axis=0)
+
+
+def simulate(g: QueueGraph, wl: Workload, p: SimParams) -> SimResult:
+    """Run the fabric for p.ticks; returns dense per-tick stats."""
+    step = make_step(g, wl, p)
+    s0 = init_state(g, wl, p)
+
+    @jax.jit
+    def run(s0):
+        return jax.lax.scan(step, s0, jnp.arange(p.ticks, dtype=jnp.int32))
+
+    final, outs = run(s0)
+    return SimResult(
+        state=jax.device_get(final),
+        delivered_per_tick=np.asarray(outs["delivered"]),
+        cwnd_per_tick=np.asarray(outs["cwnd"]),
+        qlen_max=np.asarray(outs["qlen_max"]),
+    )

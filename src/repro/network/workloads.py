@@ -1,0 +1,99 @@
+"""Canonical traffic patterns (Fig. 7 and friends).
+
+Each builder returns (QueueGraph, Workload, dict of expectations). The
+expectations encode the paper's quantitative claims so benchmarks/tests can
+assert against them:
+
+* incast (Fig. 7, group 4): j,k,l,m -> i. RCCC assigns 25% each — optimal.
+* outcast (Fig. 7, group 1): o -> p,q,r,v plus w -> v. The sender o can
+  only source 25% per flow; RCCC at v blindly grants 50/50, wasting 25% of
+  v's ingress — w *could* get 75%. NSCC converges to ~75%.
+* in-network (Fig. 7, groups 2/3): 12 pairs across a 3:1-oversubscribed
+  uplink set deliver 33% each; a same-leaf flow into one of the receivers
+  could take 67% but RCCC grants it only 50%.
+* permutation: all-to-all-shifted full-rate traffic — the spraying /
+  polarization benchmark (Sec. 2.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.network.fabric import Workload
+from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
+
+
+def incast(fan_in: int = 4, size: int = 600):
+    """`fan_in` senders on distinct leaves -> one destination host."""
+    g = leaf_spine(leaves=fan_in + 1, spines=4, hosts_per_leaf=4)
+    dst = 0  # host 0 on leaf 0
+    srcs = [4 * (l + 1) for l in range(fan_in)]  # first host of other leaves
+    wl = Workload.of(srcs, [dst] * fan_in, size)
+    return g, wl, {"share": 1.0 / fan_in}
+
+
+def outcast(fan_out: int = 4, size: int = 500):
+    """One source o -> `fan_out` dests; plus w -> v (v also fed by o).
+
+    Hosts: o = 0 (leaf 0); dests p,q,r on leaves 1..3; v on leaf 4;
+    w = host on leaf 5. Flow layout: flows 0..3 from o, flow 4 = w->v.
+    """
+    g = leaf_spine(leaves=6, spines=4, hosts_per_leaf=4)
+    o = 0
+    dests = [4, 8, 12, 16][:fan_out]  # p, q, r, v
+    v = dests[-1]
+    w = 20
+    src = [o] * fan_out + [w]
+    dst = dests + [v]
+    wl = Workload.of(src, dst, size)
+    return g, wl, {
+        "o_share": 1.0 / fan_out,      # o fair-shares its uplink
+        "rccc_w_share": 0.5,            # RCCC blindly grants v's ingress 50/50
+        "nscc_w_share": 1.0 - 1.0 / fan_out,  # NSCC lets w fill the rest (75%)
+    }
+
+
+def in_network(pairs: int = 12, uplinks: int = 4, size: int = 500):
+    """`pairs` cross-leaf flows share `uplinks` spine links (3:1 oversub),
+    plus one same-leaf flow into one of the receivers.
+
+    Two leaves with `pairs` hosts each + `uplinks` spines. Flow i: host i on
+    leaf 0 -> host i on leaf 1. Extra flow: another host on leaf 1 -> host 0
+    on leaf 1 (same-leaf, bypasses the fabric bottleneck).
+    """
+    hosts_per_leaf = pairs + 1
+    g = leaf_spine(leaves=2, spines=uplinks, hosts_per_leaf=hosts_per_leaf)
+    src = [i for i in range(pairs)]
+    dst = [hosts_per_leaf + i for i in range(pairs)]
+    # same-leaf flow: last host of leaf 1 -> first host of leaf 1
+    src.append(hosts_per_leaf + pairs)
+    dst.append(hosts_per_leaf + 0)
+    wl = Workload.of(src, dst, size)
+    cross = uplinks / pairs
+    return g, wl, {
+        "cross_share": cross,                  # 4/12 = 33%
+        "rccc_local_share": 0.5,               # RCCC blind grant
+        "optimal_local_share": 1.0 - cross,    # 67%
+    }
+
+
+def permutation(k: int = 8, pods: int = 4, shift: int = 17, size: int = 400):
+    """Cross-pod permutation on the Fig. 2 fat tree: host i -> (i+shift)%H.
+
+    Full-bisection network: optimum is 100% per flow; static single-path
+    ECMP collides and polarizes, spraying restores near-full throughput.
+    """
+    g = fat_tree3(k=k, pods=pods)
+    H = g.num_hosts
+    src = list(range(H))
+    dst = [(i + shift) % H for i in range(H)]
+    wl = Workload.of(src, dst, size)
+    return g, wl, {"share": 1.0}
+
+
+def two_flow_collision(size: int = 400):
+    """Two cross-pod flows that *may* share a path depending on their EVs —
+    the Sec. 2.1 collision scenario (25% same-pod / 6.25% cross-pod)."""
+    g = fat_tree3(k=8, pods=4)
+    # same pod, different leaves: hosts 0 (leaf 0) and 5 (leaf 1) -> pod 1
+    wl = Workload.of([0, 5], [16, 21], size)
+    return g, wl, {}

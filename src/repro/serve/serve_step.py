@@ -1,0 +1,60 @@
+"""Serving: prefill + single-token decode steps.
+
+decode: one new token per sequence against a ring KV cache (full-context
+or sliding-window) / SSM state. The long-context (B=1) cells shard the KV
+sequence over "data" and use select-based ring writes (see
+distributed/sharding.py and models/layers.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                     select_write: bool = False, moe_token_spec=None,
+                     scan_layers: bool = True, attn_head_specs=None,
+                     sharded_cache_attn: bool = False):
+    """decode_step(params, cache, tokens [B,1], pos []) ->
+    (logits [B, vocab], cache')."""
+    fwd = lm.build_forward(cfg, mesh=mesh, dp_axes=dp_axes, decode=True,
+                           remat=False, select_write=select_write,
+                           moe_token_spec=moe_token_spec,
+                           scan_layers=scan_layers,
+                           attn_head_specs=attn_head_specs,
+                           sharded_cache_attn=sharded_cache_attn)
+
+    def decode_step(params, cache, tokens, pos):
+        logits, _, new_cache = fwd(params, tokens, cache=cache, pos0=pos)
+        return logits[:, -1], new_cache
+
+    return decode_step
+
+
+def make_prefill(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                 act_spec=None, moe_token_spec=None,
+                 scan_layers: bool = True, attn_head_specs=None):
+    """prefill(params, tokens [B, S]) -> logits of last position.
+
+    (The dry-run lowers prefill as a pure forward; cache extraction for
+    chained decode is exercised in the serving example at small scale.)
+    """
+    fwd = lm.build_forward(cfg, mesh=mesh, dp_axes=dp_axes, remat=False,
+                           act_spec=act_spec, moe_token_spec=moe_token_spec,
+                           scan_layers=scan_layers,
+                           attn_head_specs=attn_head_specs)
+
+    def prefill(params, tokens):
+        logits, _, _ = fwd(params, tokens)
+        return logits[:, -1]
+
+    return prefill
+
+
+def sample_greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
