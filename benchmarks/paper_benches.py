@@ -195,6 +195,28 @@ def bench_failure_mitigation():
     return rows
 
 
+def bench_failure_sweep_batched():
+    """REPS under every single-uplink failure at once: one vmapped scan
+    over (healthy + 4 single-failure) scenarios via simulate_batch —
+    the scenario-diversity story (each dead uplink must degrade to the
+    same 3-live-uplink optimum; the fabric is symmetric)."""
+    from repro.network.fabric import simulate_batch
+    g, wls, masks, exp = workloads.failure_sweep(spines=4, hosts_per_leaf=8)
+    p = SimParams(ticks=3000, nscc=True, lb=LBScheme.REPS,
+                  timeout_ticks=64, ooo_threshold=24)
+    results = simulate_batch(g, wls, p, failed=masks)
+    rows = [("sweep_goodput_healthy",
+             round(float(results[0].goodput((1500, 3000)).mean()), 3),
+             exp["healthy_share"], "no failures")]
+    deg = [float(r.goodput((1500, 3000)).mean()) for r in results[1:]]
+    rows.append(("sweep_goodput_degraded_mean", round(float(np.mean(deg)), 3),
+                 exp["degraded_share"], "mean over 4 single-uplink failures"))
+    rows.append(("sweep_goodput_degraded_spread",
+                 round(float(np.max(deg) - np.min(deg)), 3), None,
+                 "symmetry: all dead uplinks look alike"))
+    return rows
+
+
 ALL_BENCHES = [
     ("ecmp_collisions(Fig2/Sec2.1)", bench_ecmp_collisions),
     ("headers(Sec3.2.2/Fig3)", bench_headers),
@@ -204,4 +226,5 @@ ALL_BENCHES = [
     ("loss_detection(Sec3.2.4)", bench_loss_detection),
     ("collective_efficiency(netmodel)", bench_collective_efficiency),
     ("failure_mitigation(REPS[5])", bench_failure_mitigation),
+    ("failure_sweep_batched(REPS[5])", bench_failure_sweep_batched),
 ]

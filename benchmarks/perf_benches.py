@@ -1,0 +1,185 @@
+"""Fabric-simulator performance benchmarks: ticks/sec and scenarios/sec.
+
+Measures the hot path of the UET fabric engine in four configurations —
+
+* ``single``         — one compiled scan, one scenario (ticks/sec; the
+                       per-tick hot-path number the fused kernels moved);
+* ``serial_seed``    — B scenarios the way the *seed* architecture ran a
+                       sweep: the failure set was a static tuple closed
+                       over by jit, so EVERY scenario paid its own
+                       trace+compile before running. This is the baseline
+                       the batched engine exists to kill (and the
+                       acceptance comparison for scenarios/sec).
+* ``serial_shared``  — B sequential ``simulate`` calls on this PR's
+                       serial path (failure masks/seeds/workloads are
+                       traced, so one warm executable is reused). Reported
+                       for transparency: most of the sweep win is the
+                       recompile removal, the rest is vmap amortization.
+* ``batched``        — the same B scenarios in one ``simulate_batch``
+                       (vmapped scan, carry donated), cold and warm.
+
+Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
+accumulates across PRs.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
+       [--ticks 600] [--out BENCH_fabric.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _bench_config(ticks: int):
+    from repro.core.lb.schemes import LBScheme
+    from repro.network.fabric import SimParams, Workload
+    from repro.network.topology import leaf_spine
+
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    f = 8
+    wl = Workload.of(list(range(f)), [f + i for i in range(f)], 100000)
+    p = SimParams(ticks=ticks, nscc=True, lb=LBScheme.REPS,
+                  timeout_ticks=64, ooo_threshold=24)
+    return g, wl, p
+
+
+def _scenarios(g, wl, b: int):
+    """B scenarios: scenario i fails leaf-0 uplink (i mod spines) for odd
+    i and uses a distinct LB seed — a failure x seed sweep."""
+    from repro.network.fabric import DEFAULT_SEED, Workload
+
+    spines = g.up1_table.shape[1]
+    masks = np.zeros((b, g.num_queues), bool)
+    seeds = np.zeros((b,), np.uint32)
+    for i in range(b):
+        seeds[i] = DEFAULT_SEED + i
+        if i % 2 == 1:
+            masks[i, int(g.up1_table[0, i % spines])] = True
+    wls = Workload.stack([wl] * b)
+    return wls, masks, seeds
+
+
+def _seed_style_simulate(g, wl, p, mask, seed):
+    """One scenario the way the seed architecture ran it: the failure set
+    baked into the executable as a static constant, so this scenario's
+    run starts with its own trace+compile (no sharing across the sweep)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.network import fabric
+
+    F = int(wl.src.shape[0])
+    step = fabric.make_step(g, p, F)
+    dead_const = jnp.asarray(mask)
+
+    def scan_one(s0, wl_):
+        def body(s, tick):
+            return step(s, tick, wl_, dead_const)
+        return jax.lax.scan(body, s0, jnp.arange(p.ticks, dtype=jnp.int32))
+
+    run = jax.jit(scan_one, donate_argnums=(0,))
+    s0 = fabric.init_state(g, wl, p, jnp.uint32(seed))
+    final, outs = run(s0, wl)
+    return fabric._to_result(final, outs)
+
+
+def run_benches(b: int, ticks: int) -> dict:
+    import jax
+
+    from dataclasses import replace
+    from repro.network.fabric import simulate, simulate_batch
+
+    g, wl, p = _bench_config(ticks)
+    wls, masks, seeds = _scenarios(g, wl, b)
+    fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
+
+    results = {
+        "backend": jax.default_backend(),
+        "topology": g.name,
+        "flows": int(wl.src.shape[0]),
+        "ticks": ticks,
+        "scenarios": b,
+    }
+
+    # --- single scenario: compile + warm ticks/sec ---
+    t0 = time.perf_counter()
+    simulate(g, wl, p)
+    results["single_cold_s"] = time.perf_counter() - t0
+    warm = min(_timed(lambda: simulate(g, wl, p)) for _ in range(5))
+    results["single_warm_s"] = warm
+    results["ticks_per_sec_single"] = ticks / warm
+
+    # --- seed-style serial sweep: fresh executable per scenario ---
+    t0 = time.perf_counter()
+    for i in range(b):
+        _seed_style_simulate(g, wl, replace(p, failed_queues=fq[i]),
+                             masks[i], int(seeds[i]))
+    serial_seed = time.perf_counter() - t0
+    results["serial_seed_sweep_s"] = serial_seed
+    results["scenarios_per_sec_serial"] = b / serial_seed
+    results["serial_mode"] = ("per-scenario trace+compile (static failure "
+                              "set, the seed architecture)")
+
+    # --- shared-executable serial sweep: this PR's warm serial path ---
+    for i in range(2):  # warm
+        simulate(g, wl, replace(p, failed_queues=fq[i]), seed=int(seeds[i]))
+    t0 = time.perf_counter()
+    for i in range(b):
+        simulate(g, wl, replace(p, failed_queues=fq[i]), seed=int(seeds[i]))
+    serial_shared = time.perf_counter() - t0
+    results["serial_shared_sweep_s"] = serial_shared
+    results["scenarios_per_sec_serial_shared"] = b / serial_shared
+
+    # --- batched sweep: one simulate_batch() call ---
+    t0 = time.perf_counter()
+    simulate_batch(g, wls, p, failed=masks, seeds=seeds)
+    batched_cold = time.perf_counter() - t0
+    results["batched_cold_s"] = batched_cold
+    batched = min(_timed(
+        lambda: simulate_batch(g, wls, p, failed=masks, seeds=seeds))
+        for _ in range(3))
+    results["batched_sweep_s"] = batched
+    results["scenarios_per_sec_batched"] = b / batched
+    results["ticks_per_sec_batched"] = b * ticks / batched
+    # acceptance metric: one batched sweep (incl. its compile) vs the
+    # seed architecture's sweep (per-scenario compiles)
+    results["batch_speedup_vs_serial"] = serial_seed / batched_cold
+    results["batch_speedup_vs_serial_shared_warm"] = serial_shared / batched
+    return results
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=8)
+    ap.add_argument("--ticks", type=int, default=600)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_fabric.json"))
+    args = ap.parse_args()
+
+    results = run_benches(args.scenarios, args.ticks)
+    results["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    print(json.dumps(results, indent=2, sort_keys=True))
+    print(f"\nbatched sweep (cold, incl. compile) is "
+          f"{results['batch_speedup_vs_serial']:.1f}x the seed-style serial "
+          f"sweep; warm-vs-warm against the shared-executable serial loop it "
+          f"is {results['batch_speedup_vs_serial_shared_warm']:.2f}x; "
+          f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

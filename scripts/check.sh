@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Fast smoke gate: tier-1 tests minus the slow-marked heavies, plus the
+# header-stack paper bench as an import/consistency canary.
+#
+#   ./scripts/check.sh            # ~40s on a laptop CPU
+#
+# The full tier-1 gate (everything, including slow) stays
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests (minus slow) =="
+python -m pytest -x -q -m "not slow"
+
+echo "== paper bench smoke: header stacks =="
+python -m benchmarks.run --only headers
+
+echo "OK"

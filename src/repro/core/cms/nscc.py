@@ -126,6 +126,27 @@ def on_acks(state: NSCCState, params: NSCCParams, ccc: jax.Array,
     return replace(state, cwnd=cwnd, epoch_acked=acked)
 
 
+def on_ack_per_flow(state: NSCCState, params: NSCCParams, ecn: jax.Array,
+                    rtt: jax.Array, active: jax.Array) -> NSCCState:
+    """Dense variant of `on_acks` for the one-ACK-per-CCC-per-round case
+    (the fabric tick: one host downlink per destination): ecn/rtt/active
+    are [N] per-CCC lanes, so the update is pure elementwise — no
+    scatter. Matches `on_acks` exactly when each CCC has <= 1 valid lane.
+    """
+    delta = window_delta(state.cwnd, ecn, rtt.astype(jnp.float32), params)
+    cwnd = jnp.where(active, state.cwnd + delta, state.cwnd)
+    return replace(
+        state,
+        cwnd=jnp.clip(cwnd, params.min_cwnd, params.max_cwnd),
+        epoch_acked=state.epoch_acked + active.astype(jnp.int32),
+    )
+
+
+def on_loss_per_flow(state: NSCCState, count: jax.Array) -> NSCCState:
+    """Dense variant of `on_loss`: count [N] losses per CCC, elementwise."""
+    return replace(state, epoch_lost=state.epoch_lost + count)
+
+
 def on_loss(state: NSCCState, ccc: jax.Array, count: jax.Array,
             valid: jax.Array) -> NSCCState:
     """Record loss evidence (trim NACK / EV-inference / timeout) for QA."""

@@ -75,12 +75,15 @@ class LBState:
     salt: jax.Array
 
     @staticmethod
-    def create(f: int, k: int, seed: int = 0x5EED) -> "LBState":
+    def create(f: int, k: int, seed: int | jax.Array = 0x5EED) -> "LBState":
+        # seed may be a traced uint32 scalar: batched scenario sweeps vmap
+        # over per-scenario seeds without recompiling
+        seed = jnp.asarray(seed).astype(jnp.uint32)
         flows = jnp.arange(f, dtype=jnp.uint32)
         # per-flow, per-slot initial EVs: well-mixed distinct values
         slot_ev = _mix32(flows[:, None] * jnp.uint32(977) +
                          jnp.arange(k, dtype=jnp.uint32)[None, :] +
-                         jnp.uint32(seed)) % EV_SPACE
+                         seed) % EV_SPACE
         return LBState(
             rr_ptr=jnp.zeros((f,), jnp.int32),
             reps_ring=jnp.full((f, k), -1, jnp.int32),
@@ -88,7 +91,7 @@ class LBState:
             reps_size=jnp.zeros((f,), jnp.int32),
             ev_set=slot_ev.astype(jnp.int32),
             cong_bits=jnp.zeros((f, k), jnp.bool_),
-            salt=_mix32(flows + jnp.uint32(seed * 2654435761 & 0xFFFFFFFF)),
+            salt=_mix32(flows + seed * jnp.uint32(2654435761)),
         )
 
 
@@ -152,6 +155,26 @@ def commit_selection(old: LBState, new: LBState, injected: jax.Array) -> LBState
     return LBState(*(pick(a, b) for a, b in
                      zip(jax.tree_util.tree_leaves(old),
                          jax.tree_util.tree_leaves(new))))
+
+
+def reps_recycle(state: LBState, ev: jax.Array,
+                 valid: jax.Array) -> LBState:
+    """Per-flow REPS recycle: push one clean-ACK EV per flow.
+
+    ev, valid: [F] — the fabric's dense feedback path. Clean ACKs arrive
+    at most once per flow per tick (one host downlink per destination),
+    so the ring push is pure elementwise + one-hot work, no scatter.
+    Equivalent to `on_ack(..., scheme=REPS)` restricted to those lanes.
+    """
+    F, K = state.ev_set.shape
+    push = valid & (state.reps_size < K)
+    pos = (state.reps_head + state.reps_size) % K
+    hot = (jnp.arange(K)[None, :] == pos[:, None]) & push[:, None]
+    return replace(
+        state,
+        reps_ring=jnp.where(hot, ev[:, None], state.reps_ring),
+        reps_size=state.reps_size + push.astype(jnp.int32),
+    )
 
 
 def on_ack(state: LBState, scheme: LBScheme, flow: jax.Array, ev: jax.Array,

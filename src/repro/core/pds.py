@@ -63,38 +63,70 @@ class PSNTracker:
         return self.ring.shape[1] * WORD
 
 
+def or_mask(ring: jax.Array, row: jax.Array, off: jax.Array,
+            valid: jax.Array,
+            unique_rows: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Build the uint32 OR-mask a batch of lanes wants to set in `ring`.
+
+    ring: [N, W] uint32; row, off: [B] int32 (off = bit offset within the
+    row's window); valid: [B] bool. Out-of-window offsets are dropped.
+    Returns (mask [N, W] uint32, already [B] bool) where `already` flags
+    lanes whose bit is set in `ring` before this batch.
+
+    The mask is built with a direct scatter-add of single-bit words —
+    no [N, W, 32] boolean plane. Addition equals OR because each kept
+    lane contributes a bit that is (a) not already in `ring` and (b) not
+    contributed by any other kept lane: exact-duplicate (row, off) lanes
+    are deduplicated by a first-lane-wins claim scatter. Callers that
+    guarantee at most one lane per row (most fabric call sites are
+    structurally unique) pass unique_rows=True to skip the claim pass.
+    """
+    N, W = ring.shape
+    mp = W * WORD
+    ok = valid & (off >= 0) & (off < mp)
+    o = jnp.clip(off, 0, mp - 1)
+    safe_row = jnp.where(ok, row, 0)
+    word = o // WORD
+    bit = jnp.uint32(1) << (o % WORD).astype(jnp.uint32)
+    already = (ring[safe_row, word] & bit) != 0
+    keep = ok & ~already
+    if not unique_rows:
+        # first-lane-wins on the exact (row, bit-offset) key so duplicate
+        # lanes add the same power of two only once: a pairwise earlier-
+        # lane-same-key test — O(B^2) fused bools, no [N, mp] claim buffer
+        B = row.shape[0]
+        key = jnp.where(keep, safe_row * mp + o, -1)
+        lane = jnp.arange(B)
+        dup = ((key[None, :] == key[:, None])
+               & (lane[None, :] < lane[:, None])).any(axis=1)
+        keep = keep & ~dup
+    idx = jnp.where(keep, safe_row * W + word, N * W)  # OOB => dropped
+    mask = jnp.zeros((N * W,), jnp.uint32).at[idx].add(
+        jnp.where(keep, bit, jnp.uint32(0)), mode="drop")
+    return mask.reshape(N, W), already
+
+
 def record_rx(t: PSNTracker, pdc: jax.Array, psn: jax.Array,
-              valid: jax.Array) -> tuple[PSNTracker, jax.Array]:
+              valid: jax.Array,
+              unique_rows: bool = False) -> tuple[PSNTracker, jax.Array]:
     """Record a batch of arriving packets.
 
     pdc, psn: int32/uint32 [B]; valid: bool [B] (False = no packet in lane).
     Returns (tracker', accepted [B] bool) — accepted means in-range and not
-    a duplicate.
+    a duplicate. Duplicate-safe by default; unique_rows=True skips the
+    dedup pass when the caller guarantees at most one valid lane per PDC.
+    (The fabric tick no longer routes through record_rx — its receive
+    path is densified per-flow; this stays the general batch API.)
     """
     mp = t.mp_range
-    off = (psn.astype(jnp.uint32) - t.base[pdc]).astype(jnp.uint32)
+    off = (psn.astype(jnp.uint32) - t.base[jnp.where(valid, pdc, 0)])
     in_range = (off < mp) & valid
-    word = (off // WORD).astype(jnp.int32)
-    bitpos = (off % WORD).astype(jnp.int32)
-    bit = jnp.uint32(1) << bitpos.astype(jnp.uint32)
-    safe_pdc = jnp.where(valid, pdc, 0)
-    safe_word = jnp.where(in_range, word, 0)
-    already = (t.ring[safe_pdc, safe_word] & bit) != 0
+    mask, already = or_mask(t.ring, pdc, off.astype(jnp.int32), in_range,
+                            unique_rows=unique_rows)
     fresh = in_range & ~already
-
-    # OR-scatter with potentially duplicate (pdc, word) indices: scatter into
-    # a boolean bit plane (set(True) is idempotent under duplicates), then
-    # pack the plane back into uint32 words and OR onto the ring. Invalid
-    # lanes are routed out of bounds and dropped.
-    N, W = t.ring.shape
-    plane = jnp.zeros((N, W, WORD), jnp.bool_)
-    drop_pdc = jnp.where(in_range, safe_pdc, N)  # OOB => dropped
-    plane = plane.at[drop_pdc, safe_word, bitpos].set(True, mode="drop")
-    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
-    packed = (plane.astype(jnp.uint32) * weights[None, None, :]).sum(
-        axis=-1, dtype=jnp.uint32)
-    ring = t.ring | packed
+    ring = t.ring | mask
     one = jnp.uint32(1)
+    safe_pdc = jnp.where(valid, pdc, 0)
     return PSNTracker(
         base=t.base,
         ring=ring,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.cms.nscc import NSCCParams
+from repro.kernels import auto_interpret
 
 BLOCK_R = 64
 LANES = 128
@@ -51,7 +52,7 @@ def _nscc_kernel(cwnd_ref, ecn_ref, rtt_ref, count_ref, out_ref, *,
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def nscc_update(cwnd: jax.Array, ecn: jax.Array, rtt: jax.Array,
                 count: jax.Array, params: NSCCParams = NSCCParams(),
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Update N congestion windows in one fused VPU pass.
 
     Args:
@@ -60,8 +61,10 @@ def nscc_update(cwnd: jax.Array, ecn: jax.Array, rtt: jax.Array,
       rtt:   [N] float32    — measured RTT (ticks or µs, caller's choice;
                               must match params.base_rtt units)
       count: [N] int32      — ACKed packets this round (0 = no update)
-      interpret: run the kernel body in interpret mode (CPU validation).
+      interpret: run the kernel body in interpret mode (CPU validation);
+        None = auto (compiled on TPU, interpreted elsewhere).
     """
+    interpret = auto_interpret(interpret)
     n = cwnd.shape[0]
     rows = -(-n // LANES)
     pad = rows * LANES - n

@@ -1,39 +1,57 @@
 """Public jit'd entry points for the kernel package.
 
-``use_pallas=True`` routes to the Pallas kernels (interpret mode on CPU,
-compiled on TPU); ``False`` routes to the pure-jnp oracles in ref.py.
-The fabric simulator uses the oracles by default on CPU (XLA fuses them
-well there); on a TPU deployment the Pallas path is the fast one.
+Every op has a Pallas kernel and a pure-jnp oracle (ref.py); dispatch is
+``use_pallas``:
+
+* ``None`` (default) — auto: Pallas on TPU (compiled), jnp oracle on CPU,
+  where XLA fuses the reference well and Pallas interpret mode would be
+  the silent slow path.
+* ``True`` — force the Pallas kernel (interpret mode off-TPU, for
+  validation).
+* ``False`` — force the jnp oracle.
+
+The fabric simulator calls these on its per-tick hot path, so the auto
+default is what makes a TPU deployment run the fused kernels.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.core.cms.nscc import NSCCParams
-from repro.kernels import ref
+from repro.kernels import ON_TPU as _ON_TPU, ref
 from repro.kernels.ecmp_hash import ecmp_select as _ecmp_pallas
 from repro.kernels.nscc_update import nscc_update as _nscc_pallas
 from repro.kernels.sack_bitmap import sack_advance as _sack_pallas
+from repro.kernels.sack_fused import sack_fused as _sack_fused_pallas
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _use_pallas(use_pallas: bool | None) -> bool:
+    return _ON_TPU if use_pallas is None else use_pallas
 
 
 def nscc_update(cwnd, ecn, rtt, count, params: NSCCParams = NSCCParams(),
-                use_pallas: bool = False):
-    if use_pallas:
+                use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
         return _nscc_pallas(cwnd, ecn, rtt, count, params,
                             interpret=not _ON_TPU)
     return ref.nscc_update_ref(cwnd, ecn, rtt, count, params)
 
 
-def sack_advance(ring, base, use_pallas: bool = False):
-    if use_pallas:
+def sack_advance(ring, base, use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
         return _sack_pallas(ring, base, interpret=not _ON_TPU)
     return ref.sack_advance_ref(ring, base)
 
 
-def ecmp_select(src, dst, ev, salt, fanout: int, use_pallas: bool = False):
-    if use_pallas:
+def sack_fused(ring, base, rtx, mask, use_pallas: bool | None = None):
+    """Fused record-rx OR + CACK advance + dual ring shift (Sec. 3.2.5)."""
+    if _use_pallas(use_pallas):
+        return _sack_fused_pallas(ring, base, rtx, mask,
+                                  interpret=not _ON_TPU)
+    return ref.sack_fused_ref(ring, base, rtx, mask)
+
+
+def ecmp_select(src, dst, ev, salt, fanout: int,
+                use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
         return _ecmp_pallas(src, dst, ev, salt, fanout,
                             interpret=not _ON_TPU)
     return ref.ecmp_hash_ref(src, dst, ev, salt, fanout)

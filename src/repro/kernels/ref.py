@@ -42,3 +42,17 @@ def ecmp_hash_ref(src: jax.Array, dst: jax.Array, ev: jax.Array,
                   salt: jax.Array, fanout: int) -> jax.Array:
     """Batched ECMP port selection: H(fields) mod fanout (Sec. 2.1)."""
     return (ecmp_hash(src, dst, ev, salt) % jnp.uint32(fanout)).astype(jnp.int32)
+
+
+def sack_fused_ref(ring: jax.Array, base: jax.Array, rtx: jax.Array,
+                   mask: jax.Array):
+    """Fused SACK hot path (Sec. 3.2.5): record-rx OR-apply, CACK advance,
+    and lockstep shift of the SACK ring and the retransmit-pending bitmap.
+
+    ring, rtx, mask: [N, W] uint32; base: [N] uint32.
+    Returns (new_ring, new_base, new_rtx, advanced[int32]).
+    """
+    ring = ring | mask
+    adv = trailing_ones(ring)
+    return (shift_ring(ring, adv), base + adv.astype(jnp.uint32),
+            shift_ring(rtx, adv), adv)

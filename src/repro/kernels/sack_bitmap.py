@@ -24,15 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.pds import _popcount32
+from repro.kernels import auto_interpret
+
 BLOCK_R = 64
 WORD = 32
-
-
-def _popcount32(x):
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
 
 
 def _sack_kernel(ring_ref, base_ref, ring_out_ref, base_out_ref, adv_ref,
@@ -84,13 +80,14 @@ def _sack_kernel(ring_ref, base_ref, ring_out_ref, base_out_ref, adv_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sack_advance(ring: jax.Array, base: jax.Array,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """CACK-advance every PDC's SACK ring.
 
     ring: [N, W] uint32 (W <= 32 words = up to 1024-PSN MP_RANGE window)
     base: [N] uint32
     Returns (new_ring, new_base, advanced[int32]).
     """
+    interpret = auto_interpret(interpret)
     n, w = ring.shape
     assert w <= 128
     rows = -(-n // BLOCK_R) * BLOCK_R

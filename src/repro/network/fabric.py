@@ -9,6 +9,16 @@ structure-of-arrays, and a tick is a pure function stepped by
 the paper's protocol: what a hardware UET NIC does per packet, the
 simulator does per *vector of flows* per tick.
 
+The engine runs in two modes:
+
+* ``simulate`` — one (workload, params) scenario per call;
+* ``simulate_batch`` — a whole scenario sweep (different workloads, LB
+  seeds, failure sets) ``vmap``-ed over a leading scenario axis, so an
+  entire failure or incast sweep is ONE compiled ``scan``. Workloads,
+  seeds and failed-queue masks are traced inputs: sweeping them never
+  recompiles. Per-lane results are bitwise identical to serial
+  ``simulate`` calls.
+
 Modeled faithfully (paper sections in parens):
 
 * ECMP spraying with per-packet EVs through a real Clos topology (2.1)
@@ -31,7 +41,6 @@ headers travel on the control TC (elevated priority per the spec).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +49,12 @@ import numpy as np
 from repro.core import pds
 from repro.core.cms import nscc as nscc_mod
 from repro.core.cms.rccc import RCCCState, grant_credits
+from repro.core.lb import schemes as lb_schemes
 from repro.core.lb.schemes import LBScheme, LBState, select_ev, on_ack as lb_on_ack
 from repro.core.types import TransportMode
+from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
-from repro.network.topology import QueueGraph, Stage
+from repro.network.topology import QueueGraph
 
 # packet meta bits
 META_TRIMMED = 1
@@ -51,6 +62,15 @@ META_ECN = 2
 
 # event types
 EV_NONE, EV_ACK, EV_NACK, EV_OOO = 0, 1, 2, 3
+
+# packed packet-field lanes of SimState.q_pkt (one scatter/gather moves a
+# whole packet record instead of five scalar planes)
+PKT_FLOW, PKT_PSN, PKT_EV, PKT_META, PKT_TSENT, PKT_FIELDS = 0, 1, 2, 3, 4, 5
+# packed control-event lanes of SimState.ev_buf
+EVF_TYPE, EVF_FLOW, EVF_PSN, EVF_VAL, EVF_ECN, EVF_TSENT, EVF_FIELDS = \
+    0, 1, 2, 3, 4, 5, 6
+
+DEFAULT_SEED = 0x5EED
 
 
 @dataclass(frozen=True)
@@ -65,7 +85,9 @@ class SimParams:
     lb: LBScheme = LBScheme.OBLIVIOUS
     #: queue ids whose link is DOWN: packets routed into them are silently
     #: dropped (Configuration drops, Sec. 3.2.4) — the failure-mitigation
-    #: scenario for REPS (dead-path EVs never return and leave circulation)
+    #: scenario for REPS (dead-path EVs never return and leave circulation).
+    #: Converted to a *traced* per-queue mask before the run, so sweeping
+    #: failure sets (serially or via simulate_batch) never recompiles.
     failed_queues: tuple = ()
     nscc: bool = True
     rccc: bool = False
@@ -82,7 +104,11 @@ class SimParams:
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class Workload:
-    """Static flow set: src/dst host ids, message size (packets), start."""
+    """Flow set: src/dst host ids, message size (packets), start tick.
+
+    All fields are traced arrays — a Workload can carry a leading scenario
+    axis ([B, F]) for ``simulate_batch``; build one with ``Workload.stack``.
+    """
 
     src: jax.Array   # [F] int32
     dst: jax.Array   # [F] int32
@@ -100,18 +126,29 @@ class Workload:
                    else jnp.asarray(start, jnp.int32)),
         )
 
+    @staticmethod
+    def stack(wls: "list[Workload] | tuple[Workload, ...]") -> "Workload":
+        """Stack same-F workloads along a leading scenario axis ([B, F])."""
+        f = {int(w.src.shape[-1]) for w in wls}
+        if len(f) != 1:
+            raise ValueError(f"scenario batch needs a uniform flow count, "
+                             f"got {sorted(f)}")
+        return Workload(
+            src=jnp.stack([w.src for w in wls]),
+            dst=jnp.stack([w.dst for w in wls]),
+            size=jnp.stack([w.size for w in wls]),
+            start=jnp.stack([w.start for w in wls]),
+        )
+
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class SimState:
     """The lax.scan carry: the entire fabric + protocol state."""
 
-    # queues (SoA ring buffers)
-    q_flow: jax.Array   # [Q, C] int32, -1 empty
-    q_psn: jax.Array    # [Q, C] int32
-    q_ev: jax.Array     # [Q, C] int32
-    q_meta: jax.Array   # [Q, C] int32
-    q_tsent: jax.Array  # [Q, C] int32
+    # queues (ring buffers; packet records packed along the last axis so
+    # one enqueue scatter / dequeue gather moves whole packets)
+    q_pkt: jax.Array    # [Q, C, PKT_FIELDS] int32 (flow = -1 => empty)
     q_head: jax.Array   # [Q] int32
     q_len: jax.Array    # [Q] int32
     # sender state
@@ -128,13 +165,8 @@ class SimState:
     nscc: nscc_mod.NSCCState
     rccc: RCCCState
     lb: LBState
-    # control-TC delay ring
-    ev_type: jax.Array   # [D, E] int32
-    ev_flow: jax.Array   # [D, E] int32
-    ev_psn: jax.Array    # [D, E] int32
-    ev_val: jax.Array    # [D, E] int32 (EV of the packet)
-    ev_ecn: jax.Array    # [D, E] int32 (ECN bit seen)
-    ev_tsent: jax.Array  # [D, E] int32
+    # control-TC delay ring (packed: type/flow/psn/ev/ecn/tsent lanes)
+    ev_buf: jax.Array   # [D, E, EVF_FIELDS] int32
     # stats
     delivered: jax.Array  # [F] int32 packets delivered (first copies)
     trims: jax.Array      # [] int32
@@ -155,43 +187,51 @@ def _first_set_bit(ring: jax.Array) -> jax.Array:
     return jnp.where(has, first_w * 32 + ctz, -1).astype(jnp.int32)
 
 
-def _clear_bit(ring: jax.Array, row: jax.Array, off: jax.Array,
-               valid: jax.Array) -> jax.Array:
-    safe = jnp.where(valid, row, ring.shape[0])
-    word = jnp.clip(off, 0, ring.shape[1] * 32 - 1) // 32
-    bit = jnp.uint32(1) << (jnp.clip(off, 0, ring.shape[1] * 32 - 1) % 32).astype(jnp.uint32)
-    cur = ring[jnp.where(valid, row, 0), word]
-    return ring.at[safe, word].set(cur & ~bit, mode="drop")
+def _bit_plane(off: jax.Array, valid: jax.Array, w: int) -> jax.Array:
+    """[F, W] uint32 plane with row i's bit `off[i]` set (elementwise —
+    the dense replacement for a one-lane-per-row bit scatter)."""
+    o = jnp.clip(off, 0, w * 32 - 1)
+    wordsel = jnp.arange(w)[None, :] == (o // 32)[:, None]
+    bit = (jnp.uint32(1) << (o % 32).astype(jnp.uint32))[:, None]
+    ok = valid & (off >= 0) & (off < w * 32)
+    return jnp.where(ok[:, None] & wordsel, bit, jnp.uint32(0))
 
 
-def _set_bits(ring: jax.Array, row: jax.Array, off: jax.Array,
-              valid: jax.Array) -> jax.Array:
-    """OR-scatter bits (duplicate-safe, like pds.record_rx)."""
-    N, W = ring.shape
-    ok = valid & (off >= 0) & (off < W * 32)
-    word = jnp.clip(off, 0, W * 32 - 1) // 32
-    bitpos = jnp.clip(off, 0, W * 32 - 1) % 32
-    plane = jnp.zeros((N, W, 32), jnp.bool_)
-    plane = plane.at[jnp.where(ok, row, N), word, bitpos].set(True, mode="drop")
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    packed = (plane.astype(jnp.uint32) * weights[None, None, :]).sum(
-        axis=-1, dtype=jnp.uint32)
-    return ring | packed
+def _set_own_bit(ring: jax.Array, off: jax.Array,
+                 valid: jax.Array) -> jax.Array:
+    """Row i sets bit off[i] — elementwise, no scatter."""
+    return ring | _bit_plane(off, valid, ring.shape[1])
 
 
-def init_state(g: QueueGraph, wl: Workload, p: SimParams) -> SimState:
+def _clear_own_bit(ring: jax.Array, off: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """Row i clears bit off[i] — elementwise, no scatter."""
+    return ring & ~_bit_plane(off, valid, ring.shape[1])
+
+
+def _pick(hot: jax.Array, vals: jax.Array) -> jax.Array:
+    """Per-row value from <= 1 active lane: hot [R, L] bool, vals [L]."""
+    return jnp.sum(jnp.where(hot, vals[None, :], 0), axis=1)
+
+
+def _own_word(ring: jax.Array, off: jax.Array) -> jax.Array:
+    """Row i's ring word containing bit offset off[i] (clipped)."""
+    w = ring.shape[1]
+    word = jnp.clip(off, 0, w * 32 - 1) // 32
+    return jnp.take_along_axis(ring, word[:, None], axis=1)[:, 0]
+
+
+def init_state(g: QueueGraph, wl: Workload, p: SimParams,
+               seed: "int | jax.Array" = DEFAULT_SEED) -> SimState:
     Q, C = g.num_queues, p.queue_capacity
     F = wl.src.shape[0]
     D = p.ack_return_ticks + 1
     E = 2 * Q + 2 * F
     W = p.mp_range // 32
     nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    q_pkt = jnp.zeros((Q, C, PKT_FIELDS), jnp.int32).at[:, :, PKT_FLOW].set(-1)
     return SimState(
-        q_flow=jnp.full((Q, C), -1, jnp.int32),
-        q_psn=jnp.zeros((Q, C), jnp.int32),
-        q_ev=jnp.zeros((Q, C), jnp.int32),
-        q_meta=jnp.zeros((Q, C), jnp.int32),
-        q_tsent=jnp.zeros((Q, C), jnp.int32),
+        q_pkt=q_pkt,
         q_head=jnp.zeros((Q,), jnp.int32),
         q_len=jnp.zeros((Q,), jnp.int32),
         next_psn=jnp.zeros((F,), jnp.int32),
@@ -204,134 +244,185 @@ def init_state(g: QueueGraph, wl: Workload, p: SimParams) -> SimState:
         last_ooo_nack=jnp.full((F,), -10**6, jnp.int32),
         nscc=nscc_mod.NSCCState.create(F, nparams),
         rccc=RCCCState.create(F, p.max_cwnd),
-        lb=LBState.create(F, p.ev_slots),
-        ev_type=jnp.zeros((D, E), jnp.int32),
-        ev_flow=jnp.zeros((D, E), jnp.int32),
-        ev_psn=jnp.zeros((D, E), jnp.int32),
-        ev_val=jnp.zeros((D, E), jnp.int32),
-        ev_ecn=jnp.zeros((D, E), jnp.int32),
-        ev_tsent=jnp.zeros((D, E), jnp.int32),
+        lb=LBState.create(F, p.ev_slots, seed),
+        ev_buf=jnp.zeros((D, E, EVF_FIELDS), jnp.int32),
         delivered=jnp.zeros((F,), jnp.int32),
         trims=jnp.int32(0), drops=jnp.int32(0), dups=jnp.int32(0),
         retransmits=jnp.int32(0),
     )
 
 
-def _rank_within(target: jax.Array, valid: jax.Array, n_targets: int,
+def _rank_within(target: jax.Array, valid: jax.Array,
                  base: jax.Array) -> tuple[jax.Array, jax.Array]:
     """For candidate lanes with target queue ids, compute each lane's
     arrival rank within its target and the resulting queue position.
 
-    Returns (pos, order_key) where pos[i] = base[target[i]] + rank.
+    Segment-count scheme: rank[i] = #{j < i : target[j] == target[i] and
+    valid[j]} via a masked pairwise count — a few fused vector passes
+    instead of the per-tick stable argsort the seed used (XLA sorts are
+    slow on CPU and batch poorly under vmap).
+
+    Returns (pos, rank) where pos[i] = base[target[i]] + rank.
     """
     n = target.shape[0]
-    t = jnp.where(valid, target, n_targets)  # invalid -> sentinel bucket
-    order = jnp.argsort(t, stable=True)
-    t_sorted = t[order]
-    idx = jnp.arange(n)
-    seg_start = jnp.concatenate(
-        [jnp.array([0]), jnp.cumsum((t_sorted[1:] != t_sorted[:-1]))])
-    # first index of each segment
-    is_first = jnp.concatenate(
-        [jnp.array([True]), t_sorted[1:] != t_sorted[:-1]])
-    first_idx = jnp.where(is_first, idx, 0)
-    first_idx = jax.lax.associative_scan(jnp.maximum, first_idx)
-    rank_sorted = idx - first_idx
-    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    t = jnp.where(valid, target, -1)
+    lane = jnp.arange(n)
+    same = (t[None, :] == t[:, None]) & valid[None, :] \
+        & (lane[None, :] < lane[:, None])
+    rank = same.sum(axis=1, dtype=jnp.int32)
     pos = base[jnp.where(valid, target, 0)] + rank
     return pos, rank
 
 
-def make_step(g: QueueGraph, wl: Workload, p: SimParams):
-    """Build the jitted per-tick transition function."""
+def make_step(g: QueueGraph, p: SimParams, F: int):
+    """Build the per-tick transition function.
+
+    The returned ``step(s, tick, wl, dead)`` takes the workload and the
+    per-queue failure mask as *traced* arguments so one compiled step
+    serves every scenario of a sweep (and vmaps over a scenario axis).
+    """
     rt = RoutingTables(g)
-    F = int(wl.src.shape[0])
     Q = g.num_queues
     C = p.queue_capacity
     D = p.ack_return_ticks + 1
     E = 2 * Q + 2 * F
     H = g.num_hosts
     K = p.ev_slots
+    mp = p.mp_range
+    W = mp // 32
+    flow_ids = jnp.arange(F)
     nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
     lb_scheme = LBScheme.STATIC if p.mode == TransportMode.ROD else p.lb
     is_rod = p.mode == TransportMode.ROD
     is_rudi = p.mode == TransportMode.RUDI
-    host_q = jnp.asarray(g.host_queue)
 
-    flow_src = wl.src
-    flow_dst = wl.dst
-
-    def step(s: SimState, tick: jax.Array):
+    def step(s: SimState, tick: jax.Array, wl: Workload, dead: jax.Array):
+        flow_src = wl.src
+        flow_dst = wl.dst
         slot = tick % D
 
         # ------------------------------------------------ 1. control events
-        et = s.ev_type[slot]
-        ef = s.ev_flow[slot]
-        ep = s.ev_psn[slot]
-        ee = s.ev_val[slot]
-        ec = s.ev_ecn[slot]
-        ets = s.ev_tsent[slot]
+        evs = s.ev_buf[slot]                                  # [E, 6]
+        et = evs[:, EVF_TYPE]
+        ef = evs[:, EVF_FLOW]
+        ep = evs[:, EVF_PSN]
+        ee = evs[:, EVF_VAL]
+        ec = evs[:, EVF_ECN]
+        ets = evs[:, EVF_TSENT]
         is_ack = et == EV_ACK
         is_nack = (et == EV_NACK) | (et == EV_OOO)
 
-        # ACKs: record at source, retire inflight, CC + LB feedback
-        src_track, fresh_ack = pds.record_rx(
-            s.src_track, ef, ep.astype(jnp.uint32), is_ack)
-        src_track, adv = pds.advance_cack(src_track)
-        retire = jnp.zeros((F,), jnp.int32).at[
-            jnp.where(is_ack | is_nack, ef, F)].add(1, mode="drop")
+        # Per-flow densification of the ACK lanes: a flow's ACKs all come
+        # from its destination's single host downlink, so at most ONE ACK
+        # lane per flow is active per tick. That turns every ACK-driven
+        # update (SACK record, CC, LB, progress) into elementwise [F] or
+        # [F, W] work — one [F, E] one-hot is the only lane-wide pass.
+        # (NACK lanes stay lane-wise: several trims can hit one flow.)
+        hot_ack = (ef[None, :] == flow_ids[:, None]) & is_ack[None, :]
+        hot_nack = (ef[None, :] == flow_ids[:, None]) & is_nack[None, :]
+        has_ack = hot_ack.any(axis=1)
+        nack_count = hot_nack.sum(axis=1, dtype=jnp.int32)
+        ack_psn = _pick(hot_ack, ep)
+
+        # ACKs: record at source, advance CACK, shift the rtx ring in
+        # lockstep — the fused SACK hot path (kernels/sack_fused.py).
+        ack_off0 = (ack_psn.astype(jnp.uint32)
+                    - s.src_track.base).astype(jnp.int32)
+        ack_in_range = has_ack & (ack_off0 >= 0) & (ack_off0 < mp)
+        ack_bit = jnp.uint32(1) << (ack_off0 % 32).astype(jnp.uint32)
+        ack_already = ack_in_range & (
+            (_own_word(s.src_track.ring, ack_off0) & ack_bit) != 0)
+        ack_mask = _bit_plane(ack_off0, ack_in_range, W)
+        src_ring, src_base, rtx, adv = kops.sack_fused(
+            s.src_track.ring, s.src_track.base, s.rtx, ack_mask)
+        one = jnp.uint32(1)
+        src_track = pds.PSNTracker(
+            base=src_base, ring=src_ring,
+            rx_ok=s.src_track.rx_ok + jnp.where(
+                ack_in_range & ~ack_already, one, 0),
+            dup=s.src_track.dup + jnp.where(ack_already, one, 0),
+            oor=s.src_track.oor + jnp.where(
+                has_ack & ~ack_in_range, one, 0),
+        )
+
+        # retire inflight, CC + LB feedback
+        retire = has_ack.astype(jnp.int32) + nack_count
         inflight = jnp.maximum(s.inflight - retire, 0)
-        rtt = (tick - ets).astype(jnp.float32)
-        nst = nscc_mod.on_acks(s.nscc, nparams, ef, ec.astype(jnp.bool_),
-                               rtt, is_ack) if p.nscc else s.nscc
-        nst = nscc_mod.on_loss(nst, ef, jnp.ones_like(ef), is_nack) \
-            if p.nscc else nst
-        lbs = lb_on_ack(s.lb, lb_scheme, ef, ee,
-                        ec.astype(jnp.bool_) | is_nack, is_ack | is_nack)
+        ack_ecn = _pick(hot_ack, ec).astype(jnp.bool_)
+        rtt = (tick - _pick(hot_ack, ets)).astype(jnp.float32)
+        nst = s.nscc
+        if p.nscc:
+            nst = nscc_mod.on_ack_per_flow(nst, nparams, ack_ecn, rtt,
+                                           has_ack)
+            nst = nscc_mod.on_loss_per_flow(nst, nack_count)
+        if lb_scheme == LBScheme.REPS:
+            # recycle EVs that came back on clean (un-marked) ACKs
+            hot_clean = hot_ack & (ec[None, :] == 0)
+            lbs = lb_schemes.reps_recycle(
+                s.lb, _pick(hot_clean, ee), hot_clean.any(axis=1))
+        elif lb_scheme == LBScheme.EVBITMAP:
+            lbs = lb_on_ack(s.lb, lb_scheme, ef, ee,
+                            ec.astype(jnp.bool_) | is_nack, is_ack | is_nack)
+        else:
+            lbs = s.lb  # STATIC / OBLIVIOUS / RR take no path feedback
 
         # progress clock: any ACK freshens the flow
-        last_progress = s.last_progress.at[
-            jnp.where(is_ack, ef, F)].set(tick, mode="drop")
+        last_progress = jnp.where(has_ack, tick, s.last_progress)
 
-        # ACK'd PSNs can't be pending retransmit anymore
-        rtx = s.rtx
-        ack_off = ep - src_track.base[jnp.where(is_ack, ef, 0)].astype(jnp.int32)
-        rtx = _clear_bit(rtx, ef, ack_off,
-                         is_ack & (ack_off >= 0) & (ack_off < rtx.shape[1] * 32))
-        # base advanced -> shift retransmit bitmap in lockstep
-        rtx = pds.shift_ring(rtx, adv)
+        # ACK'd PSNs can't be pending retransmit anymore (rtx was already
+        # shifted by the fused op, so offsets are relative to the new base)
+        ack_off = ack_psn - src_track.base.astype(jnp.int32)
+        rtx = _clear_own_bit(rtx, ack_off, has_ack)
 
         # NACKs (trim / OOO): mark PSN for selective retransmit (RUD);
         # ROD does go-back-N instead (handled at injection via next_psn).
-        nack_off = ep - src_track.base[jnp.where(is_nack, ef, 0)].astype(jnp.int32)
+        # Several NACKs may hit one flow, so this stays lane-wise — but
+        # as a dense bitwise-OR fold over the NACK-capable lanes (ACK
+        # lanes [0, Q) never carry NACKs), not a scatter: OR is naturally
+        # duplicate-safe, so no dedup or already-set pass is needed.
+        nf, nep = ef[Q:], ep[Q:]
+        n_nack = is_nack[Q:]
+        nack_off = nep - src_track.base[jnp.where(n_nack, nf, 0)].astype(jnp.int32)
         if not is_rod:
-            rtx = _set_bits(rtx, ef, nack_off, is_nack)
-        rod_gbn = jnp.zeros((F,), jnp.bool_).at[
-            jnp.where(is_nack, ef, F)].set(True, mode="drop")
+            n_ok = n_nack & (nack_off >= 0) & (nack_off < mp)
+            no = jnp.clip(nack_off, 0, mp - 1)
+            nbit = jnp.where(n_ok, jnp.uint32(1) << (no % 32).astype(jnp.uint32),
+                             jnp.uint32(0))
+            hot_n = (nf[None, :] == flow_ids[:, None]) & n_ok[None, :]
+            contrib = jnp.where(
+                hot_n[:, None, :]
+                & ((no // 32)[None, None, :] == jnp.arange(W)[None, :, None]),
+                nbit[None, None, :], jnp.uint32(0))       # [F, W, E-Q]
+            rtx = rtx | jax.lax.reduce(contrib, jnp.uint32(0),
+                                       jax.lax.bitwise_or, (2,))
+        rod_gbn = hot_nack.any(axis=1)
 
         # EV-based loss detection (Sec. 3.2.4), RR_SLOTS layout:
         # slot i carries PSNs i, i+K, i+2K...; an ACK for PSN x implies
         # every unacked PSN x-K, x-2K... in the same slot was lost.
         slot_last_ack = s.slot_last_ack
         if p.lb == LBScheme.RR_SLOTS and not is_rod:
-            sl = ep % K
-            prev = slot_last_ack[jnp.where(is_ack, ef, 0), jnp.where(is_ack, sl, 0)]
+            sl = ack_psn % K
+            prev = jnp.take_along_axis(slot_last_ack, sl[:, None],
+                                       axis=1)[:, 0]
             # mark up to 2 predecessors (losses per ACK are almost always <=1)
             for back in (1, 2):
-                miss = ep - back * K
-                off = miss - src_track.base[jnp.where(is_ack, ef, 0)].astype(jnp.int32)
+                miss = ack_psn - back * K
+                off = miss - src_track.base.astype(jnp.int32)
                 # skip PSNs already SACKed at the source (not actually lost)
                 w_i = jnp.clip(off, 0, rtx.shape[1] * 32 - 1)
-                sacked = (src_track.ring[jnp.where(is_ack, ef, 0), w_i // 32]
+                sacked = (_own_word(src_track.ring, off)
                           >> (w_i % 32).astype(jnp.uint32)) & jnp.uint32(1)
-                lost = is_ack & (miss > prev) & (miss >= 0) & (sacked == 0)
-                rtx = _set_bits(rtx, ef, off, lost & (off >= 0))
-            slot_last_ack = slot_last_ack.at[
-                jnp.where(is_ack, ef, F), jnp.where(is_ack, sl, 0)].max(
-                ep, mode="drop")
+                lost = has_ack & (miss > prev) & (miss >= 0) & (sacked == 0)
+                rtx = _set_own_bit(rtx, off, lost)
+            hot_sl = (jnp.arange(K)[None, :] == sl[:, None]) & has_ack[:, None]
+            slot_last_ack = jnp.where(
+                hot_sl, jnp.maximum(slot_last_ack, ack_psn[:, None]),
+                slot_last_ack)
 
-        # consume the slot
-        ev_type = s.ev_type.at[slot].set(jnp.zeros((E,), jnp.int32))
+        # consume the slot (a whole-record clear is one dynamic-update-
+        # slice; stale non-type lanes were masked by type==NONE anyway)
+        ev_buf = s.ev_buf.at[slot].set(jnp.zeros((E, EVF_FIELDS), jnp.int32))
 
         # ------------------------------------------- 2. RCCC receiver grants
         done = src_track.base.astype(jnp.int32) >= wl.size
@@ -367,14 +458,15 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
                       ^ tick.astype(jnp.uint32)) >> 16).astype(jnp.int32)
         key = rot * F + jnp.arange(F)
         key = jnp.where(eligible, key, jnp.int32(2 ** 30))
-        host_min = jnp.full((H,), 2 ** 30, jnp.int32).at[flow_src].min(key)
+        hot_host = flow_src[None, :] == jnp.arange(H)[:, None]   # [H, F]
+        host_min = jnp.min(jnp.where(hot_host, key[None, :], 2 ** 30), axis=1)
         injected = eligible & (key == host_min[flow_src]) & (key < 2 ** 30)
 
         rtx_off = _first_set_bit(rtx)
         rtx_psn = src_track.base.astype(jnp.int32) + rtx_off
         use_rtx = injected & has_rtx & (rtx_off >= 0)
         psn_out = jnp.where(use_rtx, rtx_psn, next_psn)
-        rtx = _clear_bit(rtx, jnp.arange(F), rtx_off, use_rtx)
+        rtx = _clear_own_bit(rtx, rtx_off, use_rtx)
         next_psn = jnp.where(injected & ~use_rtx, next_psn + 1, next_psn)
 
         lbs2, ev_sel = select_ev(lbs, lb_scheme, psn_out.astype(jnp.uint32), tick)
@@ -392,11 +484,13 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
         qidx = jnp.arange(Q)
         nonempty = s.q_len > 0
         hpos = s.q_head
-        pf = s.q_flow[qidx, hpos]
-        pp = s.q_psn[qidx, hpos]
-        pe = s.q_ev[qidx, hpos]
-        pm = s.q_meta[qidx, hpos]
-        pt = s.q_tsent[qidx, hpos]
+        head_pkt = jnp.take_along_axis(
+            s.q_pkt, hpos[:, None, None], axis=1)[:, 0]        # [Q, 5]
+        pf = head_pkt[:, PKT_FLOW]
+        pp = head_pkt[:, PKT_PSN]
+        pe = head_pkt[:, PKT_EV]
+        pm = head_pkt[:, PKT_META]
+        pt = head_pkt[:, PKT_TSENT]
         # egress ECN marking: queue length at departure above threshold
         mark = nonempty & (s.q_len > p.ecn_threshold)
         pm = jnp.where(mark, pm | META_ECN, pm)
@@ -411,18 +505,35 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
         # --------------------------------------------- 5. delivery at FEPs
         dtrim = deliver & ((pm & META_TRIMMED) != 0)
         ddata = deliver & ~dtrim
-        dst_track, fresh = pds.record_rx(
-            s.dst_track, safe_pf, pp.astype(jnp.uint32), ddata)
-        dst_track, _ = pds.advance_cack(dst_track)
-        dups = s.dups + (ddata & ~fresh).sum(dtype=jnp.int32)
-        delivered_ctr = s.delivered.at[jnp.where(ddata & fresh, safe_pf, F)].add(
-            1, mode="drop")
+        # one host downlink per destination => at most one delivery per
+        # flow per tick: densify the [Q] delivery lanes to per-flow [F]
+        # values and the whole receive path goes elementwise (no scatter)
+        hot_d = (pf[None, :] == flow_ids[:, None]) & ddata[None, :]  # [F, Q]
+        has_d = hot_d.any(axis=1)
+        d_psn = _pick(hot_d, pp)
+        d_off = (d_psn.astype(jnp.uint32)
+                 - s.dst_track.base).astype(jnp.int32)
+        d_in_range = has_d & (d_off >= 0) & (d_off < mp)
+        d_bit = jnp.uint32(1) << (d_off % 32).astype(jnp.uint32)
+        d_already = d_in_range & (
+            (_own_word(s.dst_track.ring, d_off) & d_bit) != 0)
+        fresh_f = d_in_range & ~d_already
+        d_ring = s.dst_track.ring | _bit_plane(d_off, d_in_range, W)
+        d_ring, d_base, _ = kops.sack_advance(d_ring, s.dst_track.base)
+        dst_track = pds.PSNTracker(
+            base=d_base, ring=d_ring,
+            rx_ok=s.dst_track.rx_ok + jnp.where(fresh_f, one, 0),
+            dup=s.dst_track.dup + jnp.where(d_already, one, 0),
+            oor=s.dst_track.oor + jnp.where(has_d & ~d_in_range, one, 0),
+        )
+        dups = s.dups + (has_d & ~fresh_f).sum(dtype=jnp.int32)
+        delivered_ctr = s.delivered + fresh_f.astype(jnp.int32)
         if is_rudi:
             # idempotent ops: re-applied duplicates also count as delivered
             delivered_ctr = delivered_ctr  # (payload applied; stats keep first-copy)
         if p.rccc:
-            from repro.core.cms.rccc import mark_seen
-            rcc = mark_seen(rcc, safe_pf, deliver)
+            hot_seen = (pf[None, :] == flow_ids[:, None]) & deliver[None, :]
+            rcc = replace(rcc, seen=rcc.seen | hot_seen.any(axis=1))
 
         # ------------------------------------- 6. OOO-count loss inference
         ooo_fire = jnp.zeros((F,), jnp.bool_)
@@ -443,27 +554,20 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
         cand_meta = jnp.concatenate([pm, jnp.zeros((F,), jnp.int32)])
         cand_ts = jnp.concatenate([pt, jnp.full((F,), 1, jnp.int32) * tick])
         cvalid = cand_q >= 0
-        if p.failed_queues:
-            dead = jnp.zeros((Q + 1,), jnp.bool_)
-            for fq in p.failed_queues:
-                dead = dead.at[fq].set(True)
-            is_dead = dead[jnp.where(cvalid, cand_q, Q)]
-            cvalid = cvalid & ~is_dead
-        else:
-            is_dead = None
-        pos, _ = _rank_within(cand_q, cvalid, Q, q_len)
+        # failed links (traced mask): packets routed into them vanish
+        is_dead = dead[jnp.where(cvalid, cand_q, 0)] & cvalid
+        cvalid = cvalid & ~is_dead
+        pos, _ = _rank_within(cand_q, cvalid, q_len)
         fits = cvalid & (pos < C)
         overflow = cvalid & ~fits
 
         wslot = (q_head[jnp.where(cvalid, cand_q, 0)] + pos) % C
         tq = jnp.where(fits, cand_q, Q)
-        q_flow = s.q_flow.at[tq, wslot].set(cand_flow, mode="drop")
-        q_psn = s.q_psn.at[tq, wslot].set(cand_psn, mode="drop")
-        q_ev = s.q_ev.at[tq, wslot].set(cand_ev, mode="drop")
-        q_meta = s.q_meta.at[tq, wslot].set(cand_meta, mode="drop")
-        q_tsent = s.q_tsent.at[tq, wslot].set(cand_ts, mode="drop")
-        added = jnp.zeros((Q,), jnp.int32).at[
-            jnp.where(fits, cand_q, Q)].add(1, mode="drop")
+        cand_pkt = jnp.stack(
+            [cand_flow, cand_psn, cand_ev, cand_meta, cand_ts], axis=-1)
+        q_pkt = s.q_pkt.at[tq, wslot].set(cand_pkt, mode="drop")
+        hot_enq = (cand_q[None, :] == qidx[:, None]) & fits[None, :]  # [Q, n]
+        added = hot_enq.sum(axis=1, dtype=jnp.int32)
         q_len = q_len + added
 
         # overflow: trim (fast NACK via control TC) or drop
@@ -475,10 +579,9 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
             trims = s.trims
             drops = s.drops + overflow.sum(dtype=jnp.int32)
             nack_mask = jnp.zeros_like(overflow)
-        if is_dead is not None:
-            # failed links drop silently: no trim header, no NACK — only
-            # timeout / EV-based inference recovers (Sec. 3.2.4 config drops)
-            drops = drops + is_dead.sum(dtype=jnp.int32)
+        # failed links drop silently: no trim header, no NACK — only
+        # timeout / EV-based inference recovers (Sec. 3.2.4 config drops)
+        drops = drops + is_dead.sum(dtype=jnp.int32)
 
         # ------------------------------------------- 8. schedule control TC
         out_slot = (tick + p.ack_return_ticks) % D
@@ -497,44 +600,38 @@ def make_step(g: QueueGraph, wl: Workload, p: SimParams):
             [((pm & META_ECN) != 0).astype(jnp.int32),
              jnp.zeros((Q + F,), jnp.int32), jnp.zeros((F,), jnp.int32)])
         new_ts = jnp.concatenate([pt, cand_ts, jnp.zeros((F,), jnp.int32)])
-        ev_type = ev_type.at[out_slot].set(new_type)
-        ev_flow = s.ev_flow.at[out_slot].set(new_flow)
-        ev_psn = s.ev_psn.at[out_slot].set(new_psn)
-        ev_val = s.ev_val.at[out_slot].set(new_val)
-        ev_ecn = s.ev_ecn.at[out_slot].set(new_ecn)
-        ev_tsent = s.ev_tsent.at[out_slot].set(new_ts)
+        ev_buf = ev_buf.at[out_slot].set(jnp.stack(
+            [new_type, new_flow, new_psn, new_val, new_ecn, new_ts],
+            axis=-1))
 
         # ------------------------------------------------- 9. timeouts + QA
         if not is_rod:
             stalled = (inflight > 0) & (tick - last_progress > p.timeout_ticks) \
                 & ~done
-            rtx = _set_bits(rtx, jnp.arange(F), jnp.zeros((F,), jnp.int32),
-                            stalled)  # offset 0 == oldest unacked PSN
+            rtx = _set_own_bit(rtx, jnp.zeros((F,), jnp.int32),
+                               stalled)  # offset 0 == oldest unacked PSN
             # a timeout implies the outstanding packets are gone (dropped
             # without trim); reset the inflight estimate so the window
             # reopens — otherwise non-trimmed drops leak inflight forever.
             inflight = jnp.where(stalled, 0, inflight)
             last_progress = jnp.where(stalled, tick, last_progress)
-            nst = nscc_mod.on_loss(nst, jnp.arange(F), jnp.ones((F,), jnp.int32),
-                                   stalled) if p.nscc else nst
+            if p.nscc:
+                nst = nscc_mod.on_loss_per_flow(nst, stalled.astype(jnp.int32))
         if p.nscc:
             nst = nscc_mod.quick_adapt(nst, nparams, tick)
 
         ns = SimState(
-            q_flow=q_flow, q_psn=q_psn, q_ev=q_ev, q_meta=q_meta,
-            q_tsent=q_tsent, q_head=q_head, q_len=q_len,
+            q_pkt=q_pkt, q_head=q_head, q_len=q_len,
             next_psn=next_psn, inflight=inflight, src_track=src_track,
             rtx=rtx, last_progress=last_progress, slot_last_ack=slot_last_ack,
             dst_track=dst_track, last_ooo_nack=last_ooo_nack,
             nscc=nst, rccc=rcc, lb=lbs,
-            ev_type=ev_type, ev_flow=ev_flow, ev_psn=ev_psn, ev_val=ev_val,
-            ev_ecn=ev_ecn, ev_tsent=ev_tsent,
+            ev_buf=ev_buf,
             delivered=delivered_ctr, trims=trims, drops=drops, dups=dups,
             retransmits=retransmits,
         )
         out = {
-            "delivered": jnp.zeros((F,), jnp.int32).at[
-                jnp.where(ddata & fresh, safe_pf, F)].add(1, mode="drop"),
+            "delivered": fresh_f.astype(jnp.int32),
             "cwnd": nst.cwnd,
             "qlen_max": q_len.max(),
         }
@@ -566,19 +663,113 @@ class SimResult:
         return d.mean(axis=0)
 
 
-def simulate(g: QueueGraph, wl: Workload, p: SimParams) -> SimResult:
-    """Run the fabric for p.ticks; returns dense per-tick stats."""
-    step = make_step(g, wl, p)
-    s0 = init_state(g, wl, p)
+# --------------------------------------------------------------------------
+# scenario engine: compiled-run cache + single and batched entry points
+# --------------------------------------------------------------------------
 
-    @jax.jit
-    def run(s0):
-        return jax.lax.scan(step, s0, jnp.arange(p.ticks, dtype=jnp.int32))
+#: compiled scan cache. Keyed on (topology identity, params minus the
+#: failure set, flow count, batch mode): workloads, seeds and failure
+#: masks are traced, so scenario sweeps reuse one executable. `id(g)` is
+#: part of the key because the compiled step bakes in g's wiring tables
+#: — two graphs sharing a name must not share an executable. (The cached
+#: closure keeps `g` alive via its RoutingTables, so a live entry's id
+#: can't be recycled by a different graph.)
+_RUN_CACHE: dict = {}
 
-    final, outs = run(s0)
+
+def _cache_key(g: QueueGraph, p: SimParams, F: int, batched: bool):
+    return (id(g), g.name, replace(p, failed_queues=()), F, batched)
+
+
+def _get_fns(g: QueueGraph, p: SimParams, F: int, batched: bool):
+    """(jitted init, jitted scan) pair. The scan donates the carry (`s0`
+    buffers are reused in place); init is compiled so scenario setup
+    costs microseconds, not eager-dispatch milliseconds."""
+    key = _cache_key(g, p, F, batched)
+    fns = _RUN_CACHE.get(key)
+    if fns is None:
+        step = make_step(g, p, F)
+
+        def init_one(wl, seed):
+            return init_state(g, wl, p, seed)
+
+        def scan_one(s0, wl, dead):
+            def body(s, tick):
+                return step(s, tick, wl, dead)
+            return jax.lax.scan(body, s0, jnp.arange(p.ticks, dtype=jnp.int32))
+
+        if batched:
+            init_one, scan_one = jax.vmap(init_one), jax.vmap(scan_one)
+        fns = (jax.jit(init_one), jax.jit(scan_one, donate_argnums=(0,)))
+        _RUN_CACHE[key] = fns
+    return fns
+
+
+def _dead_mask(g: QueueGraph, p: SimParams) -> np.ndarray:
+    dead = np.zeros((g.num_queues,), bool)
+    for fq in p.failed_queues:
+        dead[fq] = True
+    return dead
+
+
+def _to_result(final: SimState, outs: dict) -> SimResult:
     return SimResult(
         state=jax.device_get(final),
         delivered_per_tick=np.asarray(outs["delivered"]),
         cwnd_per_tick=np.asarray(outs["cwnd"]),
         qlen_max=np.asarray(outs["qlen_max"]),
     )
+
+
+def simulate(g: QueueGraph, wl: Workload, p: SimParams,
+             seed: int = DEFAULT_SEED) -> SimResult:
+    """Run the fabric for p.ticks; returns dense per-tick stats."""
+    F = int(wl.src.shape[0])
+    init, run = _get_fns(g, p, F, batched=False)
+    s0 = init(wl, jnp.uint32(seed))
+    final, outs = run(s0, wl, jnp.asarray(_dead_mask(g, p)))
+    return _to_result(final, outs)
+
+
+def simulate_batch(g: QueueGraph, wls: Workload, p: SimParams,
+                   failed: "np.ndarray | None" = None,
+                   seeds: "np.ndarray | None" = None) -> list[SimResult]:
+    """Run B scenarios in one compiled, vmapped scan.
+
+    wls:    Workload with a leading scenario axis ([B, F]); build with
+            ``Workload.stack`` or pass a list of same-F Workloads.
+    failed: optional [B, Q] bool — per-scenario failed-queue masks
+            (default: every scenario uses p.failed_queues).
+    seeds:  optional [B] — per-scenario LB/EV seeds (default: the same
+            DEFAULT_SEED every ``simulate`` call uses).
+
+    Returns one SimResult per scenario, bitwise identical to the
+    corresponding serial ``simulate`` call: the tick function is the same
+    compiled code, vmapped over the scenario axis with the carry donated.
+    """
+    if isinstance(wls, (list, tuple)):
+        wls = Workload.stack(wls)
+    B, F = wls.src.shape
+    init, run = _get_fns(g, p, F, batched=True)
+    if seeds is None:
+        seeds = np.full((B,), DEFAULT_SEED, np.uint32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    if failed is None:
+        failed = np.broadcast_to(_dead_mask(g, p), (B, g.num_queues))
+    dead = jnp.asarray(failed, bool)
+    if dead.shape != (B, g.num_queues):
+        raise ValueError(f"failed mask must be [B={B}, Q={g.num_queues}], "
+                         f"got {dead.shape}")
+    s0 = init(wls, seeds)
+    final, outs = run(s0, wls, dead)
+    final = jax.device_get(final)
+    outs = jax.device_get(outs)
+    return [
+        SimResult(
+            state=jax.tree_util.tree_map(lambda a: a[b], final),
+            delivered_per_tick=np.asarray(outs["delivered"][b]),
+            cwnd_per_tick=np.asarray(outs["cwnd"][b]),
+            qlen_max=np.asarray(outs["qlen_max"][b]),
+        )
+        for b in range(B)
+    ]

@@ -22,6 +22,47 @@ from repro.network.fabric import Workload
 from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
 
 
+# ------------------------------------------------------------------------
+# scenario sweeps (batched: feed to fabric.simulate_batch)
+# ------------------------------------------------------------------------
+
+def failure_sweep(spines: int = 4, hosts_per_leaf: int = 8,
+                  size: int = 100000):
+    """One scenario per failed leaf-0 uplink, plus a no-failure baseline.
+
+    The REPS failure-mitigation experiment (Sec. 3.2.4 configuration
+    drops) as a batch: scenario 0 is healthy; scenario 1+i kills uplink i.
+    Returns (g, wls [S+1, F], masks [S+1, Q], expectations).
+    """
+    g = leaf_spine(leaves=2, spines=spines, hosts_per_leaf=hosts_per_leaf)
+    f = hosts_per_leaf
+    wl = Workload.of(list(range(f)), [f + i for i in range(f)], size)
+    b = spines + 1
+    masks = np.zeros((b, g.num_queues), bool)
+    for i in range(spines):
+        masks[1 + i, int(g.up1_table[0, i])] = True
+    wls = Workload.stack([wl] * b)
+    live = (spines - 1) / spines
+    return g, wls, masks, {
+        "healthy_share": min(1.0, spines / f),
+        "degraded_share": live * spines / f,  # (S-1) live uplinks over F flows
+    }
+
+
+def size_sweep(sizes, fan_in: int = 4):
+    """Incast message-size sweep: same flow set, per-scenario sizes.
+
+    Message size is traced, so the whole sweep shares one executable.
+    Returns (g, wls [B, F], expectations).
+    """
+    g = leaf_spine(leaves=fan_in + 1, spines=4, hosts_per_leaf=4)
+    dst = 0
+    srcs = [4 * (l + 1) for l in range(fan_in)]
+    wls = Workload.stack(
+        [Workload.of(srcs, [dst] * fan_in, int(s)) for s in sizes])
+    return g, wls, {"share": 1.0 / fan_in}
+
+
 def incast(fan_in: int = 4, size: int = 600):
     """`fan_in` senders on distinct leaves -> one destination host."""
     g = leaf_spine(leaves=fan_in + 1, spines=4, hosts_per_leaf=4)

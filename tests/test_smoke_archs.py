@@ -44,6 +44,7 @@ def test_forward_and_decode(arch):
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+@pytest.mark.slow
 def test_train_step_reduces_shapes_and_is_finite(arch):
     cfg = configs.reduced(arch, seq=SEQ)
     key = jax.random.PRNGKey(1)

@@ -23,6 +23,7 @@ def test_incast_rccc_optimal_shares(incast_rccc):
     np.testing.assert_allclose(gp, exp["share"], atol=0.02)
 
 
+@pytest.mark.slow
 def test_outcast_rccc_blind_vs_nscc():
     """Fig. 7 group 1: RCCC grants w->v only 50% (waste); NSCC converges
     toward the 75% optimum."""
@@ -46,6 +47,7 @@ def test_in_network_rccc_grant():
     assert abs(gp[12] - exp["rccc_local_share"]) < 0.04
 
 
+@pytest.mark.slow
 def test_spraying_beats_static_ecmp():
     """Sec. 2.1: per-packet spraying avoids polarization; static
     single-path ECMP collapses under hash collisions."""
@@ -60,13 +62,14 @@ def test_spraying_beats_static_ecmp():
     assert res[LBScheme.REPS] > 0.9
 
 
+@pytest.mark.slow
 def test_trimming_recovers_faster_than_timeout():
     """Sec. 3.2.4: fast loss detection (trimming) beats timeout-only
     recovery on completion time. The burst must be SHORT so that recovery
     latency (not downlink capacity) dominates completion — a long incast
     is capacity-bound for both and hides the difference."""
     g, wl, _ = workloads.incast(8, size=48)
-    base = dict(ticks=2500, rccc=False, nscc=True, timeout_ticks=300)
+    base = dict(ticks=1500, rccc=False, nscc=True, timeout_ticks=300)
     r_trim = simulate(g, wl, SimParams(trimming=True, **base))
     r_drop = simulate(g, wl, SimParams(trimming=False, **base))
     ct_trim = r_trim.completion_tick()
@@ -99,6 +102,7 @@ def test_reliability_all_flows_complete_under_losses():
         np.asarray(r.state.delivered), np.asarray(wl.size))
 
 
+@pytest.mark.slow
 def test_reps_failure_mitigation():
     """REPS title claim: '...Adaptive Load Balancing and Failure
     Mitigation'. With one of 4 uplinks dead (silent Configuration drops,
