@@ -10,6 +10,7 @@ from repro.core.types import MsgProtocol, TransportMode
 from repro.network import workloads
 from repro.network.ecmp import RoutingTables
 from repro.network.fabric import SimParams, simulate
+from repro.network.profile import TransportProfile
 from repro.network.topology import paper_fig2
 
 import jax.numpy as jnp
@@ -93,26 +94,28 @@ def bench_messaging():
 
 
 def bench_congestion():
-    """Fig. 7: incast / outcast / in-network bandwidth shares."""
+    """Fig. 7: incast / outcast / in-network bandwidth shares.
+
+    RCCC-only == TransportProfile.ai_base(); NSCC-only == ai_full()."""
     rows = []
     g, wl, exp = workloads.incast(4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=1200, rccc=True, nscc=False))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=1200))
     rows.append(("incast_rccc_share", round(float(
         r.goodput((300, 1200)).mean()), 3), exp["share"],
         "4->1 incast, RCCC exact fair share"))
 
     g, wl, exp = workloads.outcast(4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
     rows.append(("outcast_rccc_w_share", round(float(
         r.goodput((800, 2500))[4]), 3), exp["rccc_w_share"],
         "RCCC blind grant wastes 25%"))
-    r = simulate(g, wl, SimParams(ticks=2500, rccc=False, nscc=True))
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500))
     rows.append(("outcast_nscc_w_share", round(float(
         r.goodput((1200, 2500))[4]), 3), exp["nscc_w_share"],
         "NSCC converges to the optimum"))
 
     g, wl, exp = workloads.in_network(12, 4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
     gp = r.goodput((800, 2500))
     rows.append(("innetwork_cross_share", round(float(gp[:12].mean()), 3),
                  exp["cross_share"], "12 flows over 4 uplinks"))
@@ -127,7 +130,8 @@ def bench_loadbalance():
     rows = []
     for scheme in (LBScheme.STATIC, LBScheme.OBLIVIOUS, LBScheme.RR_SLOTS,
                    LBScheme.REPS, LBScheme.EVBITMAP):
-        r = simulate(g, wl, SimParams(ticks=1500, nscc=True, lb=scheme))
+        r = simulate(g, wl, TransportProfile.ai_full(lb=scheme),
+                     SimParams(ticks=1500))
         gp = r.goodput((700, 1500))
         rows.append((f"perm_goodput_{scheme.name.lower()}",
                      round(float(gp.mean()), 3), None,
@@ -140,17 +144,19 @@ def bench_loss_detection():
     rows = []
     # short burst: recovery latency (not downlink capacity) dominates
     g, wl, _ = workloads.incast(8, size=48)
-    base = dict(ticks=2500, rccc=False, nscc=True, timeout_ticks=300)
-    r = simulate(g, wl, SimParams(trimming=True, **base))
-    rows.append(("completion_trimming", int(r.completion_tick().mean()),
+    prof = TransportProfile.ai_full()
+    base = dict(ticks=2500, timeout_ticks=300)
+    r = simulate(g, wl, prof, SimParams(trimming=True, **base))
+    rows.append(("completion_trimming", int(r.completion_ticks().mean()),
                  None, f"trims {int(r.state.trims)}"))
-    r = simulate(g, wl, SimParams(trimming=False, ooo_threshold=48, **base))
-    ct = r.completion_tick()
+    r = simulate(g, wl, prof, SimParams(trimming=False, ooo_threshold=48,
+                                        **base))
+    ct = r.completion_ticks()
     rows.append(("completion_ooo_count",
                  int(ct.mean()) if (ct >= 0).all() else -1, None,
                  f"drops {int(r.state.drops)}"))
-    r = simulate(g, wl, SimParams(trimming=False, **base))
-    ct = r.completion_tick()
+    r = simulate(g, wl, prof, SimParams(trimming=False, **base))
+    ct = r.completion_ticks()
     rows.append(("completion_timeout_only",
                  int(ct.mean()) if (ct >= 0).all() else -1, None,
                  f"drops {int(r.state.drops)} (-1 = unfinished)"))
@@ -185,9 +191,9 @@ def bench_failure_mitigation():
     dead = (int(g.up1_table[0, 0]),)
     rows = []
     for scheme in (LBScheme.OBLIVIOUS, LBScheme.REPS):
-        p = SimParams(ticks=3000, nscc=True, lb=scheme, failed_queues=dead,
-                      timeout_ticks=64, ooo_threshold=24)
-        r = simulate(g, wl, p)
+        p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
+        r = simulate(g, wl, TransportProfile.ai_full(lb=scheme), p,
+                     failed=dead)
         rows.append((f"fail_goodput_{scheme.name.lower()}",
                      round(float(r.goodput((1500, 3000)).mean()), 3),
                      0.375 if scheme == LBScheme.REPS else None,
@@ -202,9 +208,9 @@ def bench_failure_sweep_batched():
     same 3-live-uplink optimum; the fabric is symmetric)."""
     from repro.network.fabric import simulate_batch
     g, wls, masks, exp = workloads.failure_sweep(spines=4, hosts_per_leaf=8)
-    p = SimParams(ticks=3000, nscc=True, lb=LBScheme.REPS,
-                  timeout_ticks=64, ooo_threshold=24)
-    results = simulate_batch(g, wls, p, failed=masks)
+    p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
+    results = simulate_batch(g, wls, TransportProfile.ai_full(lb=LBScheme.REPS),
+                             p, failed=masks)
     rows = [("sweep_goodput_healthy",
              round(float(results[0].goodput((1500, 3000)).mean()), 3),
              exp["healthy_share"], "no failures")]

@@ -18,8 +18,13 @@ Measures the hot path of the UET fabric engine in four configurations —
 * ``batched``        — the same B scenarios in one ``simulate_batch``
                        (vmapped scan, carry donated), cold and warm.
 
+Also runs the profile-ablation sweep (ai_base / ai_full / hpc plus the
+NSCC-only / RCCC-only / hybrid CC ablation) as ONE ``simulate_batch``
+call — the engine groups the grid by distinct profile, one executable
+each — and records per-profile goodput under ``profile_ablation``.
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
-accumulates across PRs.
+accumulates across PRs (``api_version`` 2 == the TransportProfile API).
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
        [--ticks 600] [--out BENCH_fabric.json]
@@ -37,14 +42,15 @@ import numpy as np
 def _bench_config(ticks: int):
     from repro.core.lb.schemes import LBScheme
     from repro.network.fabric import SimParams, Workload
+    from repro.network.profile import TransportProfile
     from repro.network.topology import leaf_spine
 
     g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
     f = 8
     wl = Workload.of(list(range(f)), [f + i for i in range(f)], 100000)
-    p = SimParams(ticks=ticks, nscc=True, lb=LBScheme.REPS,
-                  timeout_ticks=64, ooo_threshold=24)
-    return g, wl, p
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=ticks, timeout_ticks=64, ooo_threshold=24)
+    return g, wl, prof, p
 
 
 def _scenarios(g, wl, b: int):
@@ -63,7 +69,7 @@ def _scenarios(g, wl, b: int):
     return wls, masks, seeds
 
 
-def _seed_style_simulate(g, wl, p, mask, seed):
+def _seed_style_simulate(g, wl, prof, p, mask, seed):
     """One scenario the way the seed architecture ran it: the failure set
     baked into the executable as a static constant, so this scenario's
     run starts with its own trace+compile (no sharing across the sweep)."""
@@ -73,7 +79,7 @@ def _seed_style_simulate(g, wl, p, mask, seed):
     from repro.network import fabric
 
     F = int(wl.src.shape[0])
-    step = fabric.make_step(g, p, F)
+    step = fabric.make_step(g, prof, p, F)
     dead_const = jnp.asarray(mask)
 
     def scan_one(s0, wl_):
@@ -82,65 +88,66 @@ def _seed_style_simulate(g, wl, p, mask, seed):
         return jax.lax.scan(body, s0, jnp.arange(p.ticks, dtype=jnp.int32))
 
     run = jax.jit(scan_one, donate_argnums=(0,))
-    s0 = fabric.init_state(g, wl, p, jnp.uint32(seed))
+    s0 = fabric.init_state(g, wl, prof, p, jnp.uint32(seed))
     final, outs = run(s0, wl)
-    return fabric._to_result(final, outs)
+    return fabric._to_result(final, outs, wl.size)
 
 
 def run_benches(b: int, ticks: int) -> dict:
     import jax
 
-    from dataclasses import replace
     from repro.network.fabric import simulate, simulate_batch
 
-    g, wl, p = _bench_config(ticks)
+    g, wl, prof, p = _bench_config(ticks)
     wls, masks, seeds = _scenarios(g, wl, b)
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
+        "api_version": 2,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
         "ticks": ticks,
         "scenarios": b,
+        "profile": prof.name,
+        "profile_spec": prof.describe(),
     }
 
     # --- single scenario: compile + warm ticks/sec ---
     t0 = time.perf_counter()
-    simulate(g, wl, p)
+    simulate(g, wl, prof, p)
     results["single_cold_s"] = time.perf_counter() - t0
-    warm = min(_timed(lambda: simulate(g, wl, p)) for _ in range(5))
+    warm = min(_timed(lambda: simulate(g, wl, prof, p)) for _ in range(5))
     results["single_warm_s"] = warm
     results["ticks_per_sec_single"] = ticks / warm
 
     # --- seed-style serial sweep: fresh executable per scenario ---
     t0 = time.perf_counter()
     for i in range(b):
-        _seed_style_simulate(g, wl, replace(p, failed_queues=fq[i]),
-                             masks[i], int(seeds[i]))
+        _seed_style_simulate(g, wl, prof, p, masks[i], int(seeds[i]))
     serial_seed = time.perf_counter() - t0
     results["serial_seed_sweep_s"] = serial_seed
     results["scenarios_per_sec_serial"] = b / serial_seed
     results["serial_mode"] = ("per-scenario trace+compile (static failure "
                               "set, the seed architecture)")
 
-    # --- shared-executable serial sweep: this PR's warm serial path ---
+    # --- shared-executable serial sweep: the warm serial path ---
     for i in range(2):  # warm
-        simulate(g, wl, replace(p, failed_queues=fq[i]), seed=int(seeds[i]))
+        simulate(g, wl, prof, p, failed=fq[i], seed=int(seeds[i]))
     t0 = time.perf_counter()
     for i in range(b):
-        simulate(g, wl, replace(p, failed_queues=fq[i]), seed=int(seeds[i]))
+        simulate(g, wl, prof, p, failed=fq[i], seed=int(seeds[i]))
     serial_shared = time.perf_counter() - t0
     results["serial_shared_sweep_s"] = serial_shared
     results["scenarios_per_sec_serial_shared"] = b / serial_shared
 
     # --- batched sweep: one simulate_batch() call ---
     t0 = time.perf_counter()
-    simulate_batch(g, wls, p, failed=masks, seeds=seeds)
+    simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds)
     batched_cold = time.perf_counter() - t0
     results["batched_cold_s"] = batched_cold
     batched = min(_timed(
-        lambda: simulate_batch(g, wls, p, failed=masks, seeds=seeds))
+        lambda: simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds))
         for _ in range(3))
     results["batched_sweep_s"] = batched
     results["scenarios_per_sec_batched"] = b / batched
@@ -149,7 +156,38 @@ def run_benches(b: int, ticks: int) -> dict:
     # seed architecture's sweep (per-scenario compiles)
     results["batch_speedup_vs_serial"] = serial_seed / batched_cold
     results["batch_speedup_vs_serial_shared_warm"] = serial_shared / batched
+
+    results["profile_ablation"] = _profile_ablation(ticks)
     return results
+
+
+def _profile_ablation(ticks: int) -> dict:
+    """The operating-point grid as ONE simulate_batch call: the three
+    named profiles + the CC ablation (6 scenarios, grouped by profile
+    into one executable each) on a congested incast."""
+    from repro.network import workloads
+    from repro.network.fabric import SimParams, simulate_batch
+
+    g, wls, profiles, names = workloads.profile_ablation_sweep(
+        fan_in=4, size=100000)
+    p = SimParams(ticks=ticks, timeout_ticks=64)
+    t0 = time.perf_counter()
+    rs = simulate_batch(g, wls, profiles, p)
+    cold = time.perf_counter() - t0
+    warm = min(_timed(lambda: simulate_batch(g, wls, profiles, p))
+               for _ in range(2))
+    w0 = ticks // 3
+    return {
+        "scenarios": len(profiles),
+        "distinct_profiles": len(set(profiles)),
+        "sweep_cold_s": cold,
+        "sweep_warm_s": warm,
+        "scenarios_per_sec": len(profiles) / warm,
+        "goodput_mean": {
+            name: round(float(r.goodput((w0, ticks)).mean()), 4)
+            for name, r in zip(names, rs)
+        },
+    }
 
 
 def _timed(fn) -> float:

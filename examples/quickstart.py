@@ -1,10 +1,17 @@
 """Quickstart: the UET transport in 60 seconds.
 
-Builds the paper's Fig. 2 fabric (64 endpoints, 8-port switches), runs a
-4->1 incast under RCCC and an 8-flow permutation under REPS spraying,
-prints the bandwidth shares the paper predicts (Fig. 7 / Sec. 2.1), and
-closes with a whole failure sweep batched into ONE compiled scan
-(`simulate_batch`).
+The API is declarative: pick a ``TransportProfile`` (WHAT transport
+composition to run — congestion control, load balancing, per-flow
+delivery modes; the paper's Sec. 2.2 profile table ships as
+``ai_base()`` / ``ai_full()`` / ``hpc()``), pass numeric knobs in
+``SimParams``, and call ``simulate`` / ``simulate_batch``. Exploring a
+new operating point is a config sweep, not a code fork: this script runs
+
+  [1] a 4->1 incast under the three named profiles (one batched call),
+  [2] the CC ablation (NSCC-only vs RCCC-only vs hybrid) on an outcast,
+  [3] static ECMP vs REPS spraying on permutation traffic (Sec. 2.1),
+  [4] a mixed ROD+RUD profile showing the in-order delivery invariant,
+  [5] a failure sweep batched into ONE compiled scan.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,46 +19,66 @@ import numpy as np
 
 from repro.core.lb.schemes import LBScheme
 from repro.network import workloads
-from repro.network.fabric import SimParams, simulate, simulate_batch
+from repro.network.fabric import SimParams, Workload, simulate, simulate_batch
+from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
+                                   cc_ablation)
 
 
 def main():
     print("=== UET quickstart ===")
 
-    print("\n[1] incast 4->1 with receiver-credit CC (RCCC, Sec 3.3.2)")
+    print("\n[1] incast 4->1 across the paper's profiles (Sec 2.2) — one "
+          "simulate_batch call, grouped by profile")
     g, wl, exp = workloads.incast(4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=1200, rccc=True, nscc=False))
-    gp = r.goodput((300, 1200))
-    print(f"    per-flow goodput: {np.round(gp, 3)} "
-          f"(paper: {exp['share']:.2f} each — optimal)")
+    profiles = [TransportProfile.ai_base(), TransportProfile.ai_full(),
+                TransportProfile.hpc()]
+    results = simulate_batch(g, Workload.stack([wl] * 3), profiles,
+                             SimParams(ticks=1200))
+    for prof, r in zip(profiles, results):
+        gp = r.goodput((300, 1200))
+        print(f"    {prof.name:8s} ({prof.describe()[len(prof.name):]}): "
+              f"per-flow goodput {np.round(gp, 3)}")
+    print(f"    (paper: {exp['share']:.2f} each is optimal; ai_base's RCCC "
+          f"hits it exactly, Fig. 7 group 4)")
 
-    print("\n[2] permutation traffic: static ECMP vs REPS spraying "
+    print("\n[2] CC ablation on an outcast (Fig. 7 group 1): receiver "
+          "credits are blind to the sender bottleneck")
+    g, wl, exp = workloads.outcast(4, size=100000)
+    for prof in cc_ablation():
+        r = simulate(g, wl, prof, SimParams(ticks=2500))
+        print(f"    {prof.name:9s}: w->v share {r.goodput((1200, 2500))[4]:.3f} "
+              f"(RCCC grants {exp['rccc_w_share']:.2f}, optimum "
+              f"{exp['nscc_w_share']:.2f})")
+
+    print("\n[3] permutation traffic: static ECMP vs REPS spraying "
           "(Sec 2.1 polarization)")
     g, wl, _ = workloads.permutation(k=8, pods=4, shift=17, size=100000)
     for scheme in (LBScheme.STATIC, LBScheme.REPS):
-        r = simulate(g, wl, SimParams(ticks=1500, nscc=True, lb=scheme))
+        r = simulate(g, wl, TransportProfile.ai_full(lb=scheme),
+                     SimParams(ticks=1500))
         gp = r.goodput((700, 1500))
         print(f"    {scheme.name:9s}: mean {gp.mean():.3f}  "
               f"worst flow {gp.min():.3f}")
 
-    print("\n[3] packet trimming vs timeout-only recovery (Sec 3.2.4)")
-    g, wl, _ = workloads.incast(8, size=300)
-    for trim in (True, False):
-        p = SimParams(ticks=5000, nscc=True, trimming=trim,
-                      timeout_ticks=300)
-        r = simulate(g, wl, p)
-        ct = r.completion_tick()
-        done = "all done" if (ct >= 0).all() else "UNFINISHED"
-        print(f"    trimming={str(trim):5s}: mean completion "
-              f"{ct[ct >= 0].mean():7.1f} ticks ({done}, "
-              f"trims={int(r.state.trims)}, drops={int(r.state.drops)})")
+    print("\n[4] per-flow delivery modes: flow 0 ordered (ROD), flow 1 "
+          "sprayed (RUD) in ONE profile (Sec 3.2.1)")
+    g, wl, _ = workloads.incast(2, size=400)
+    prof = TransportProfile(cc=CCAlgo.NSCC, lb=LBScheme.REPS,
+                            delivery=(DeliveryMode.ROD, DeliveryMode.RUD),
+                            name="mixed")
+    r = simulate(g, wl, prof, SimParams(ticks=3000))
+    cum = r.delivered_per_tick.cumsum(axis=0)
+    in_order = bool((cum[:, 0].astype(np.uint32)
+                     == r.rx_base_per_tick[:, 0]).all())
+    print(f"    completion tick {r.completion_tick()}; ROD lane delivered "
+          f"strictly in order: {in_order} (trims={int(r.state.trims)})")
 
-    print("\n[4] failure sweep, batched: healthy + one-dead-uplink x4, "
+    print("\n[5] failure sweep, batched: healthy + one-dead-uplink x4, "
           "one vmapped scan (REPS, Sec 3.2.4)")
     g, wls, masks, exp = workloads.failure_sweep(spines=4, hosts_per_leaf=8)
-    p = SimParams(ticks=3000, nscc=True, lb=LBScheme.REPS,
-                  timeout_ticks=64, ooo_threshold=24)
-    results = simulate_batch(g, wls, p, failed=masks)
+    p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
+    results = simulate_batch(g, wls, TransportProfile.ai_full(lb=LBScheme.REPS),
+                             p, failed=masks)
     for i, r in enumerate(results):
         tag = "healthy   " if i == 0 else f"uplink {i - 1} dead"
         gp = r.goodput((1500, 3000)).mean()

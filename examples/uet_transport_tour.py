@@ -1,6 +1,17 @@
 """A guided tour of the UET transport layers (Sec. 3): addressing ->
-matching -> large-message protocols -> PDC lifecycle -> congestion
-control, each exercised with the real vectorized implementations.
+matching -> large-message protocols -> PDC lifecycle, each exercised
+with the real vectorized implementations.
+
+Everything this tour walks through composes into ONE declarative object
+at the top of the stack: a `repro.network.profile.TransportProfile`.
+The profile says which congestion control runs (NSCC / RCCC / both),
+which Entropy-Value load-balancing scheme sprays packets, and which
+delivery mode each flow uses (ROD / RUD / RUDI) — the paper's Sec. 2.2
+profile table is `TransportProfile.ai_base() / ai_full() / hpc()`, and
+the fabric engine (`repro.network.fabric.simulate`) compiles whatever
+composition you declare. This file tours the *semantic* layers beneath
+that surface; see examples/quickstart.py for driving the fabric with
+profiles.
 
 Run: PYTHONPATH=src python examples/uet_transport_tour.py
 """
@@ -9,9 +20,14 @@ import numpy as np
 
 from repro.core import addressing, matching, messaging, pdc
 from repro.core.types import MsgProtocol, Profile
+from repro.network.profile import DeliveryMode, TransportProfile
 
 
 def main():
+    print("=== [profiles] declarative transport compositions (Sec 2.2) ===")
+    for prof in (TransportProfile.ai_base(), TransportProfile.ai_full(),
+                 TransportProfile.hpc()):
+        print(f"  {prof.describe()}")
     print("=== [SES] relative addressing (Sec 3.1.1) ===")
     t = addressing.FEPTables.create(num_jobs=4, procs_per_job=8,
                                     ris_per_proc=4)
@@ -60,9 +76,12 @@ def main():
 
     print("\n=== [PDS] PDC lifecycle, Fig 6 ===")
     pool = pdc.PDCPool.create(2)
-    pool = pdc.open_pdc(pool, jnp.int32(0), jnp.int32(7), jnp.uint32(4))
+    pool = pdc.open_pdc(pool, jnp.int32(0), jnp.int32(7), jnp.uint32(4),
+                        mode=int(DeliveryMode.ROD))
     print(f"  after first send : state={pdc.PDCState(int(pool.state[0])).name}"
-          f" (sending at FULL RATE during establishment)")
+          f" (sending at FULL RATE during establishment; one PDC per "
+          f"delivery mode — this one is "
+          f"{DeliveryMode(int(pool.mode[0])).name})")
     pool = pdc.on_ack(pool, jnp.int32(0), jnp.int32(19), jnp.int32(1))
     print(f"  after first ACK  : state={pdc.PDCState(int(pool.state[0])).name},"
           f" remote PDCID={int(pool.remote_id[0])}")

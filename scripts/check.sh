@@ -11,6 +11,15 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff) =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks examples
+elif python -c "import ruff" >/dev/null 2>&1; then
+  python -m ruff check src tests benchmarks examples
+else
+  echo "ruff not installed (pip install -r requirements-dev.txt); skipping lint"
+fi
+
 echo "== tier-1 tests (minus slow) =="
 python -m pytest -x -q -m "not slow"
 

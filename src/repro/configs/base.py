@@ -14,10 +14,9 @@ hidden.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
-import jax.numpy as jnp
 
 # block descriptors: (mixer, ffn) per layer position within a repeating unit
 MIXER_ATTN = "attn"

@@ -28,7 +28,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import AddrMode
 
 JOBID_BITS = 24
 PIDONFEP_BITS = 12

@@ -180,6 +180,53 @@ def quick_adapt(state: NSCCState, params: NSCCParams,
     )
 
 
+@jax.tree_util.register_static
+@dataclass(frozen=True)
+class NSCCPolicy:
+    """NSCC as a pluggable CC policy for the fabric engine.
+
+    Implements the policy protocol documented in
+    `repro.network.profile`: per-tick hooks over densified [F] lanes.
+    State is one `NSCCState` pytree carried in the simulator's scan
+    carry. The hook bodies are exactly the calls the engine used to
+    inline — the composition point moved, the ops did not (the profile
+    refactor is bitwise-parity-tested against the pre-refactor engine).
+    """
+
+    params: NSCCParams
+
+    def create(self, f: int) -> NSCCState:
+        return NSCCState.create(f, self.params)
+
+    def on_ack(self, st: NSCCState, has_ack: jax.Array, ecn: jax.Array,
+               rtt: jax.Array) -> NSCCState:
+        return on_ack_per_flow(st, self.params, ecn, rtt, has_ack)
+
+    def on_nack(self, st: NSCCState, count: jax.Array) -> NSCCState:
+        return on_loss_per_flow(st, count)
+
+    def on_grant_tick(self, st, flow_dst, active, num_hosts):
+        return st  # sender-based: no receiver scheduling round
+
+    def on_send_gate(self, st: NSCCState, inflight: jax.Array) -> jax.Array:
+        return inflight < jnp.floor(st.cwnd).astype(jnp.int32)
+
+    def on_inject(self, st, injected):
+        return st  # window-based: nothing to spend per packet
+
+    def on_rx_seen(self, st, seen):
+        return st
+
+    def on_timeout(self, st: NSCCState, stalled: jax.Array) -> NSCCState:
+        return on_loss_per_flow(st, stalled.astype(jnp.int32))
+
+    def end_of_tick(self, st: NSCCState, tick: jax.Array) -> NSCCState:
+        return quick_adapt(st, self.params, tick)
+
+    def cwnd_view(self, st: NSCCState, f: int) -> jax.Array:
+        return st.cwnd
+
+
 def apply_dfc_penalty(state: NSCCState, params: NSCCParams, ccc: jax.Array,
                       penalty: jax.Array, valid: jax.Array) -> NSCCState:
     """Destination Flow Control for NSCC (Sec. 3.3.4): the receiver sends a

@@ -71,6 +71,55 @@ def grant_credits(state: RCCCState, flow_dst: jax.Array, active: jax.Array,
     return replace(state, balance=state.balance + grant)
 
 
+@jax.tree_util.register_static
+@dataclass(frozen=True)
+class RCCCPolicy:
+    """RCCC as a pluggable CC policy for the fabric engine (protocol in
+    `repro.network.profile`).
+
+    ``initial_credit`` is the optimistic-start balance (~BDP, so flows
+    start at full rate). ``report_cwnd`` is what the engine's per-tick
+    "cwnd" stat lane shows for this policy: RCCC has no window, so it
+    reports the static cap — matching what the pre-refactor engine
+    reported for rccc-only runs. The credit *balance* is the live signal
+    and stays inspectable in the final state.
+    """
+
+    initial_credit: float
+    report_cwnd: float
+
+    def create(self, f: int) -> RCCCState:
+        return RCCCState.create(f, self.initial_credit)
+
+    def on_ack(self, st, has_ack, ecn, rtt):
+        return st  # receiver-driven: network signals are ignored
+
+    def on_nack(self, st, count):
+        return st
+
+    def on_grant_tick(self, st: RCCCState, flow_dst: jax.Array,
+                      active: jax.Array, num_hosts: int) -> RCCCState:
+        return grant_credits(st, flow_dst, active, num_hosts)
+
+    def on_send_gate(self, st: RCCCState, inflight: jax.Array) -> jax.Array:
+        return (inflight < jnp.int32(int(self.report_cwnd))) & can_send(st)
+
+    def on_inject(self, st: RCCCState, injected: jax.Array) -> RCCCState:
+        return replace(st, balance=st.balance - injected.astype(jnp.float32))
+
+    def on_rx_seen(self, st: RCCCState, seen: jax.Array) -> RCCCState:
+        return replace(st, seen=st.seen | seen)
+
+    def on_timeout(self, st, stalled):
+        return st
+
+    def end_of_tick(self, st, tick):
+        return st
+
+    def cwnd_view(self, st: RCCCState, f: int) -> jax.Array:
+        return jnp.full((f,), self.report_cwnd, jnp.float32)
+
+
 def mark_seen(state: RCCCState, flow: jax.Array, valid: jax.Array) -> RCCCState:
     """Receiver observed first packet(s) of flow(s): credits start flowing."""
     f = state.seen.shape[0]

@@ -148,6 +148,64 @@ def select_ev(state: LBState, scheme: LBScheme, psn: jax.Array,
     return replace(state, rr_ptr=(use + 1) % K, cong_bits=cong), ev
 
 
+def _pick_lane(hot: jax.Array, vals: jax.Array) -> jax.Array:
+    """Per-row value from <= 1 active lane: hot [R, L] bool, vals [L]."""
+    return jnp.sum(jnp.where(hot, vals[None, :], 0), axis=1)
+
+
+@jax.tree_util.register_static
+@dataclass(frozen=True)
+class LBPolicy:
+    """One LB scheme as a pluggable policy object for the fabric engine.
+
+    The engine composes the tick from `on_ack` (path feedback over the
+    control-event lanes, densified per flow where the scheme allows) and
+    `select` (per-flow EV choice); `static_ev` is the single-path pick
+    used for ROD flows in mixed-delivery profiles. The bodies are the
+    scheme dispatch the engine used to inline — bitwise-parity preserved.
+    """
+
+    scheme: LBScheme
+
+    def create(self, f: int, k: int, seed) -> LBState:
+        return LBState.create(f, k, seed)
+
+    def on_ack(self, st: LBState, hot_ack: jax.Array, ef: jax.Array,
+               ee: jax.Array, ec: jax.Array, is_ack: jax.Array,
+               is_nack: jax.Array,
+               flow_ok: jax.Array | None = None) -> LBState:
+        """Feedback from this tick's control events.
+
+        hot_ack: [F, E] one-hot ACK lanes per flow; ef/ee/ec: [E] lane
+        flow/EV/ECN; is_ack/is_nack: [E] lane types. ``flow_ok`` masks
+        flows whose feedback the engine withholds (ROD flows in a
+        mixed-delivery profile — their static-path EVs must not enter
+        the spraying state).
+        """
+        if self.scheme == LBScheme.REPS:
+            # recycle EVs that came back on clean (un-marked) ACKs
+            hot_clean = hot_ack & (ec[None, :] == 0)
+            if flow_ok is not None:
+                hot_clean = hot_clean & flow_ok[:, None]
+            return reps_recycle(st, _pick_lane(hot_clean, ee),
+                                hot_clean.any(axis=1))
+        if self.scheme == LBScheme.EVBITMAP:
+            valid = is_ack | is_nack
+            if flow_ok is not None:
+                valid = valid & flow_ok[jnp.where(valid, ef, 0)]
+            return on_ack(st, self.scheme, ef, ee,
+                          ec.astype(jnp.bool_) | is_nack, valid)
+        return st  # STATIC / OBLIVIOUS / RR take no path feedback
+
+    def select(self, st: LBState, psn: jax.Array,
+               tick: jax.Array) -> tuple[LBState, jax.Array]:
+        return select_ev(st, self.scheme, psn, tick)
+
+    def static_ev(self, st: LBState) -> jax.Array:
+        """The flow's pinned single-path EV (ROD lanes)."""
+        return st.ev_set[:, 0]
+
+
 def commit_selection(old: LBState, new: LBState, injected: jax.Array) -> LBState:
     """Keep `new` lanes only where a packet was actually injected."""
     pick = lambda a, b: jnp.where(

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
-import numpy as np
 
 CTR_BITS = 20
 CTR_MOD = 1 << CTR_BITS

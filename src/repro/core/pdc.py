@@ -118,6 +118,10 @@ class PDCPool:
     unacked:      [N] int32 packets outstanding
     active_msgs:  [N] int32 messages started and not finished
     tx_packets:   [N] int32 total request packets sent (TSS 2^31 close rule)
+    mode:         [N] int32 DeliveryMode code — a PDC carries exactly one
+                  delivery mode (Sec. 3.2.3: mixed-mode traffic between a
+                  FEP pair opens one PDC per mode); set at open time and
+                  immutable for the PDC's lifetime
     """
 
     state: jax.Array
@@ -129,6 +133,7 @@ class PDCPool:
     unacked: jax.Array
     active_msgs: jax.Array
     tx_packets: jax.Array
+    mode: jax.Array
 
     @staticmethod
     def create(n: int) -> "PDCPool":
@@ -141,13 +146,16 @@ class PDCPool:
             next_psn=jnp.zeros((n,), jnp.uint32),
             start_psn=jnp.zeros((n,), jnp.uint32),
             unacked=z, active_msgs=z, tx_packets=z,
+            mode=z,  # DeliveryMode.RUD
         )
 
 
 def open_pdc(pool: PDCPool, slot: jax.Array, peer: jax.Array,
-             start_psn: jax.Array) -> PDCPool:
+             start_psn: jax.Array,
+             mode: "jax.Array | int" = 0) -> PDCPool:
     """SES first-send: allocate slot, go SYN, PSN starts at a random value
-    (Fig. 6 starts at PSN 4)."""
+    (Fig. 6 starts at PSN 4). ``mode`` is the DeliveryMode code the PDC
+    will carry (one PDC per mode per peer)."""
     return PDCPool(
         state=pool.state.at[slot].set(int(_S.SYN)),
         peer=pool.peer.at[slot].set(peer),
@@ -158,6 +166,7 @@ def open_pdc(pool: PDCPool, slot: jax.Array, peer: jax.Array,
         unacked=pool.unacked.at[slot].set(0),
         active_msgs=pool.active_msgs.at[slot].set(1),
         tx_packets=pool.tx_packets.at[slot].set(0),
+        mode=pool.mode.at[slot].set(jnp.int32(mode)),
     )
 
 
@@ -176,4 +185,5 @@ def on_ack(pool: PDCPool, slot: jax.Array, remote_id: jax.Array,
         next_psn=pool.next_psn, start_psn=pool.start_psn,
         unacked=pool.unacked.at[slot].add(-n_acked),
         active_msgs=pool.active_msgs, tx_packets=pool.tx_packets,
+        mode=pool.mode,
     )

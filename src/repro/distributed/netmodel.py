@@ -95,21 +95,31 @@ def _pattern_workload(kind: str, hosts: int, size_pkts: int):
 
 def simulated_efficiency(kind: str = "all-reduce", hosts: int = 32,
                          size_pkts: int = 2000,
-                         lb: LBScheme = LBScheme.OBLIVIOUS,
-                         nscc: bool = True, rccc: bool = False,
+                         lb: "LBScheme | None" = None,
+                         profile=None,
                          trimming: bool = True,
                          oversub: int = 1,
                          ticks: int = 3000) -> float:
     """Achieved goodput fraction of line rate for one collective phase on
-    the packet-level UET fabric (leaf-spine, `oversub`:1)."""
+    the packet-level UET fabric (leaf-spine, `oversub`:1).
+
+    ``profile`` selects the full transport composition; ``lb`` is the
+    shorthand for the common collective ablation axis (ai_full profile
+    with that scheme). Passing both is ambiguous and raises.
+    """
+    from repro.network.profile import TransportProfile
+    if profile is None:
+        profile = TransportProfile.ai_full(
+            lb=LBScheme.OBLIVIOUS if lb is None else lb)
+    elif lb is not None:
+        raise ValueError("pass either profile= or lb=, not both — encode "
+                         "the LB scheme in the profile")
     hosts_per_leaf = 4
     leaves = hosts // hosts_per_leaf
-    spines = max(1, hosts_per_leaf // oversub * leaves // leaves)
     g = leaf_spine(leaves=leaves, spines=max(2, leaves // oversub),
                    hosts_per_leaf=hosts_per_leaf)
     wl = _pattern_workload(kind, g.num_hosts, size_pkts)
-    p = SimParams(ticks=ticks, lb=lb, nscc=nscc, rccc=rccc,
-                  trimming=trimming)
-    r = simulate(g, wl, p)
+    p = SimParams(ticks=ticks, trimming=trimming)
+    r = simulate(g, wl, profile, p)
     gp = r.goodput((ticks // 3, ticks))
     return float(np.mean(gp))

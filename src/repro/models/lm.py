@@ -19,9 +19,8 @@ through the same scan.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

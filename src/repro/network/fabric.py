@@ -9,15 +9,27 @@ structure-of-arrays, and a tick is a pure function stepped by
 the paper's protocol: what a hardware UET NIC does per packet, the
 simulator does per *vector of flows* per tick.
 
+The public API is declarative: a :class:`~repro.network.profile.
+TransportProfile` says WHAT transport composition to run (CC algorithm,
+LB scheme, per-flow delivery modes — the paper's profile table), and
+``SimParams`` holds the numeric knobs (tick budget, queue depths,
+thresholds). ``make_step`` composes the tick from pluggable CC and LB
+policy objects; new policies implement the small protocol documented in
+`repro.network.profile` and land without touching this engine.
+
 The engine runs in two modes:
 
-* ``simulate`` — one (workload, params) scenario per call;
-* ``simulate_batch`` — a whole scenario sweep (different workloads, LB
-  seeds, failure sets) ``vmap``-ed over a leading scenario axis, so an
-  entire failure or incast sweep is ONE compiled ``scan``. Workloads,
-  seeds and failed-queue masks are traced inputs: sweeping them never
-  recompiles. Per-lane results are bitwise identical to serial
-  ``simulate`` calls.
+* ``simulate(g, wl, profile, p)`` — one scenario per call;
+* ``simulate_batch(g, wls, profile, p)`` — a whole scenario sweep
+  (different workloads, LB seeds, failure sets) ``vmap``-ed over a
+  leading scenario axis, so an entire failure or incast sweep is ONE
+  compiled ``scan``. Workloads, seeds and failure masks are traced
+  inputs: sweeping them never recompiles. Profiles are *static* (they
+  pick the compiled composition); passing a list of per-scenario
+  profiles groups the batch by profile — one executable per distinct
+  profile, e.g. a 3-profile x N-scenario ablation is 3 compiles and 3
+  device launches for the whole grid. Per-lane results are bitwise
+  identical to serial ``simulate`` calls.
 
 Modeled faithfully (paper sections in parens):
 
@@ -25,7 +37,7 @@ Modeled faithfully (paper sections in parens):
 * egress ECN marking above a queue threshold (3.3.1)
 * packet trimming on overflow -> fast NACK to the source (3.2.4)
 * RUD selective-repeat with a source retransmit bitmap; ROD go-back-N on a
-  single static path (3.2.1)
+  single static path with an in-order-only receiver (3.2.1)
 * receiver PSN tracking with SACK rings + MP_RANGE rejection (3.2.5)
 * NSCC 4-case window control + Quick Adapt; RCCC receiver credits; both
   composable, as the spec prescribes (3.3)
@@ -40,6 +52,7 @@ headers travel on the control TC (elevated priority per the spec).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 
 import jax
@@ -47,13 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pds
-from repro.core.cms import nscc as nscc_mod
-from repro.core.cms.rccc import RCCCState, grant_credits
-from repro.core.lb import schemes as lb_schemes
-from repro.core.lb.schemes import LBScheme, LBState, select_ev, on_ack as lb_on_ack
+from repro.core.cms.nscc import NSCCParams
+from repro.core.lb.schemes import LBPolicy, LBScheme, LBState
+from repro.core.lb.schemes import _pick_lane as _pick
 from repro.core.types import TransportMode
 from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
+from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
+                                   make_cc_policy)
 from repro.network.topology import QueueGraph
 
 # packet meta bits
@@ -75,23 +89,19 @@ DEFAULT_SEED = 0x5EED
 
 @dataclass(frozen=True)
 class SimParams:
-    """Static simulation parameters (hashable; closed over by jit)."""
+    """Numeric simulation knobs (hashable; closed over by jit).
+
+    Transport *composition* — CC algorithm, LB scheme, delivery modes —
+    lives in :class:`TransportProfile`, not here. The trailing fields
+    (``mode``/``lb``/``nscc``/``rccc``/``failed_queues``) are deprecated
+    remnants of the pre-profile API kept so old call sites keep working
+    through the compat shim; new code must leave them unset.
+    """
 
     ticks: int = 2000
     queue_capacity: int = 64
     ecn_threshold: int = 12
     trimming: bool = True
-    mode: TransportMode = TransportMode.RUD
-    lb: LBScheme = LBScheme.OBLIVIOUS
-    #: queue ids whose link is DOWN: packets routed into them are silently
-    #: dropped (Configuration drops, Sec. 3.2.4) — the failure-mitigation
-    #: scenario for REPS (dead-path EVs never return and leave circulation).
-    #: Converted to a *traced* per-queue mask before the run, so sweeping
-    #: failure sets (serially or via simulate_batch) never recompiles.
-    failed_queues: tuple = ()
-    nscc: bool = True
-    rccc: bool = False
-    dfc: bool = False
     ack_return_ticks: int = 4
     mp_range: int = 512           # receiver tracking window (PSNs)
     ev_slots: int = 16            # K for RR/REPS/EVBITMAP
@@ -99,6 +109,12 @@ class SimParams:
     ooo_threshold: int = 0        # 0 = disabled
     max_cwnd: float = 48.0        # ~BDP in packets (optimistic start)
     base_rtt: float = 10.0        # unloaded RTT in ticks, for NSCC
+    # ---- deprecated (legacy signature only; see _normalize_call) --------
+    mode: "TransportMode | None" = None
+    lb: "LBScheme | None" = None
+    nscc: "bool | None" = None
+    rccc: "bool | None" = None
+    failed_queues: tuple = ()
 
 
 @jax.tree_util.register_dataclass
@@ -161,9 +177,8 @@ class SimState:
     # receiver state
     dst_track: pds.PSNTracker
     last_ooo_nack: jax.Array  # [F] int32
-    # congestion control + LB
-    nscc: nscc_mod.NSCCState
-    rccc: RCCCState
+    # congestion control (policy-owned pytree) + LB
+    cc: object
     lb: LBState
     # control-TC delay ring (packed: type/flow/psn/ev/ecn/tsent lanes)
     ev_buf: jax.Array   # [D, E, EVF_FIELDS] int32
@@ -172,6 +187,9 @@ class SimState:
     trims: jax.Array      # [] int32
     drops: jax.Array      # [] int32
     dups: jax.Array       # [] int32
+    #: in-range arrivals a ROD receiver discarded for being out of order
+    #: (go-back-N rejects; NOT duplicates — counted separately from dups)
+    rod_rejects: jax.Array  # [] int32
     retransmits: jax.Array  # [] int32
 
 
@@ -209,11 +227,6 @@ def _clear_own_bit(ring: jax.Array, off: jax.Array,
     return ring & ~_bit_plane(off, valid, ring.shape[1])
 
 
-def _pick(hot: jax.Array, vals: jax.Array) -> jax.Array:
-    """Per-row value from <= 1 active lane: hot [R, L] bool, vals [L]."""
-    return jnp.sum(jnp.where(hot, vals[None, :], 0), axis=1)
-
-
 def _own_word(ring: jax.Array, off: jax.Array) -> jax.Array:
     """Row i's ring word containing bit offset off[i] (clipped)."""
     w = ring.shape[1]
@@ -221,14 +234,16 @@ def _own_word(ring: jax.Array, off: jax.Array) -> jax.Array:
     return jnp.take_along_axis(ring, word[:, None], axis=1)[:, 0]
 
 
-def init_state(g: QueueGraph, wl: Workload, p: SimParams,
-               seed: "int | jax.Array" = DEFAULT_SEED) -> SimState:
+def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
+               p: SimParams, seed: "int | jax.Array" = DEFAULT_SEED
+               ) -> SimState:
     Q, C = g.num_queues, p.queue_capacity
     F = wl.src.shape[0]
     D = p.ack_return_ticks + 1
     E = 2 * Q + 2 * F
     W = p.mp_range // 32
-    nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    nparams = NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    cc_pol = make_cc_policy(profile.cc, nparams, p.max_cwnd)
     q_pkt = jnp.zeros((Q, C, PKT_FIELDS), jnp.int32).at[:, :, PKT_FLOW].set(-1)
     return SimState(
         q_pkt=q_pkt,
@@ -242,13 +257,12 @@ def init_state(g: QueueGraph, wl: Workload, p: SimParams,
         slot_last_ack=jnp.full((F, p.ev_slots), -1, jnp.int32),
         dst_track=pds.PSNTracker.create(F, p.mp_range),
         last_ooo_nack=jnp.full((F,), -10**6, jnp.int32),
-        nscc=nscc_mod.NSCCState.create(F, nparams),
-        rccc=RCCCState.create(F, p.max_cwnd),
+        cc=cc_pol.create(F),
         lb=LBState.create(F, p.ev_slots, seed),
         ev_buf=jnp.zeros((D, E, EVF_FIELDS), jnp.int32),
         delivered=jnp.zeros((F,), jnp.int32),
         trims=jnp.int32(0), drops=jnp.int32(0), dups=jnp.int32(0),
-        retransmits=jnp.int32(0),
+        rod_rejects=jnp.int32(0), retransmits=jnp.int32(0),
     )
 
 
@@ -274,8 +288,16 @@ def _rank_within(target: jax.Array, valid: jax.Array,
     return pos, rank
 
 
-def make_step(g: QueueGraph, p: SimParams, F: int):
-    """Build the per-tick transition function.
+def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
+    """Build the per-tick transition function for one transport profile.
+
+    The tick is composed from the profile's pluggable policy objects: a
+    CC policy (``make_cc_policy``) hooked at the ACK/NACK/grant/gate/
+    inject/timeout points, and an ``LBPolicy`` hooked at the feedback and
+    EV-selection points. Delivery modes are per-flow static masks: ROD
+    flows run go-back-N on one static path, gate injection on in-order
+    CACK advance, and their receiver accepts only the next expected PSN;
+    RUD/RUDI flows keep spray + selective-retransmit semantics.
 
     The returned ``step(s, tick, wl, dead)`` takes the workload and the
     per-queue failure mask as *traced* arguments so one compiled step
@@ -291,10 +313,19 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
     mp = p.mp_range
     W = mp // 32
     flow_ids = jnp.arange(F)
-    nparams = nscc_mod.NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
-    lb_scheme = LBScheme.STATIC if p.mode == TransportMode.ROD else p.lb
-    is_rod = p.mode == TransportMode.ROD
-    is_rudi = p.mode == TransportMode.RUDI
+    nparams = NSCCParams(base_rtt=p.base_rtt, max_cwnd=p.max_cwnd)
+    cc_pol = make_cc_policy(profile.cc, nparams, p.max_cwnd)
+    # per-flow delivery modes are static: compiled straight into the step
+    dm = profile.delivery_modes(F)
+    rod_np = dm == int(DeliveryMode.ROD)
+    all_rod = bool(rod_np.all())
+    any_rod = bool(rod_np.any())
+    mixed_rod = any_rod and not all_rod
+    rod_mask = jnp.asarray(rod_np)
+    # an all-ROD profile is single-path by definition (spec: ordered
+    # delivery forbids spraying); mixed profiles spray the RUD lanes and
+    # pin the ROD lanes to their static EV below
+    lb_pol = LBPolicy(LBScheme.STATIC if all_rod else profile.lb)
 
     def step(s: SimState, tick: jax.Array, wl: Workload, dead: jax.Array):
         flow_src = wl.src
@@ -345,26 +376,15 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
                 has_ack & ~ack_in_range, one, 0),
         )
 
-        # retire inflight, CC + LB feedback
+        # retire inflight, CC + LB feedback (policy hooks over [F] lanes)
         retire = has_ack.astype(jnp.int32) + nack_count
         inflight = jnp.maximum(s.inflight - retire, 0)
         ack_ecn = _pick(hot_ack, ec).astype(jnp.bool_)
         rtt = (tick - _pick(hot_ack, ets)).astype(jnp.float32)
-        nst = s.nscc
-        if p.nscc:
-            nst = nscc_mod.on_ack_per_flow(nst, nparams, ack_ecn, rtt,
-                                           has_ack)
-            nst = nscc_mod.on_loss_per_flow(nst, nack_count)
-        if lb_scheme == LBScheme.REPS:
-            # recycle EVs that came back on clean (un-marked) ACKs
-            hot_clean = hot_ack & (ec[None, :] == 0)
-            lbs = lb_schemes.reps_recycle(
-                s.lb, _pick(hot_clean, ee), hot_clean.any(axis=1))
-        elif lb_scheme == LBScheme.EVBITMAP:
-            lbs = lb_on_ack(s.lb, lb_scheme, ef, ee,
-                            ec.astype(jnp.bool_) | is_nack, is_ack | is_nack)
-        else:
-            lbs = s.lb  # STATIC / OBLIVIOUS / RR take no path feedback
+        cc_st = cc_pol.on_ack(s.cc, has_ack, ack_ecn, rtt)
+        cc_st = cc_pol.on_nack(cc_st, nack_count)
+        lbs = lb_pol.on_ack(s.lb, hot_ack, ef, ee, ec, is_ack, is_nack,
+                            flow_ok=(~rod_mask) if mixed_rod else None)
 
         # progress clock: any ACK freshens the flow
         last_progress = jnp.where(has_ack, tick, s.last_progress)
@@ -378,13 +398,16 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
         # ROD does go-back-N instead (handled at injection via next_psn).
         # Several NACKs may hit one flow, so this stays lane-wise — but
         # as a dense bitwise-OR fold over the NACK-capable lanes (ACK
-        # lanes [0, Q) never carry NACKs), not a scatter: OR is naturally
+        # lanes [0, Q) carry NACKs only for ROD flows, which never take
+        # the selective-retransmit path), not a scatter: OR is naturally
         # duplicate-safe, so no dedup or already-set pass is needed.
         nf, nep = ef[Q:], ep[Q:]
         n_nack = is_nack[Q:]
         nack_off = nep - src_track.base[jnp.where(n_nack, nf, 0)].astype(jnp.int32)
-        if not is_rod:
+        if not all_rod:
             n_ok = n_nack & (nack_off >= 0) & (nack_off < mp)
+            if mixed_rod:
+                n_ok = n_ok & ~rod_mask[jnp.where(n_nack, nf, 0)]
             no = jnp.clip(nack_off, 0, mp - 1)
             nbit = jnp.where(n_ok, jnp.uint32(1) << (no % 32).astype(jnp.uint32),
                              jnp.uint32(0))
@@ -401,7 +424,8 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
         # slot i carries PSNs i, i+K, i+2K...; an ACK for PSN x implies
         # every unacked PSN x-K, x-2K... in the same slot was lost.
         slot_last_ack = s.slot_last_ack
-        if p.lb == LBScheme.RR_SLOTS and not is_rod:
+        if profile.lb == LBScheme.RR_SLOTS and not all_rod:
+            has_ack_rr = has_ack & ~rod_mask if mixed_rod else has_ack
             sl = ack_psn % K
             prev = jnp.take_along_axis(slot_last_ack, sl[:, None],
                                        axis=1)[:, 0]
@@ -413,9 +437,10 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
                 w_i = jnp.clip(off, 0, rtx.shape[1] * 32 - 1)
                 sacked = (_own_word(src_track.ring, off)
                           >> (w_i % 32).astype(jnp.uint32)) & jnp.uint32(1)
-                lost = has_ack & (miss > prev) & (miss >= 0) & (sacked == 0)
+                lost = has_ack_rr & (miss > prev) & (miss >= 0) & (sacked == 0)
                 rtx = _set_own_bit(rtx, off, lost)
-            hot_sl = (jnp.arange(K)[None, :] == sl[:, None]) & has_ack[:, None]
+            hot_sl = (jnp.arange(K)[None, :] == sl[:, None]) \
+                & has_ack_rr[:, None]
             slot_last_ack = jnp.where(
                 hot_sl, jnp.maximum(slot_last_ack, ack_psn[:, None]),
                 slot_last_ack)
@@ -426,27 +451,34 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
 
         # ------------------------------------------- 2. RCCC receiver grants
         done = src_track.base.astype(jnp.int32) >= wl.size
-        rcc = s.rccc
-        if p.rccc:
-            active = ~done & (tick >= wl.start)
-            rcc = grant_credits(rcc, flow_dst, active, H)
+        active = ~done & (tick >= wl.start)
+        cc_st = cc_pol.on_grant_tick(cc_st, flow_dst, active, H)
 
         # --------------------------------------------------- 3. injection
-        has_rtx = (rtx != 0).any(axis=1) if not is_rod else jnp.zeros((F,), jnp.bool_)
+        has_rtx = (rtx != 0).any(axis=1)
+        if all_rod:
+            has_rtx = jnp.zeros((F,), jnp.bool_)
+        elif mixed_rod:
+            has_rtx = has_rtx & ~rod_mask
         # ROD go-back-N: on NACK or timeout, rewind next_psn to base
         next_psn = s.next_psn
-        if is_rod:
+        if any_rod:
             timeout_rod = (inflight > 0) & (tick - last_progress > p.timeout_ticks)
             rewind = rod_gbn | timeout_rod
+            if mixed_rod:
+                rewind = rewind & rod_mask
             next_psn = jnp.where(rewind, src_track.base.astype(jnp.int32), next_psn)
             inflight = jnp.where(rewind, 0, inflight)
             last_progress = jnp.where(rewind, tick, last_progress)
 
-        window = jnp.floor(nst.cwnd).astype(jnp.int32) if p.nscc \
-            else jnp.full((F,), int(p.max_cwnd), jnp.int32)
-        win_ok = inflight < window
-        if p.rccc:
-            win_ok = win_ok & (rcc.balance >= 1.0)
+        win_ok = cc_pol.on_send_gate(cc_st, inflight)
+        if any_rod:
+            # in-order CACK gate (ROD): the ordered window may not race
+            # more than one congestion window past the cumulative ACK
+            rod_win = jnp.maximum(
+                jnp.floor(cc_pol.cwnd_view(cc_st, F)).astype(jnp.int32), 1)
+            rod_ok = (next_psn - src_track.base.astype(jnp.int32)) < rod_win
+            win_ok = win_ok & jnp.where(rod_mask, rod_ok, True)
         mp_ok = (next_psn - src_track.base.astype(jnp.int32)) < p.mp_range
         can_new = (next_psn < wl.size) & mp_ok
         eligible = (tick >= wl.start) & ~done & win_ok & (has_rtx | can_new)
@@ -469,15 +501,21 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
         rtx = _clear_own_bit(rtx, rtx_off, use_rtx)
         next_psn = jnp.where(injected & ~use_rtx, next_psn + 1, next_psn)
 
-        lbs2, ev_sel = select_ev(lbs, lb_scheme, psn_out.astype(jnp.uint32), tick)
+        lbs2, ev_sel = lb_pol.select(lbs, psn_out.astype(jnp.uint32), tick)
+        if mixed_rod:
+            # ROD lanes are pinned to their static single-path EV and do
+            # not advance the spraying state
+            ev_sel = jnp.where(rod_mask, lb_pol.static_ev(lbs), ev_sel)
+            commit = injected & ~rod_mask
+        else:
+            commit = injected
         lbs = jax.tree_util.tree_map(
             lambda a, b: jnp.where(
-                injected.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
+                commit.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
             lbs, lbs2)
         inj_q = rt.injection_queue(flow_src, flow_dst, ev_sel)
         inflight = inflight + injected.astype(jnp.int32)
-        if p.rccc:
-            rcc = replace(rcc, balance=rcc.balance - injected.astype(jnp.float32))
+        cc_st = cc_pol.on_inject(cc_st, injected)
         retransmits = s.retransmits + use_rtx.sum(dtype=jnp.int32)
 
         # ------------------------------------------------- 4. forwarding
@@ -514,11 +552,21 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
         d_off = (d_psn.astype(jnp.uint32)
                  - s.dst_track.base).astype(jnp.int32)
         d_in_range = has_d & (d_off >= 0) & (d_off < mp)
+        if any_rod:
+            # ROD receiver accepts only the next in-order PSN (go-back-N
+            # semantics): out-of-order arrivals are discarded and NACKed
+            # with the first-gap PSN so the source rewinds immediately
+            rod_rej_f = d_in_range & (d_off != 0)
+            if mixed_rod:
+                rod_rej_f = rod_rej_f & rod_mask
+            d_rec = d_in_range & ~rod_rej_f
+        else:
+            d_rec = d_in_range
         d_bit = jnp.uint32(1) << (d_off % 32).astype(jnp.uint32)
-        d_already = d_in_range & (
+        d_already = d_rec & (
             (_own_word(s.dst_track.ring, d_off) & d_bit) != 0)
-        fresh_f = d_in_range & ~d_already
-        d_ring = s.dst_track.ring | _bit_plane(d_off, d_in_range, W)
+        fresh_f = d_rec & ~d_already
+        d_ring = s.dst_track.ring | _bit_plane(d_off, d_rec, W)
         d_ring, d_base, _ = kops.sack_advance(d_ring, s.dst_track.base)
         dst_track = pds.PSNTracker(
             base=d_base, ring=d_ring,
@@ -526,14 +574,18 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
             dup=s.dst_track.dup + jnp.where(d_already, one, 0),
             oor=s.dst_track.oor + jnp.where(has_d & ~d_in_range, one, 0),
         )
-        dups = s.dups + (has_d & ~fresh_f).sum(dtype=jnp.int32)
+        if any_rod:
+            dups = s.dups + (has_d & ~fresh_f & ~rod_rej_f).sum(
+                dtype=jnp.int32)
+            rod_rejects = s.rod_rejects + rod_rej_f.sum(dtype=jnp.int32)
+        else:
+            dups = s.dups + (has_d & ~fresh_f).sum(dtype=jnp.int32)
+            rod_rejects = s.rod_rejects
         delivered_ctr = s.delivered + fresh_f.astype(jnp.int32)
-        if is_rudi:
-            # idempotent ops: re-applied duplicates also count as delivered
-            delivered_ctr = delivered_ctr  # (payload applied; stats keep first-copy)
-        if p.rccc:
-            hot_seen = (pf[None, :] == flow_ids[:, None]) & deliver[None, :]
-            rcc = replace(rcc, seen=rcc.seen | hot_seen.any(axis=1))
+        # RUDI lanes: idempotent ops are re-applied on duplicates (no
+        # receiver dedup state needed); stats still count first copies
+        hot_seen = (pf[None, :] == flow_ids[:, None]) & deliver[None, :]
+        cc_st = cc_pol.on_rx_seen(cc_st, hot_seen.any(axis=1))
 
         # ------------------------------------- 6. OOO-count loss inference
         ooo_fire = jnp.zeros((F,), jnp.bool_)
@@ -585,8 +637,19 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
 
         # ------------------------------------------- 8. schedule control TC
         out_slot = (tick + p.ack_return_ticks) % D
-        # lanes [0, Q): ACKs from deliveries
-        ack_lane_t = jnp.where(ddata, EV_ACK, EV_NONE)
+        # lanes [0, Q): ACKs from deliveries (ROD rejects become OOO
+        # NACKs carrying the receiver's first-gap PSN)
+        if any_rod:
+            rod_rej_lane = ddata & rod_rej_f[safe_pf]
+            ack_lane_t = jnp.where(
+                rod_rej_lane, EV_OOO,
+                jnp.where(ddata, EV_ACK, EV_NONE))
+            ack_lane_psn = jnp.where(
+                rod_rej_lane,
+                dst_track.base[safe_pf].astype(jnp.int32), pp)
+        else:
+            ack_lane_t = jnp.where(ddata, EV_ACK, EV_NONE)
+            ack_lane_psn = pp
         # lanes [Q, Q + (Q+F)): trim NACKs from enqueue overflow
         nack_lane_t = jnp.where(nack_mask, EV_NACK, EV_NONE)
         # lanes [2Q+F, 2Q+2F): OOO NACKs (psn = receiver base = first gap)
@@ -594,7 +657,7 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
         new_type = jnp.concatenate([ack_lane_t, nack_lane_t, ooo_lane_t])
         new_flow = jnp.concatenate([safe_pf, cand_flow, jnp.arange(F)])
         new_psn = jnp.concatenate(
-            [pp, cand_psn, dst_track.base.astype(jnp.int32)])
+            [ack_lane_psn, cand_psn, dst_track.base.astype(jnp.int32)])
         new_val = jnp.concatenate([pe, cand_ev, jnp.zeros((F,), jnp.int32)])
         new_ecn = jnp.concatenate(
             [((pm & META_ECN) != 0).astype(jnp.int32),
@@ -605,9 +668,11 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
             axis=-1))
 
         # ------------------------------------------------- 9. timeouts + QA
-        if not is_rod:
+        if not all_rod:
             stalled = (inflight > 0) & (tick - last_progress > p.timeout_ticks) \
                 & ~done
+            if mixed_rod:
+                stalled = stalled & ~rod_mask  # ROD timeouts rewind instead
             rtx = _set_own_bit(rtx, jnp.zeros((F,), jnp.int32),
                                stalled)  # offset 0 == oldest unacked PSN
             # a timeout implies the outstanding packets are gone (dropped
@@ -615,25 +680,24 @@ def make_step(g: QueueGraph, p: SimParams, F: int):
             # reopens — otherwise non-trimmed drops leak inflight forever.
             inflight = jnp.where(stalled, 0, inflight)
             last_progress = jnp.where(stalled, tick, last_progress)
-            if p.nscc:
-                nst = nscc_mod.on_loss_per_flow(nst, stalled.astype(jnp.int32))
-        if p.nscc:
-            nst = nscc_mod.quick_adapt(nst, nparams, tick)
+            cc_st = cc_pol.on_timeout(cc_st, stalled)
+        cc_st = cc_pol.end_of_tick(cc_st, tick)
 
         ns = SimState(
             q_pkt=q_pkt, q_head=q_head, q_len=q_len,
             next_psn=next_psn, inflight=inflight, src_track=src_track,
             rtx=rtx, last_progress=last_progress, slot_last_ack=slot_last_ack,
             dst_track=dst_track, last_ooo_nack=last_ooo_nack,
-            nscc=nst, rccc=rcc, lb=lbs,
+            cc=cc_st, lb=lbs,
             ev_buf=ev_buf,
             delivered=delivered_ctr, trims=trims, drops=drops, dups=dups,
-            retransmits=retransmits,
+            rod_rejects=rod_rejects, retransmits=retransmits,
         )
         out = {
             "delivered": fresh_f.astype(jnp.int32),
-            "cwnd": nst.cwnd,
+            "cwnd": cc_pol.cwnd_view(cc_st, F),
             "qlen_max": q_len.max(),
+            "rx_base": dst_track.base,
         }
         return ns, out
 
@@ -646,20 +710,37 @@ class SimResult:
     delivered_per_tick: np.ndarray  # [T, F]
     cwnd_per_tick: np.ndarray       # [T, F]
     qlen_max: np.ndarray            # [T]
+    rx_base_per_tick: np.ndarray    # [T, F] receiver CACK per tick
+    msg_size: np.ndarray            # [F] message sizes (packets)
 
-    def completion_tick(self) -> np.ndarray:
-        """First tick by which each flow's full message was delivered."""
+    def completion_ticks(self) -> np.ndarray:
+        """Per-flow first tick by which the full message was delivered
+        (-1 where the flow did not finish within the run).
+
+        Completion means the message SIZE was reached — a run that ends
+        mid-transfer reports -1, it does not silently count the last
+        delivery as "done" (the pre-profile API's bug)."""
         cum = self.delivered_per_tick.cumsum(axis=0)
-        size = cum[-1]
-        reached = cum >= size[None, :]
+        reached = cum >= self.msg_size[None, :]
         return np.where(reached.any(0), reached.argmax(axis=0), -1)
 
-    def goodput(self, window: tuple[int, int] | None = None) -> np.ndarray:
+    def completion_tick(self) -> int:
+        """Tick by which EVERY flow completed, as a plain int; -1 if any
+        flow was still unfinished when the run ended."""
+        ct = self.completion_ticks()
+        return -1 if bool((ct < 0).any()) else int(ct.max())
+
+    def goodput(self, window: "tuple[int, int] | None" = None) -> np.ndarray:
         """Per-flow delivered packets / tick over a window (fraction of
         line rate, since line rate == 1 packet/tick)."""
         d = self.delivered_per_tick
         if window is not None:
-            d = d[window[0]:window[1]]
+            w0, w1 = window
+            d = d[w0:w1]
+        if d.shape[0] == 0:
+            raise ValueError(
+                f"goodput window {window!r} selects no ticks (run recorded "
+                f"{self.delivered_per_tick.shape[0]} ticks)")
         return d.mean(axis=0)
 
 
@@ -667,31 +748,34 @@ class SimResult:
 # scenario engine: compiled-run cache + single and batched entry points
 # --------------------------------------------------------------------------
 
-#: compiled scan cache. Keyed on (topology identity, params minus the
-#: failure set, flow count, batch mode): workloads, seeds and failure
-#: masks are traced, so scenario sweeps reuse one executable. `id(g)` is
-#: part of the key because the compiled step bakes in g's wiring tables
-#: — two graphs sharing a name must not share an executable. (The cached
-#: closure keeps `g` alive via its RoutingTables, so a live entry's id
-#: can't be recycled by a different graph.)
+#: compiled scan cache. Keyed on (topology identity, profile, params,
+#: flow count, batch mode): workloads, seeds and failure masks are
+#: traced, so scenario sweeps reuse one executable; profiles are static
+#: and pick the executable. `id(g)` is part of the key because the
+#: compiled step bakes in g's wiring tables — two graphs sharing a name
+#: must not share an executable. (The cached closure keeps `g` alive via
+#: its RoutingTables, so a live entry's id can't be recycled by a
+#: different graph.)
 _RUN_CACHE: dict = {}
 
 
-def _cache_key(g: QueueGraph, p: SimParams, F: int, batched: bool):
-    return (id(g), g.name, replace(p, failed_queues=()), F, batched)
+def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
+               F: int, batched: bool):
+    return (id(g), g.name, profile, p, F, batched)
 
 
-def _get_fns(g: QueueGraph, p: SimParams, F: int, batched: bool):
+def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
+             F: int, batched: bool):
     """(jitted init, jitted scan) pair. The scan donates the carry (`s0`
     buffers are reused in place); init is compiled so scenario setup
     costs microseconds, not eager-dispatch milliseconds."""
-    key = _cache_key(g, p, F, batched)
+    key = _cache_key(g, profile, p, F, batched)
     fns = _RUN_CACHE.get(key)
     if fns is None:
-        step = make_step(g, p, F)
+        step = make_step(g, profile, p, F)
 
         def init_one(wl, seed):
-            return init_state(g, wl, p, seed)
+            return init_state(g, wl, profile, p, seed)
 
         def scan_one(s0, wl, dead):
             def body(s, tick):
@@ -705,43 +789,156 @@ def _get_fns(g: QueueGraph, p: SimParams, F: int, batched: bool):
     return fns
 
 
-def _dead_mask(g: QueueGraph, p: SimParams) -> np.ndarray:
-    dead = np.zeros((g.num_queues,), bool)
-    for fq in p.failed_queues:
-        dead[fq] = True
-    return dead
+def _profile_from_legacy(p: SimParams) -> TransportProfile:
+    """Map the pre-profile SimParams knobs onto a TransportProfile."""
+    mode = TransportMode.RUD if p.mode is None else p.mode
+    delivery = {
+        TransportMode.RUD: DeliveryMode.RUD,
+        TransportMode.ROD: DeliveryMode.ROD,
+        TransportMode.RUDI: DeliveryMode.RUDI,
+        TransportMode.UUD: DeliveryMode.RUD,  # UUD loss model not split out
+    }[TransportMode(mode)]
+    nscc = True if p.nscc is None else bool(p.nscc)
+    rccc = False if p.rccc is None else bool(p.rccc)
+    cc = (CCAlgo.NSCC_AND_RCCC if nscc and rccc
+          else CCAlgo.NSCC if nscc
+          else CCAlgo.RCCC if rccc
+          else CCAlgo.NONE)
+    lb = LBScheme.OBLIVIOUS if p.lb is None else LBScheme(p.lb)
+    return TransportProfile(cc=cc, lb=lb, delivery=delivery, name="legacy")
 
 
-def _to_result(final: SimState, outs: dict) -> SimResult:
+_LEGACY_FIELDS = ("mode", "lb", "nscc", "rccc")
+
+
+def _normalize_call(profile, p, failed):
+    """The single conversion point from the public signatures (new or
+    legacy) to the engine's (profile, numeric-only params, failure spec).
+
+    Returns (profile, p, failed) with p's deprecated fields stripped, so
+    the compile cache keys on the canonical form only.
+    """
+    if isinstance(profile, SimParams):
+        if p is not None:
+            raise TypeError("got SimParams in the profile position AND a "
+                            "params argument — pass (profile, params)")
+        warnings.warn(
+            "simulate(g, wl, SimParams(...)) is deprecated: transport "
+            "composition moved to TransportProfile — call "
+            "simulate(g, wl, TransportProfile(...), SimParams(...))",
+            DeprecationWarning, stacklevel=3)
+        p = profile
+        profile = _profile_from_legacy(p)
+    else:
+        if profile is None:
+            profile = TransportProfile.ai_full()
+        if p is None:
+            p = SimParams()
+        set_legacy = [f for f in _LEGACY_FIELDS if getattr(p, f) is not None]
+        if set_legacy:
+            raise ValueError(
+                f"SimParams.{'/'.join(set_legacy)} are deprecated and "
+                f"ignored when a TransportProfile is given — encode the "
+                f"transport composition in the profile instead")
+    if p.failed_queues:
+        warnings.warn(
+            "SimParams.failed_queues is deprecated: pass failed= to "
+            "simulate()/simulate_batch() (a queue-id tuple or a bool mask)",
+            DeprecationWarning, stacklevel=3)
+        if failed is not None:
+            raise ValueError("both SimParams.failed_queues and failed= "
+                             "were given; use failed= only")
+        failed = tuple(p.failed_queues)
+    p = replace(p, mode=None, lb=None, nscc=None, rccc=None, failed_queues=())
+    return profile, p, failed
+
+
+def _failed_to_mask(g: QueueGraph, failed) -> np.ndarray:
+    """[Q] bool mask from None / queue-id iterable / bool mask."""
+    if failed is None:
+        return np.zeros((g.num_queues,), bool)
+    arr = np.asarray(failed)
+    if arr.dtype == bool:
+        if arr.shape != (g.num_queues,):
+            raise ValueError(f"failed mask must be [Q={g.num_queues}], "
+                             f"got {arr.shape}")
+        return arr
+    if arr.size and (arr.min() < 0 or arr.max() >= g.num_queues):
+        raise ValueError(f"failed queue ids must be in [0, {g.num_queues}); "
+                         f"pass a bool array to give a mask instead")
+    mask = np.zeros((g.num_queues,), bool)
+    mask[arr.astype(np.int64)] = True
+    return mask
+
+
+def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
     return SimResult(
         state=jax.device_get(final),
         delivered_per_tick=np.asarray(outs["delivered"]),
         cwnd_per_tick=np.asarray(outs["cwnd"]),
         qlen_max=np.asarray(outs["qlen_max"]),
+        rx_base_per_tick=np.asarray(outs["rx_base"]),
+        msg_size=np.asarray(msg_size),
     )
 
 
-def simulate(g: QueueGraph, wl: Workload, p: SimParams,
-             seed: int = DEFAULT_SEED) -> SimResult:
-    """Run the fabric for p.ticks; returns dense per-tick stats."""
+def simulate(g: QueueGraph, wl: Workload,
+             profile: "TransportProfile | SimParams | None" = None,
+             p: "SimParams | None" = None, *,
+             seed: int = DEFAULT_SEED, failed=None) -> SimResult:
+    """Run one scenario for p.ticks; returns dense per-tick stats.
+
+    profile: the transport composition (defaults to ai_full()). Passing a
+             SimParams here takes the deprecated pre-profile path.
+    failed:  queue ids (tuple) or [Q] bool mask of dead links.
+    """
+    profile, p, failed = _normalize_call(profile, p, failed)
     F = int(wl.src.shape[0])
-    init, run = _get_fns(g, p, F, batched=False)
+    profile.delivery_modes(F)  # validate per-flow tuples early
+    init, run = _get_fns(g, profile, p, F, batched=False)
     s0 = init(wl, jnp.uint32(seed))
-    final, outs = run(s0, wl, jnp.asarray(_dead_mask(g, p)))
-    return _to_result(final, outs)
+    final, outs = run(s0, wl, jnp.asarray(_failed_to_mask(g, failed)))
+    return _to_result(final, outs, wl.size)
 
 
-def simulate_batch(g: QueueGraph, wls: Workload, p: SimParams,
-                   failed: "np.ndarray | None" = None,
-                   seeds: "np.ndarray | None" = None) -> list[SimResult]:
-    """Run B scenarios in one compiled, vmapped scan.
+def _run_batch(g, wls, profile, p, dead, seeds) -> "list[SimResult]":
+    B, F = wls.src.shape
+    profile.delivery_modes(F)
+    init, run = _get_fns(g, profile, p, F, batched=True)
+    s0 = init(wls, seeds)
+    final, outs = run(s0, wls, dead)
+    final = jax.device_get(final)
+    outs = jax.device_get(outs)
+    sizes = np.asarray(wls.size)
+    return [
+        SimResult(
+            state=jax.tree_util.tree_map(lambda a: a[b], final),
+            delivered_per_tick=np.asarray(outs["delivered"][b]),
+            cwnd_per_tick=np.asarray(outs["cwnd"][b]),
+            qlen_max=np.asarray(outs["qlen_max"][b]),
+            rx_base_per_tick=np.asarray(outs["rx_base"][b]),
+            msg_size=sizes[b],
+        )
+        for b in range(B)
+    ]
 
-    wls:    Workload with a leading scenario axis ([B, F]); build with
-            ``Workload.stack`` or pass a list of same-F Workloads.
-    failed: optional [B, Q] bool — per-scenario failed-queue masks
-            (default: every scenario uses p.failed_queues).
-    seeds:  optional [B] — per-scenario LB/EV seeds (default: the same
-            DEFAULT_SEED every ``simulate`` call uses).
+
+def simulate_batch(g: QueueGraph, wls: Workload,
+                   profile=None, p: "SimParams | None" = None, *,
+                   failed=None, seeds=None) -> "list[SimResult]":
+    """Run B scenarios as compiled, vmapped scans.
+
+    wls:     Workload with a leading scenario axis ([B, F]); build with
+             ``Workload.stack`` or pass a list of same-F Workloads.
+    profile: one TransportProfile for every scenario, or a length-B list
+             of per-scenario profiles. Profiles are static, so the batch
+             is grouped by distinct profile — each group runs as one
+             vmapped scan sharing one executable (a profile-ablation grid
+             is one call here and one compile per profile).
+    failed:  optional per-scenario failed-queue spec: [B, Q] bool, one
+             [Q] mask, or a queue-id tuple (broadcast to every scenario).
+    seeds:   optional [B] — per-scenario LB/EV seeds (default: the same
+             DEFAULT_SEED every ``simulate`` call uses).
 
     Returns one SimResult per scenario, bitwise identical to the
     corresponding serial ``simulate`` call: the tick function is the same
@@ -749,27 +946,49 @@ def simulate_batch(g: QueueGraph, wls: Workload, p: SimParams,
     """
     if isinstance(wls, (list, tuple)):
         wls = Workload.stack(wls)
+    profiles = None
+    if isinstance(profile, (list, tuple)):
+        profiles = list(profile)
+        profile = None
+        if not all(isinstance(q, TransportProfile) for q in profiles):
+            raise TypeError("per-scenario profiles must all be "
+                            "TransportProfile instances")
+    profile, p, failed = _normalize_call(profile, p, failed)
     B, F = wls.src.shape
-    init, run = _get_fns(g, p, F, batched=True)
     if seeds is None:
         seeds = np.full((B,), DEFAULT_SEED, np.uint32)
     seeds = jnp.asarray(seeds, jnp.uint32)
     if failed is None:
-        failed = np.broadcast_to(_dead_mask(g, p), (B, g.num_queues))
-    dead = jnp.asarray(failed, bool)
+        dead = np.zeros((B, g.num_queues), bool)
+    else:
+        arr = np.asarray(failed)
+        if arr.ndim == 2:
+            # any 2-D array is a per-scenario mask (0/1 ints included —
+            # the pre-profile API accepted those)
+            dead = arr.astype(bool)
+        else:
+            dead = np.broadcast_to(_failed_to_mask(g, failed),
+                                   (B, g.num_queues))
     if dead.shape != (B, g.num_queues):
         raise ValueError(f"failed mask must be [B={B}, Q={g.num_queues}], "
                          f"got {dead.shape}")
-    s0 = init(wls, seeds)
-    final, outs = run(s0, wls, dead)
-    final = jax.device_get(final)
-    outs = jax.device_get(outs)
-    return [
-        SimResult(
-            state=jax.tree_util.tree_map(lambda a: a[b], final),
-            delivered_per_tick=np.asarray(outs["delivered"][b]),
-            cwnd_per_tick=np.asarray(outs["cwnd"][b]),
-            qlen_max=np.asarray(outs["qlen_max"][b]),
-        )
-        for b in range(B)
-    ]
+    dead = jnp.asarray(dead, bool)
+
+    if profiles is None:
+        return _run_batch(g, wls, profile, p, dead, seeds)
+
+    # per-scenario profiles: group scenarios by (static) profile and run
+    # each group as one vmapped scan — one executable per distinct profile
+    if len(profiles) != B:
+        raise ValueError(f"got {len(profiles)} profiles for B={B} scenarios")
+    groups: "dict[TransportProfile, list[int]]" = {}
+    for i, q in enumerate(profiles):
+        groups.setdefault(q, []).append(i)
+    results: "list[SimResult | None]" = [None] * B
+    for prof, idxs in groups.items():
+        sel = np.asarray(idxs)
+        sub_wls = jax.tree_util.tree_map(lambda a: a[sel], wls)
+        rs = _run_batch(g, sub_wls, prof, p, dead[sel], seeds[sel])
+        for j, i in enumerate(idxs):
+            results[i] = rs[j]
+    return results

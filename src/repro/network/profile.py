@@ -1,0 +1,271 @@
+"""Declarative UET transport profiles (Sec. 2.2) — the public knob surface.
+
+The UET spec's usability claim is that ONE transport composes into many
+operating points: profiles (AI Base / AI Full / HPC), per-flow delivery
+modes (ROD / RUD / RUDI), and selectable congestion control (sender-based
+NSCC, receiver-based RCCC, or both, Sec. 3.3.3). A
+:class:`TransportProfile` is the frozen, hashable spec of one such
+composition; the fabric engine (`repro.network.fabric`) compiles one
+executable per profile and sweeps everything else (workloads, seeds,
+failure masks) as traced inputs.
+
+Composition contract
+--------------------
+* ``cc`` picks the congestion-control policy object (see `make_cc_policy`):
+  a small protocol of per-tick hooks (``on_ack`` / ``on_nack`` /
+  ``on_send_gate`` / ...) over the engine's densified per-flow lanes.
+  New CC algorithms implement the same protocol and land without touching
+  the engine.
+* ``lb`` picks the Entropy-Value load-balancing scheme
+  (`repro.core.lb.schemes.LBPolicy`). A profile whose flows are all ROD
+  pins the scheme to STATIC (single path per flow, as the spec requires
+  for ordered delivery).
+* ``delivery`` is either one :class:`DeliveryMode` for every flow or a
+  tuple with one mode per flow. ROD flows use go-back-N on a static path
+  and additionally gate injection on in-order CACK advance; RUD flows
+  spray with selective retransmit; RUDI flows are RUD with idempotent
+  re-application at the receiver (no semantic dedup needed — the fabric
+  still counts first copies for stats).
+
+Everything in a profile is **static**: it is part of the compile-cache
+key, so two profiles never share an executable, and sweeping a profile
+axis means one compiled scan per distinct profile (the batched entry
+point groups scenarios by profile for you).
+
+Named profiles — the paper's Sec. 2.2 table, mapped onto the transport
+compositions this simulator models:
+
+* ``ai_base()``  — minimal NICs: receiver-driven credits (RCCC) pair with
+  the profile's receiver-initiated large-message protocol (Sec. 3.1.3);
+  oblivious spraying; unordered delivery.
+* ``ai_full()``  — AI Base's semantic surface plus deferrable send; on the
+  wire it is the engine's default operating point: sender-based NSCC,
+  oblivious spraying, RUD. (This profile is the bitwise-parity anchor
+  against the pre-refactor engine.)
+* ``hpc()``      — the full feature set: ordered delivery (ROD) for tag
+  ordering, both CC loops composed, and REPS recycling for any flows
+  overridden back to RUD.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cms.nscc import NSCCParams, NSCCPolicy
+from repro.core.cms.rccc import RCCCPolicy
+from repro.core.lb.schemes import LBScheme
+
+
+class CCAlgo(enum.IntEnum):
+    """Congestion-control composition (Sec. 3.3): sender-based, receiver-
+    based, both (the spec's recommended hybrid), or open loop (fixed
+    window — the ablation baseline)."""
+
+    NONE = 0
+    NSCC = 1
+    RCCC = 2
+    NSCC_AND_RCCC = 3
+
+
+class DeliveryMode(enum.IntEnum):
+    """Per-flow PDS delivery mode (Sec. 3.2.1). Codes match
+    `repro.core.types.TransportMode` so headers and the fabric agree."""
+
+    RUD = 0   # reliable unordered — spraying + selective retransmit
+    ROD = 1   # reliable ordered — go-back-N on one static path
+    RUDI = 3  # reliable unordered, idempotent ops — dedup-free receiver
+
+
+@dataclass(frozen=True)
+class TransportProfile:
+    """Frozen, hashable spec of one transport operating point.
+
+    ``name`` is a display label only — it is excluded from equality and
+    hashing, so `replace(ai_full(), cc=...)` still keys the compile cache
+    by what it *does*, not what it is called.
+    """
+
+    cc: CCAlgo = CCAlgo.NSCC
+    lb: LBScheme = LBScheme.OBLIVIOUS
+    delivery: "DeliveryMode | tuple[DeliveryMode, ...]" = DeliveryMode.RUD
+    name: str = field(default="custom", compare=False)
+
+    def __post_init__(self):
+        if isinstance(self.delivery, (list, tuple)):
+            object.__setattr__(
+                self, "delivery",
+                tuple(DeliveryMode(m) for m in self.delivery))
+        else:
+            object.__setattr__(self, "delivery", DeliveryMode(self.delivery))
+
+    # -- named constructors (paper Sec. 2.2 profile table) ----------------
+    @classmethod
+    def ai_base(cls, **overrides) -> "TransportProfile":
+        return cls(**{"cc": CCAlgo.RCCC, "lb": LBScheme.OBLIVIOUS,
+                      "delivery": DeliveryMode.RUD, "name": "ai_base",
+                      **overrides})
+
+    @classmethod
+    def ai_full(cls, **overrides) -> "TransportProfile":
+        return cls(**{"cc": CCAlgo.NSCC, "lb": LBScheme.OBLIVIOUS,
+                      "delivery": DeliveryMode.RUD, "name": "ai_full",
+                      **overrides})
+
+    @classmethod
+    def hpc(cls, **overrides) -> "TransportProfile":
+        return cls(**{"cc": CCAlgo.NSCC_AND_RCCC, "lb": LBScheme.REPS,
+                      "delivery": DeliveryMode.ROD, "name": "hpc",
+                      **overrides})
+
+    # -- derived views -----------------------------------------------------
+    def delivery_modes(self, num_flows: int) -> np.ndarray:
+        """[F] int array of DeliveryMode codes (validates per-flow tuples)."""
+        if isinstance(self.delivery, tuple):
+            if len(self.delivery) != num_flows:
+                raise ValueError(
+                    f"profile has {len(self.delivery)} per-flow delivery "
+                    f"modes but the workload has {num_flows} flows")
+            return np.asarray([int(m) for m in self.delivery], np.int32)
+        return np.full((num_flows,), int(self.delivery), np.int32)
+
+    def describe(self) -> str:
+        d = (self.delivery.name if isinstance(self.delivery, DeliveryMode)
+             else "per-flow[" + ",".join(m.name for m in self.delivery) + "]")
+        return f"{self.name}(cc={self.cc.name}, lb={self.lb.name}, delivery={d})"
+
+
+# ---------------------------------------------------------------------------
+# CC policy protocol + composition
+# ---------------------------------------------------------------------------
+#
+# A CC policy is a frozen object the engine composes the tick from. Its
+# state is an arbitrary pytree carried inside SimState; the hooks run at
+# fixed points of the tick, all over densified [F] lanes:
+#
+#   create(F)                      -> state pytree
+#   on_ack(st, has_ack, ecn, rtt)  -> st    ACK arrived (<=1 per flow/tick)
+#   on_nack(st, count)             -> st    loss evidence (trim/OOO NACKs)
+#   on_grant_tick(st, dst, active, H) -> st receiver scheduling round
+#   on_send_gate(st, inflight)     -> [F] bool  may this flow inject?
+#   on_inject(st, injected)        -> st    a packet actually left
+#   on_rx_seen(st, seen)           -> st    receiver observed flow activity
+#   on_timeout(st, stalled)        -> st    retransmit timer fired
+#   end_of_tick(st, tick)          -> st    epoch work (Quick Adapt)
+#   cwnd_view(st)                  -> [F] float32  reported window lane
+#
+# NSCCPolicy / RCCCPolicy live next to their algorithms in
+# repro.core.cms; the open-loop baseline and the hybrid composition below.
+
+
+@dataclass(frozen=True)
+class OpenLoopPolicy:
+    """No congestion control: a fixed window of `max_cwnd` packets."""
+
+    max_cwnd: float
+
+    def create(self, f: int):
+        return jnp.zeros((0,), jnp.int32)  # stateless placeholder
+
+    def on_ack(self, st, has_ack, ecn, rtt):
+        return st
+
+    def on_nack(self, st, count):
+        return st
+
+    def on_grant_tick(self, st, flow_dst, active, num_hosts):
+        return st
+
+    def on_send_gate(self, st, inflight):
+        return inflight < jnp.int32(int(self.max_cwnd))
+
+    def on_inject(self, st, injected):
+        return st
+
+    def on_rx_seen(self, st, seen):
+        return st
+
+    def on_timeout(self, st, stalled):
+        return st
+
+    def end_of_tick(self, st, tick):
+        return st
+
+    def cwnd_view(self, st, f: int):
+        return jnp.full((f,), self.max_cwnd, jnp.float32)
+
+
+@dataclass(frozen=True)
+class HybridCCPolicy:
+    """NSCC and RCCC composed, as Sec. 3.3.3 prescribes: the sender obeys
+    BOTH the network-signal window and the receiver credit balance; each
+    sub-policy sees the same feedback it would see running alone."""
+
+    nscc: NSCCPolicy
+    rccc: RCCCPolicy
+
+    def create(self, f: int):
+        return {"nscc": self.nscc.create(f), "rccc": self.rccc.create(f)}
+
+    def on_ack(self, st, has_ack, ecn, rtt):
+        return {"nscc": self.nscc.on_ack(st["nscc"], has_ack, ecn, rtt),
+                "rccc": st["rccc"]}
+
+    def on_nack(self, st, count):
+        return {"nscc": self.nscc.on_nack(st["nscc"], count),
+                "rccc": st["rccc"]}
+
+    def on_grant_tick(self, st, flow_dst, active, num_hosts):
+        return {"nscc": st["nscc"],
+                "rccc": self.rccc.on_grant_tick(st["rccc"], flow_dst,
+                                                active, num_hosts)}
+
+    def on_send_gate(self, st, inflight):
+        return (self.nscc.on_send_gate(st["nscc"], inflight)
+                & self.rccc.on_send_gate(st["rccc"], inflight))
+
+    def on_inject(self, st, injected):
+        return {"nscc": st["nscc"],
+                "rccc": self.rccc.on_inject(st["rccc"], injected)}
+
+    def on_rx_seen(self, st, seen):
+        return {"nscc": st["nscc"],
+                "rccc": self.rccc.on_rx_seen(st["rccc"], seen)}
+
+    def on_timeout(self, st, stalled):
+        return {"nscc": self.nscc.on_timeout(st["nscc"], stalled),
+                "rccc": st["rccc"]}
+
+    def end_of_tick(self, st, tick):
+        return {"nscc": self.nscc.end_of_tick(st["nscc"], tick),
+                "rccc": st["rccc"]}
+
+    def cwnd_view(self, st, f: int):
+        return self.nscc.cwnd_view(st["nscc"], f)
+
+
+def make_cc_policy(cc: CCAlgo, nparams: NSCCParams, max_cwnd: float):
+    """Instantiate the CC policy object a profile asks for."""
+    if cc == CCAlgo.NSCC:
+        return NSCCPolicy(params=nparams)
+    if cc == CCAlgo.RCCC:
+        return RCCCPolicy(initial_credit=max_cwnd, report_cwnd=max_cwnd)
+    if cc == CCAlgo.NSCC_AND_RCCC:
+        return HybridCCPolicy(
+            nscc=NSCCPolicy(params=nparams),
+            rccc=RCCCPolicy(initial_credit=max_cwnd, report_cwnd=max_cwnd))
+    if cc == CCAlgo.NONE:
+        return OpenLoopPolicy(max_cwnd=max_cwnd)
+    raise ValueError(f"unknown CC algorithm: {cc!r}")
+
+
+def cc_ablation(base: "TransportProfile | None" = None
+                ) -> "list[TransportProfile]":
+    """The CC-ablation axis over one composition: NSCC-only vs RCCC-only
+    vs hybrid, all else (lb, delivery) held from `base` (default ai_full)."""
+    base = TransportProfile.ai_full() if base is None else base
+    return [replace(base, cc=CCAlgo.NSCC, name="nscc_only"),
+            replace(base, cc=CCAlgo.RCCC, name="rccc_only"),
+            replace(base, cc=CCAlgo.NSCC_AND_RCCC, name="hybrid")]

@@ -19,12 +19,29 @@ from __future__ import annotations
 import numpy as np
 
 from repro.network.fabric import Workload
+from repro.network.profile import TransportProfile, cc_ablation
 from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
 
 
 # ------------------------------------------------------------------------
 # scenario sweeps (batched: feed to fabric.simulate_batch)
 # ------------------------------------------------------------------------
+
+def profile_ablation_sweep(fan_in: int = 4, size: int = 600):
+    """The paper's operating-point grid as ONE ``simulate_batch`` call:
+    the three named profiles (ai_base / ai_full / hpc) plus the CC
+    ablation over the ai_full composition (NSCC-only vs RCCC-only vs
+    hybrid), all on the same congested incast.
+
+    Returns (g, wls [P, F], profiles [P], names [P]) — pass the profiles
+    list straight to ``simulate_batch(g, wls, profiles, p)``; the engine
+    groups scenarios by profile (one executable each).
+    """
+    g, wl, _ = incast(fan_in, size=size)
+    profiles = [TransportProfile.ai_base(), TransportProfile.ai_full(),
+                TransportProfile.hpc(), *cc_ablation()]
+    wls = Workload.stack([wl] * len(profiles))
+    return g, wls, profiles, [p.name for p in profiles]
 
 def failure_sweep(spines: int = 4, hosts_per_leaf: int = 8,
                   size: int = 100000):

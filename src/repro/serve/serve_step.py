@@ -7,7 +7,6 @@ distributed/sharding.py and models/layers.py).
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

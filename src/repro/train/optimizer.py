@@ -8,7 +8,6 @@ fit the v5e HBM budget (see DESIGN.md §memory); everything else uses f32.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax

@@ -8,8 +8,6 @@ backward pass. This bounds loss memory to [B, chunk, V] regardless of S.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

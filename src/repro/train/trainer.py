@@ -20,10 +20,9 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.ckpt import checkpointing as ckpt

@@ -6,8 +6,6 @@
 * `simulate_batch` lanes are bitwise identical to serial `simulate`
   calls across mixed workloads, seeds, and failure masks.
 """
-from dataclasses import replace
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,6 +15,7 @@ from repro.core import pds
 from repro.core.lb.schemes import LBScheme
 from repro.kernels import ops
 from repro.network.fabric import SimParams, Workload, simulate, simulate_batch
+from repro.network.profile import TransportProfile
 from repro.network.topology import leaf_spine
 
 RNG = np.random.default_rng(11)
@@ -125,9 +124,10 @@ def _state_equal(a, b) -> bool:
 def test_simulate_batch1_equals_simulate():
     g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
     wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
-    p = SimParams(ticks=300, nscc=True, lb=LBScheme.OBLIVIOUS)
-    r = simulate(g, wl, p)
-    rb = simulate_batch(g, Workload.stack([wl]), p)[0]
+    prof = TransportProfile.ai_full()
+    p = SimParams(ticks=300)
+    r = simulate(g, wl, prof, p)
+    rb = simulate_batch(g, Workload.stack([wl]), prof, p)[0]
     np.testing.assert_array_equal(r.delivered_per_tick, rb.delivered_per_tick)
     np.testing.assert_array_equal(r.cwnd_per_tick, rb.cwnd_per_tick)
     np.testing.assert_array_equal(r.qlen_max, rb.qlen_max)
@@ -139,8 +139,8 @@ def test_simulate_batch8_bitwise_identical_to_serial():
     """Acceptance: 8 mixed scenarios (sizes x seeds x failure masks) in
     one vmapped scan == 8 serial runs, bitwise."""
     g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
-    p = SimParams(ticks=400, nscc=True, lb=LBScheme.REPS,
-                  timeout_ticks=64, ooo_threshold=24)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=400, timeout_ticks=64, ooo_threshold=24)
     wls, masks, seeds, fqs = [], [], [], []
     for i in range(8):
         wls.append(Workload.of(list(range(8)), [8 + j for j in range(8)],
@@ -154,9 +154,9 @@ def test_simulate_batch8_bitwise_identical_to_serial():
         masks.append(m)
         fqs.append(fq)
         seeds.append(0x5EED + i)
-    serial = [simulate(g, wls[i], replace(p, failed_queues=fqs[i]),
+    serial = [simulate(g, wls[i], prof, p, failed=fqs[i],
                        seed=seeds[i]) for i in range(8)]
-    batch = simulate_batch(g, Workload.stack(wls), p,
+    batch = simulate_batch(g, Workload.stack(wls), prof, p,
                            failed=np.stack(masks),
                            seeds=np.asarray(seeds, np.uint32))
     for i, (a, b) in enumerate(zip(serial, batch)):
@@ -175,11 +175,11 @@ def test_simulate_batch_failed_queue_masks_change_outcomes():
     silent drops in that lane only."""
     g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
     wl = Workload.of([0, 1], [2, 3], 300)
-    p = SimParams(ticks=250, nscc=True, lb=LBScheme.OBLIVIOUS,
-                  timeout_ticks=64)
+    p = SimParams(ticks=250, timeout_ticks=64)
     masks = np.zeros((2, g.num_queues), bool)
     masks[1, int(g.up1_table[0, 0])] = True
-    healthy, degraded = simulate_batch(g, Workload.stack([wl, wl]), p,
+    healthy, degraded = simulate_batch(g, Workload.stack([wl, wl]),
+                                       TransportProfile.ai_full(), p,
                                        failed=masks)
     assert int(healthy.state.drops) == 0
     assert int(degraded.state.drops) > 0
@@ -226,11 +226,12 @@ def test_run_cache_distinguishes_same_named_graphs():
     g2 = dataclasses.replace(g2, up1_table=up)
     assert g1.name == g2.name
     wl = Workload.of([0, 1], [2, 3], 60)
+    prof = TransportProfile.ai_full()
     p = SimParams(ticks=80)
-    r1 = simulate(g1, wl, p)
-    r2 = simulate(g2, wl, p)
+    r1 = simulate(g1, wl, prof, p)
+    r2 = simulate(g2, wl, prof, p)
     # both must run on their own wiring (no crash / no silent reuse);
     # delivery totals agree because the rewiring is symmetric
     assert int(r1.state.delivered.sum()) == int(r2.state.delivered.sum())
     from repro.network.fabric import _cache_key
-    assert _cache_key(g1, p, 2, False) != _cache_key(g2, p, 2, False)
+    assert _cache_key(g1, prof, p, 2, False) != _cache_key(g2, prof, p, 2, False)

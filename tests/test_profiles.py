@@ -1,0 +1,274 @@
+"""TransportProfile semantics: golden parity against the pre-refactor
+engine, CC-policy ablation divergence, per-flow delivery modes (ROD
+in-order invariant), the legacy compat shim, and SimResult contracts.
+
+The golden lanes in tests/golden/fabric_golden.npz were produced by the
+PRE-refactor engine (inline NSCC wiring, SimParams-only API) on two
+configs; ``TransportProfile.ai_full()`` on the new policy-composed engine
+must reproduce them bitwise.
+"""
+import os
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.lb.schemes import LBScheme
+from repro.network import workloads
+from repro.network.fabric import SimParams, Workload, simulate, simulate_batch
+from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
+                                   cc_ablation)
+from repro.network.topology import leaf_spine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fabric_golden.npz")
+
+
+def _golden():
+    return np.load(GOLDEN)
+
+
+def _config_a():
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
+    return g, wl, SimParams(ticks=300)
+
+
+# ------------------------------------------------------------------------
+# golden parity: ai_full == the pre-refactor default path, bitwise
+# ------------------------------------------------------------------------
+
+def test_ai_full_matches_pre_refactor_golden_lanes():
+    gold = _golden()
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p)
+    np.testing.assert_array_equal(r.delivered_per_tick, gold["a_delivered"])
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"])
+    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"])
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  gold["a_state_delivered"])
+    np.testing.assert_array_equal(np.asarray(r.state.next_psn),
+                                  gold["a_state_next_psn"])
+    np.testing.assert_array_equal(np.asarray(r.state.src_track.base),
+                                  gold["a_state_src_base"])
+
+
+def test_ai_full_reps_failure_matches_golden_batched():
+    """Config B (REPS + dead uplink + non-default seed) through
+    simulate_batch — acceptance: batched ai_full lanes are bitwise equal
+    to the pre-refactor engine's serial run."""
+    gold = _golden()
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    wl = Workload.of(list(range(8)), [8 + i for i in range(8)], 700)
+    q = int(gold["b_failed_queue"][0])
+    p = SimParams(ticks=400, timeout_ticks=64, ooo_threshold=24)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    mask = np.zeros((1, g.num_queues), bool)
+    mask[0, q] = True
+    rb = simulate_batch(g, Workload.stack([wl]), prof, p, failed=mask,
+                        seeds=np.asarray([0x5EED + 3], np.uint32))[0]
+    np.testing.assert_array_equal(rb.delivered_per_tick, gold["b_delivered"])
+    np.testing.assert_array_equal(rb.cwnd_per_tick, gold["b_cwnd"])
+    np.testing.assert_array_equal(rb.qlen_max, gold["b_qlen"])
+    np.testing.assert_array_equal(np.asarray(rb.state.delivered),
+                                  gold["b_state_delivered"])
+    np.testing.assert_array_equal(np.asarray(rb.state.src_track.base),
+                                  gold["b_state_src_base"])
+
+
+# ------------------------------------------------------------------------
+# CC ablation: the policies must actually behave differently
+# ------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_nscc_vs_rccc_diverge_under_congested_incast():
+    """NSCC (sender watches ECN/RTT) and RCCC (receiver splits its line
+    rate) are different control loops: under a 4->1 incast their window
+    trajectories and delivery patterns must diverge, while both keep the
+    aggregate near the receiver line rate."""
+    g, wl, exp = workloads.incast(4, size=100000)
+    p = SimParams(ticks=1200)
+    rs = {q.name: simulate(g, wl, q, p)
+          for q in cc_ablation()}  # nscc_only / rccc_only / hybrid
+    nscc, rccc = rs["nscc_only"], rs["rccc_only"]
+    assert not np.array_equal(nscc.delivered_per_tick,
+                              rccc.delivered_per_tick)
+    # reported window lanes: NSCC's moves, RCCC's is the static cap
+    assert nscc.cwnd_per_tick.std() > 0
+    assert rccc.cwnd_per_tick.std() == 0
+    # RCCC incast sharing is exact (Fig. 7 group 4); NSCC is close but
+    # statistical — both serve the incast near line rate
+    for r in (nscc, rccc, rs["hybrid"]):
+        gp = r.goodput((300, 1200))
+        assert abs(float(gp.sum()) - 1.0) < 0.1
+    np.testing.assert_allclose(rccc.goodput((300, 1200)), exp["share"],
+                               atol=0.02)
+    # the hybrid obeys BOTH loops: it cannot out-deliver either alone
+    total = lambda r: int(r.state.delivered.sum())
+    assert total(rs["hybrid"]) <= min(total(nscc), total(rccc)) + 50
+
+
+# ------------------------------------------------------------------------
+# delivery modes
+# ------------------------------------------------------------------------
+
+def test_rod_in_order_delivery_invariant():
+    """ROD flows deliver strictly in order: at EVERY tick the cumulative
+    delivered count equals the receiver's CACK advance (no packet is
+    accepted past a gap), even under congestion-induced trimming."""
+    g, wl, _ = workloads.incast(2, size=300)
+    prof = TransportProfile(cc=CCAlgo.NSCC, delivery=DeliveryMode.ROD,
+                            name="rod_test")
+    r = simulate(g, wl, prof, SimParams(ticks=2500))
+    cum = r.delivered_per_tick.cumsum(axis=0)
+    assert (cum[-1] == np.asarray(wl.size)).all(), "ROD must complete"
+    np.testing.assert_array_equal(cum.astype(np.uint32),
+                                  r.rx_base_per_tick)
+    assert int(r.state.trims) > 0, "scenario must actually be congested"
+
+
+def test_mixed_per_flow_delivery_modes():
+    """One profile, different modes per flow: the ROD lane keeps the
+    in-order invariant while RUD lanes spray and may complete OOO."""
+    g, wl, p = _config_a()
+    prof = TransportProfile(
+        cc=CCAlgo.NSCC, lb=LBScheme.REPS,
+        delivery=(DeliveryMode.RUD, DeliveryMode.ROD, DeliveryMode.RUDI),
+        name="mixed")
+    r = simulate(g, wl, prof, replace(p, ticks=800))
+    cum = r.delivered_per_tick.cumsum(axis=0)
+    assert (cum[-1] == 200).all()
+    np.testing.assert_array_equal(cum[:, 1].astype(np.uint32),
+                                  r.rx_base_per_tick[:, 1])
+
+
+def test_delivery_tuple_length_validated():
+    g, wl, p = _config_a()
+    prof = TransportProfile(delivery=(DeliveryMode.RUD, DeliveryMode.ROD))
+    with pytest.raises(ValueError, match="per-flow delivery"):
+        simulate(g, wl, prof, p)
+
+
+# ------------------------------------------------------------------------
+# batched profile grouping
+# ------------------------------------------------------------------------
+
+def test_batch_with_per_scenario_profiles_matches_serial():
+    g, wl, p = _config_a()
+    profs = [TransportProfile.ai_base(), TransportProfile.ai_full(),
+             TransportProfile.hpc(), TransportProfile.ai_full()]
+    rs = simulate_batch(g, Workload.stack([wl] * 4), profs, p)
+    for prof, rb in zip(profs, rs):
+        r = simulate(g, wl, prof, p)
+        np.testing.assert_array_equal(r.delivered_per_tick,
+                                      rb.delivered_per_tick,
+                                      err_msg=prof.name)
+        np.testing.assert_array_equal(r.cwnd_per_tick, rb.cwnd_per_tick,
+                                      err_msg=prof.name)
+
+
+def test_profile_hash_ignores_name():
+    """Cache identity is WHAT a profile does, not what it is called."""
+    a = TransportProfile.ai_full()
+    b = replace(a, name="renamed")
+    assert a == b and hash(a) == hash(b)
+    assert TransportProfile.ai_full() != TransportProfile.ai_base()
+
+
+# ------------------------------------------------------------------------
+# legacy compat shim + deprecations
+# ------------------------------------------------------------------------
+
+def test_legacy_simparams_signature_warns_and_matches():
+    g, wl, p = _config_a()
+    r_new = simulate(g, wl, TransportProfile.ai_full(), p)
+    with pytest.warns(DeprecationWarning, match="TransportProfile"):
+        r_old = simulate(g, wl, SimParams(ticks=300, nscc=True,
+                                          lb=LBScheme.OBLIVIOUS))
+    np.testing.assert_array_equal(r_old.delivered_per_tick,
+                                  r_new.delivered_per_tick)
+    np.testing.assert_array_equal(r_old.cwnd_per_tick, r_new.cwnd_per_tick)
+
+
+def test_failed_queues_field_deprecated_single_conversion():
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    wl = Workload.of([0, 1], [2, 3], 120)
+    dead = (int(g.up1_table[0, 0]),)
+    prof = TransportProfile.ai_full()
+    p = SimParams(ticks=200, timeout_ticks=64)
+    r_new = simulate(g, wl, prof, p, failed=dead)
+    with pytest.warns(DeprecationWarning, match="failed_queues"):
+        r_old = simulate(g, wl, prof, replace(p, failed_queues=dead))
+    np.testing.assert_array_equal(r_old.delivered_per_tick,
+                                  r_new.delivered_per_tick)
+    assert int(r_old.state.drops) > 0
+    # both ways at once is ambiguous -> error
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="failed"):
+            simulate(g, wl, prof, replace(p, failed_queues=dead),
+                     failed=dead)
+
+
+def test_batch_accepts_int01_failure_masks():
+    """A [B, Q] 0/1 integer array is a mask (the pre-profile API accepted
+    those), NOT a queue-id list — an all-zeros int mask must mean 'no
+    failures', and bad queue ids must raise instead of silently wrapping."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    wl = Workload.of([0, 1], [2, 3], 150)
+    p = SimParams(ticks=200, timeout_ticks=64)
+    prof = TransportProfile.ai_full()
+    none_int = np.zeros((2, g.num_queues), np.int64)
+    healthy, healthy2 = simulate_batch(g, Workload.stack([wl, wl]), prof, p,
+                                       failed=none_int)
+    assert int(healthy.state.drops) == 0 and int(healthy2.state.drops) == 0
+    with pytest.raises(ValueError, match="queue ids"):
+        simulate(g, wl, prof, p, failed=(g.num_queues + 5,))
+
+
+def test_rod_rejects_counted_separately_from_dups():
+    """Go-back-N discards at a ROD receiver are not duplicate deliveries:
+    they land in rod_rejects, and dups stays a true-duplicate count."""
+    g, wl, _ = workloads.incast(2, size=300)
+    prof = TransportProfile(cc=CCAlgo.NSCC, delivery=DeliveryMode.ROD,
+                            name="rod")
+    r = simulate(g, wl, prof, SimParams(ticks=2500))
+    assert int(r.state.rod_rejects) > 0, "congested ROD must reject OOO"
+    # what remains in dups really is duplicate deliveries: go-back-N
+    # resends of packets the receiver already accepted (they arrive below
+    # the receiver base -> tracker oor) or already-set in-range bits
+    track_dups = (np.asarray(r.state.dst_track.dup)
+                  + np.asarray(r.state.dst_track.oor)).sum()
+    assert int(r.state.dups) == int(track_dups)
+
+
+def test_new_api_rejects_legacy_composition_fields():
+    g, wl, _ = _config_a()
+    with pytest.raises(ValueError, match="deprecated"):
+        simulate(g, wl, TransportProfile.ai_full(),
+                 SimParams(ticks=100, nscc=False))
+
+
+# ------------------------------------------------------------------------
+# SimResult contracts
+# ------------------------------------------------------------------------
+
+def test_goodput_rejects_empty_or_inverted_window():
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p)
+    with pytest.raises(ValueError, match="selects no ticks"):
+        r.goodput((200, 100))
+    with pytest.raises(ValueError, match="selects no ticks"):
+        r.goodput((300, 300))
+    assert r.goodput((0, 300)).shape == (3,)
+
+
+def test_completion_tick_plain_int():
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p)
+    ct = r.completion_tick()
+    assert type(ct) is int and ct >= 0
+    per_flow = r.completion_ticks()
+    assert per_flow.shape == (3,) and ct == int(per_flow.max())
+    short = simulate(g, wl, TransportProfile.ai_full(),
+                     SimParams(ticks=40))
+    assert short.completion_tick() == -1

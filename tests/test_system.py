@@ -1,19 +1,20 @@
 """End-to-end behaviour tests: the paper's quantitative claims on the
-packet-level UET fabric simulator."""
+packet-level UET fabric simulator, expressed through TransportProfiles."""
 import numpy as np
 import pytest
 
 from repro.core.lb.schemes import LBScheme
-from repro.core.types import TransportMode
 from repro.network import workloads
 from repro.network.fabric import SimParams, simulate
+from repro.network.profile import CCAlgo, DeliveryMode, TransportProfile
 
 
 @pytest.fixture(scope="module")
 def incast_rccc():
     g, wl, exp = workloads.incast(4, size=100000)
-    p = SimParams(ticks=1200, rccc=True, nscc=False)
-    return simulate(g, wl, p), exp
+    # ai_base: receiver-credit CC only — the exact-share incast profile
+    return simulate(g, wl, TransportProfile.ai_base(),
+                    SimParams(ticks=1200)), exp
 
 
 def test_incast_rccc_optimal_shares(incast_rccc):
@@ -28,10 +29,10 @@ def test_outcast_rccc_blind_vs_nscc():
     """Fig. 7 group 1: RCCC grants w->v only 50% (waste); NSCC converges
     toward the 75% optimum."""
     g, wl, exp = workloads.outcast(4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
     w_share_rccc = r.goodput((800, 2500))[4]
     assert abs(w_share_rccc - exp["rccc_w_share"]) < 0.03
-    r2 = simulate(g, wl, SimParams(ticks=2500, rccc=False, nscc=True))
+    r2 = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500))
     w_share_nscc = r2.goodput((1200, 2500))[4]
     assert w_share_nscc > 0.65  # approaches 0.75, strictly beats RCCC
     assert w_share_nscc > w_share_rccc + 0.1
@@ -41,7 +42,7 @@ def test_in_network_rccc_grant():
     """Fig. 7 groups 2/3: 12 flows over 4 uplinks deliver ~33% each; the
     same-leaf flow is granted only 50% by RCCC though 67% is available."""
     g, wl, exp = workloads.in_network(12, 4, size=100000)
-    r = simulate(g, wl, SimParams(ticks=2500, rccc=True, nscc=False))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
     gp = r.goodput((800, 2500))
     assert abs(gp[:12].mean() - exp["cross_share"]) < 0.04
     assert abs(gp[12] - exp["rccc_local_share"]) < 0.04
@@ -54,8 +55,8 @@ def test_spraying_beats_static_ecmp():
     g, wl, _ = workloads.permutation(k=8, pods=4, shift=17, size=100000)
     res = {}
     for scheme in (LBScheme.STATIC, LBScheme.OBLIVIOUS, LBScheme.REPS):
-        p = SimParams(ticks=1500, nscc=True, lb=scheme)
-        r = simulate(g, wl, p)
+        r = simulate(g, wl, TransportProfile.ai_full(lb=scheme),
+                     SimParams(ticks=1500))
         res[scheme] = r.goodput((700, 1500)).mean()
     assert res[LBScheme.OBLIVIOUS] > res[LBScheme.STATIC] + 0.2
     assert res[LBScheme.REPS] >= res[LBScheme.OBLIVIOUS] - 0.02
@@ -69,11 +70,12 @@ def test_trimming_recovers_faster_than_timeout():
     latency (not downlink capacity) dominates completion — a long incast
     is capacity-bound for both and hides the difference."""
     g, wl, _ = workloads.incast(8, size=48)
-    base = dict(ticks=1500, rccc=False, nscc=True, timeout_ticks=300)
-    r_trim = simulate(g, wl, SimParams(trimming=True, **base))
-    r_drop = simulate(g, wl, SimParams(trimming=False, **base))
-    ct_trim = r_trim.completion_tick()
-    ct_drop = r_drop.completion_tick()
+    prof = TransportProfile.ai_full()
+    base = dict(ticks=1500, timeout_ticks=300)
+    r_trim = simulate(g, wl, prof, SimParams(trimming=True, **base))
+    r_drop = simulate(g, wl, prof, SimParams(trimming=False, **base))
+    ct_trim = r_trim.completion_ticks()
+    ct_drop = r_drop.completion_ticks()
     assert (ct_trim >= 0).all(), "trimming run must complete"
     # timeout-only either doesn't finish in budget or is strictly slower
     unfinished = (ct_drop < 0).any()
@@ -85,18 +87,18 @@ def test_trimming_recovers_faster_than_timeout():
 def test_rod_single_path_and_delivery():
     """ROD delivers reliably in order on a single path (go-back-N)."""
     g, wl, _ = workloads.incast(2, size=400)
-    p = SimParams(ticks=3000, mode=TransportMode.ROD, nscc=True)
-    r = simulate(g, wl, p)
-    assert (r.completion_tick() >= 0).all()
-    assert int(r.state.delivered.sum()) >= 2 * 400
+    prof = TransportProfile(cc=CCAlgo.NSCC, delivery=DeliveryMode.ROD,
+                            name="rod")
+    r = simulate(g, wl, prof, SimParams(ticks=3000))
+    assert r.completion_tick() >= 0
+    assert int(r.state.delivered.sum()) == 2 * 400
 
 
 def test_reliability_all_flows_complete_under_losses():
     """RUD + trimming: every message completes despite congestion drops."""
     g, wl, _ = workloads.in_network(12, 4, size=300)
-    p = SimParams(ticks=6000, nscc=True, trimming=True)
-    r = simulate(g, wl, p)
-    assert (r.completion_tick() >= 0).all()
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=6000))
+    assert (r.completion_ticks() >= 0).all()
     # conservation: delivered first-copies == message sizes
     np.testing.assert_array_equal(
         np.asarray(r.state.delivered), np.asarray(wl.size))
@@ -115,11 +117,11 @@ def test_reps_failure_mitigation():
     g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
     wl = Workload.of(list(range(8)), [8 + i for i in range(8)], 100000)
     dead = (int(g.up1_table[0, 0]),)
+    p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
     res = {}
     for scheme in (LBScheme.OBLIVIOUS, LBScheme.REPS):
-        p = SimParams(ticks=3000, nscc=True, lb=scheme, failed_queues=dead,
-                      timeout_ticks=64, ooo_threshold=24)
-        r = simulate(g, wl, p)
+        r = simulate(g, wl, TransportProfile.ai_full(lb=scheme), p,
+                     failed=dead)
         res[scheme] = float(r.goodput((1500, 3000)).mean())
     optimum = 3.0 / 8.0
     assert res[LBScheme.REPS] > 0.9 * optimum

@@ -9,8 +9,8 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
 from hypothesis import given, settings, strategies as st
 
 from repro.core import addressing, headers, matching, messaging, pdc, pds
-from repro.core.types import (DEFAULT_MTU, MsgProtocol, Profile,
-                              TransportMode, UET_UDP_PORT)
+from repro.core.types import (MsgProtocol, Profile, TransportMode,
+                              UET_UDP_PORT)
 
 
 # ---------------------------------------------------------------- headers
