@@ -164,19 +164,69 @@ def bench_loss_detection():
 
 
 def bench_collective_efficiency():
-    """Framework integration: achieved goodput of collective-shaped
-    traffic under UET transport options (feeds the roofline collective
-    term; see repro/distributed/netmodel.py)."""
+    """Framework integration: achieved efficiency (analytic alpha-beta
+    time / simulated completion) of WHOLE dependency-scheduled
+    collectives under UET transport options (feeds the roofline
+    collective term; see repro/distributed/netmodel.py)."""
     from repro.distributed.netmodel import simulated_efficiency
     rows = []
     for kind in ("all-reduce", "all-to-all"):
         for lb, name in ((LBScheme.STATIC, "static"),
                          (LBScheme.OBLIVIOUS, "spray"),
                          (LBScheme.REPS, "reps")):
-            eff = simulated_efficiency(kind=kind, hosts=32, size_pkts=1200,
-                                       lb=lb, ticks=2000)
+            eff = simulated_efficiency(kind=kind, hosts=8, size_pkts=64,
+                                       lb=lb)
             rows.append((f"eff_{kind.replace('-', '_')}_{name}",
-                         round(eff, 3), None, "goodput fraction"))
+                         round(eff, 3), None,
+                         "analytic/simulated completion time"))
+    return rows
+
+
+def bench_collectives():
+    """Dependency-scheduled collectives + in-network reduction: a small
+    all-reduce algorithm ablation (ring vs recursive-doubling vs tree,
+    INC off/on) as ONE simulate_batch call — the import/consistency
+    canary scripts/check.sh runs (`benchmarks.run --only collectives`)."""
+    from dataclasses import replace
+
+    from repro.distributed.netmodel import (FabricSpec,
+                                            analytic_time_for_spec,
+                                            simulated_collective_time)
+    from repro.network import collectives as coll
+    from repro.network.fabric import SimParams, simulate_batch
+    from repro.network.topology import leaf_spine
+
+    n, s = 8, 24
+    g = leaf_spine(leaves=4, spines=4, hosts_per_leaf=2)
+    spec = coll.CollectiveSpec("all_reduce", tuple(range(n)), s)
+    ai = TransportProfile.ai_full()
+    ai_inc = replace(ai, inc=True, name="ai_full+inc")
+    cfgs = [("ring", ai), ("recursive_doubling", ai),
+            ("tree", ai), ("tree", ai_inc)]
+    wls = coll.stack_padded([coll.build_workload(spec, a) for a, _ in cfgs])
+    rs = simulate_batch(g, wls, [p for _, p in cfgs], SimParams(ticks=900))
+    cts = {f"{a}{'_inc' if p.inc else ''}":
+           coll.collective_completion_ticks(r)
+           for (a, p), r in zip(cfgs, rs)}
+    rows = [(f"allreduce_ct_{name}", ct, None,
+             f"n={n} S={s}pkts (ticks to completion, -1 = unfinished)")
+            for name, ct in cts.items()]
+    ratio = (round(cts["tree_inc"] / cts["tree"], 3)
+             if cts["tree"] > 0 and cts["tree_inc"] > 0 else "unfinished")
+    rows.append(("inc_tree_ct_ratio", ratio, None,
+                 "INC on/off completion ratio, < 1.0 = switch wins"))
+    rows.append(("inc_reduced_pkts", int(rs[3].state.inc_reduced), None,
+                 "packets absorbed at the ToR (upstream savings)"))
+    # the modeling-contract anchor: packet-level >= alpha-beta bound
+    fs = FabricSpec()
+    t_sim = simulated_collective_time("all-reduce", chips=n, size_pkts=s,
+                                      fabric=fs)
+    t_ana = analytic_time_for_spec("all-reduce", s, n, fs)
+    rows.append(("simulated_ge_analytic", int(t_sim >= t_ana), 1,
+                 f"sim {t_sim:.2e}s vs analytic {t_ana:.2e}s"))
+    rows.append(("host_rx_total", int(np.asarray(rs[0].state.delivered).sum()),
+                 int(coll.expected_host_rx(spec, "ring").sum()),
+                 "reliable delivery: exact per-host totals (ring, INC off)"))
     return rows
 
 
@@ -231,6 +281,7 @@ ALL_BENCHES = [
     ("loadbalance(Sec3.3.5)", bench_loadbalance),
     ("loss_detection(Sec3.2.4)", bench_loss_detection),
     ("collective_efficiency(netmodel)", bench_collective_efficiency),
+    ("collectives(dep-sched+INC)", bench_collectives),
     ("failure_mitigation(REPS[5])", bench_failure_mitigation),
     ("failure_sweep_batched(REPS[5])", bench_failure_sweep_batched),
 ]

@@ -23,8 +23,15 @@ NSCC-only / RCCC-only / hybrid CC ablation) as ONE ``simulate_batch``
 call — the engine groups the grid by distinct profile, one executable
 each — and records per-profile goodput under ``profile_ablation``.
 
+The collective ablation grid (kind x algorithm x INC on/off x profile,
+15 dependency-scheduled whole collectives padded into one batch) runs
+as ONE ``simulate_batch`` call too and lands under ``collective_sweep``:
+per-scenario completion ticks, scenarios/sec, and the in-network-
+reduction win (INC-on / INC-off completion ratio for the tree
+all-reduce).
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
-accumulates across PRs (``api_version`` 2 == the TransportProfile API).
+accumulates across PRs (``api_version`` 3 == collectives + INC).
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
        [--ticks 600] [--out BENCH_fabric.json]
@@ -103,7 +110,7 @@ def run_benches(b: int, ticks: int) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 2,
+        "api_version": 3,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -158,6 +165,7 @@ def run_benches(b: int, ticks: int) -> dict:
     results["batch_speedup_vs_serial_shared_warm"] = serial_shared / batched
 
     results["profile_ablation"] = _profile_ablation(ticks)
+    results["collective_sweep"] = _collective_sweep()
     return results
 
 
@@ -190,6 +198,47 @@ def _profile_ablation(ticks: int) -> dict:
     }
 
 
+def _collective_sweep(ticks: int = 1600) -> dict:
+    """The collective ablation grid — kind x algorithm x INC on/off x
+    profile, 15 whole dependency-scheduled collectives — as ONE
+    ``simulate_batch`` call (grouped into 4 executables: ai_full /
+    ai_base, each with INC off and on)."""
+    from repro.network import collectives as coll
+    from repro.network import workloads
+    from repro.network.fabric import SimParams, simulate_batch
+
+    g, wls, profiles, names = workloads.collective_sweep()
+    p = SimParams(ticks=ticks)
+    t0 = time.perf_counter()
+    rs = simulate_batch(g, wls, profiles, p)
+    cold = time.perf_counter() - t0
+    warm = min(_timed(lambda: simulate_batch(g, wls, profiles, p))
+               for _ in range(2))
+    cts = {name: coll.collective_completion_ticks(r)
+           for name, r in zip(names, rs)}
+    inc_red = {name: int(r.state.inc_reduced)
+               for name, r in zip(names, rs) if "/inc" in name}
+
+    def ratio(prof):
+        off = cts[f"{prof}/all_reduce/tree"]
+        on = cts[f"{prof}/all_reduce/tree/inc"]
+        return round(on / off, 4) if off > 0 and on > 0 else None
+
+    return {
+        "scenarios": len(names),
+        "flows_padded": int(wls.src.shape[1]),
+        "distinct_profiles": len(set(profiles)),
+        "ticks": ticks,
+        "sweep_cold_s": cold,
+        "sweep_warm_s": warm,
+        "scenarios_per_sec": len(names) / warm,
+        "completion_ticks": cts,
+        "inc_reduced_pkts": inc_red,
+        "inc_tree_allreduce_ratio": ratio("ai_full"),
+        "inc_tree_allreduce_ratio_ai_base": ratio("ai_base"),
+    }
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -212,11 +261,14 @@ def main() -> None:
         f.write("\n")
 
     print(json.dumps(results, indent=2, sort_keys=True))
+    cs = results["collective_sweep"]
     print(f"\nbatched sweep (cold, incl. compile) is "
           f"{results['batch_speedup_vs_serial']:.1f}x the seed-style serial "
           f"sweep; warm-vs-warm against the shared-executable serial loop it "
           f"is {results['batch_speedup_vs_serial_shared_warm']:.2f}x; "
-          f"wrote {out}")
+          f"collective grid ran {cs['scenarios']} scenarios at "
+          f"{cs['scenarios_per_sec']:.2f}/s, INC tree-all-reduce completion "
+          f"ratio {cs['inc_tree_allreduce_ratio']}; wrote {out}")
 
 
 if __name__ == "__main__":

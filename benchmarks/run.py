@@ -5,6 +5,10 @@ simulator benches report their wall time; value==expected (within printed
 tolerance) reproduces the corresponding paper claim.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+``--only headers`` and ``--only collectives`` are the two fast
+import/consistency canaries scripts/check.sh runs pre-commit (the
+latter exercises the dependency-scheduled collective engine + INC).
 """
 import argparse
 import sys

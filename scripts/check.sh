@@ -26,4 +26,7 @@ python -m pytest -x -q -m "not slow"
 echo "== paper bench smoke: header stacks =="
 python -m benchmarks.run --only headers
 
+echo "== paper bench smoke: collectives (dep lane + INC canary) =="
+python -m benchmarks.run --only collectives
+
 echo "OK"

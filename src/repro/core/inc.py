@@ -1,0 +1,169 @@
+"""In-network collectives (INC): switch-resident reduction contexts.
+
+The UE roadmap's next frontier (and EPIC's, arXiv 2605.18683, headline
+result) is letting the *switch* reduce: when k member flows of one
+reduction group converge on a parent host, the fan-in switch can
+aggregate their payloads and forward ONE packet per PSN instead of k —
+the parent's downlink (the incast bottleneck of every tree reduce)
+carries 1/k of the traffic and completion drops accordingly.
+
+Modeling contract (DESIGN.md has the full discussion):
+
+* A reduction **group** is a set of flows sharing one destination host
+  (the parent) and one message size, marked by ``Workload.red`` (group
+  id, -1 = not reducible). The reduction context is resident at the
+  parent's top-of-rack switch — the one point every member packet
+  funnels through regardless of spraying, so aggregation needs no
+  routing cooperation.
+* Per (group, PSN) the context keeps an **accumulator slot**: the PSN it
+  is aggregating and a **child-arrival bitmap** over the group's
+  cross-leaf members (same-leaf members inject straight into the host
+  downlink and deliver normally — they never traverse the ToR fabric
+  side, so the switch cannot see them).
+* Arrival of member packet (g, psn): all but the LAST expected child are
+  **absorbed** — consumed at the switch, which ACKs the source on the
+  control TC exactly as a delivery would (the source's PSN clears; it
+  will never retransmit an absorbed packet). The child that completes
+  the bitmap is **emitted**: it is forwarded into the downlink as the
+  aggregate, keeping its own flow identity, so normal delivery / trim /
+  NACK semantics apply to the aggregate unchanged. If the aggregate is
+  trimmed, the NACK targets the emitting flow, whose source still owns
+  that PSN and retransmits; the retransmit finds the bitmap full
+  (``already``) and passes through untouched.
+* Slots are a ring indexed by ``psn % slots``; a higher PSN reuses a
+  slot by resetting it. Aggregation is *opportunistic*: any packet the
+  context cannot safely account (stale PSN, duplicate child bit, slot
+  owned by a newer PSN) passes through and delivers normally, so
+  correctness never depends on aggregation — only the amount of
+  upstream traffic saved does.
+
+Stat lanes: the fabric counts ``inc_reduced`` (packets absorbed — each
+one is a packet the parent downlink never carried) and ``inc_emits``
+(aggregates forwarded). Upstream bytes saved = inc_reduced * MTU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pds import _popcount32
+
+#: child-arrival bitmaps are one uint32 word: at most 32 cross-leaf
+#: members per reduction group (larger groups pass through un-aggregated)
+MAX_FANIN = 32
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class INCState:
+    """Accumulator slots of every reduction context (SoA over groups).
+
+    slot_psn:  [G, A] int32 — PSN the slot currently aggregates (-1 free)
+    slot_bits: [G, A] uint32 — child-arrival bitmap (bit = member rank)
+    """
+
+    slot_psn: jax.Array
+    slot_bits: jax.Array
+
+    @staticmethod
+    def create(groups: int, slots: int) -> "INCState":
+        return INCState(
+            slot_psn=jnp.full((groups, slots), -1, jnp.int32),
+            slot_bits=jnp.zeros((groups, slots), jnp.uint32),
+        )
+
+    @staticmethod
+    def empty() -> "INCState":
+        """Zero-size placeholder carried when the profile has INC off."""
+        return INCState.create(0, 1)
+
+
+def member_ranks(red: jax.Array, cross_leaf: jax.Array,
+                 allowed: "jax.Array | None" = None):
+    """Per-flow INC membership, member rank, and effective fan-in.
+
+    red:        [F] int32 reduction-group ids (-1 = none)
+    cross_leaf: [F] bool — src and dst on different leaves (only those
+                flows traverse the parent ToR and can be aggregated)
+    allowed:    optional [F] bool extra gate (e.g. RUD-only)
+
+    Returns (member [F] bool, rank [F] int32 — bit index within the
+    group's child bitmap, gsz [F] int32 — the group's cross-leaf member
+    count, i.e. the bitmap population that triggers emission).
+    """
+    member = (red >= 0) & cross_leaf
+    if allowed is not None:
+        member = member & allowed
+    f = red.shape[0]
+    idx = jnp.arange(f)
+    same = (red[None, :] == red[:, None]) & member[None, :] & member[:, None]
+    rank = (same & (idx[None, :] < idx[:, None])).sum(axis=1, dtype=jnp.int32)
+    gsz = same.sum(axis=1, dtype=jnp.int32)
+    return member, rank, gsz
+
+
+def process(st: INCState, *, lane_flow: jax.Array, lane_psn: jax.Array,
+            lane_cand: jax.Array, member: jax.Array, rank: jax.Array,
+            gsz: jax.Array, red: jax.Array, has_delivery: jax.Array):
+    """One tick of switch-resident aggregation over the forwarded lanes.
+
+    lane_flow/lane_psn/lane_cand: [Q] — per-queue dequeued packet about
+    to enter its destination host downlink (lane_cand False = not an INC
+    candidate this tick). member/rank/gsz/red: [F] from `member_ranks`.
+    has_delivery: [F] — flow already produced a delivery ACK this tick
+    (absorption is deferred then: the engine's ACK lanes carry at most
+    one ACK per flow per tick).
+
+    Returns (state', absorb [Q] bool, emit [Q] bool). Absorbed lanes are
+    removed from the enqueue set and ACKed at the switch; emitted lanes
+    enqueue normally as the aggregate. Lanes with neither flag pass
+    through untouched.
+    """
+    q = lane_flow.shape[0]
+    g_count, slots = st.slot_psn.shape
+    lane = jnp.arange(q)
+    # groups wider than the bitmap word can never complete their child
+    # bitmap — the WHOLE group passes through un-aggregated (absorbing
+    # even one child of an unemittable group would destroy its data)
+    m = lane_cand & member[lane_flow] & (gsz[lane_flow] <= MAX_FANIN)
+    g = jnp.where(m, red[lane_flow], 0)
+    slot = jnp.where(lane_psn >= 0, lane_psn, 0) % slots
+    cur_psn = st.slot_psn[g, slot]
+    cur_bits = st.slot_bits[g, slot]
+    # a higher PSN resets (recycles) the slot; a lower one is stale
+    fresh = lane_psn > cur_psn
+    eff_bits = jnp.where(fresh, jnp.uint32(0), cur_bits)
+    bit = jnp.uint32(1) << jnp.clip(rank[lane_flow], 0,
+                                    MAX_FANIN - 1).astype(jnp.uint32)
+    already = (eff_bits & bit) != 0      # retransmit of an accounted child
+    usable = m & (lane_psn >= cur_psn) & ~already & ~has_delivery[lane_flow]
+    # one absorption per flow per tick (preserves the <=1-ACK-per-flow
+    # densification invariant); later same-flow lanes pass through
+    samef = ((lane_flow[None, :] == lane_flow[:, None]) & usable[None, :]
+             & (lane[None, :] < lane[:, None])).any(axis=1)
+    ok = usable & ~samef
+    # same (group, slot) hit by two PSNs in one tick: the higher PSN owns
+    # the slot, the lower lane passes through
+    key = jnp.where(ok, g * slots + slot, -1)
+    beaten = ((key[None, :] == key[:, None]) & ok[None, :]
+              & (lane_psn[None, :] > lane_psn[:, None])).any(axis=1)
+    ok = ok & ~beaten
+    key = jnp.where(ok, g * slots + slot, -1)
+    # in-tick arrival order among lanes feeding the same slot: the lane
+    # that completes the bitmap is the emitter, earlier ones absorb
+    r_tick = ((key[None, :] == key[:, None]) & ok[None, :]
+              & (lane[None, :] < lane[:, None])).sum(axis=1, dtype=jnp.int32)
+    total = _popcount32(eff_bits).astype(jnp.int32) + r_tick + 1
+    full = total >= gsz[lane_flow]
+    emit = ok & full
+    absorb = ok & ~full
+    # state scatters (OOB group index => dropped lane)
+    gi = jnp.where(ok, g, g_count)
+    zi = jnp.where(ok & fresh, g, g_count)
+    slot_bits = st.slot_bits.at[zi, slot].set(jnp.uint32(0), mode="drop")
+    slot_bits = slot_bits.at[gi, slot].add(
+        jnp.where(ok, bit, jnp.uint32(0)), mode="drop")
+    slot_psn = st.slot_psn.at[gi, slot].max(lane_psn, mode="drop")
+    return INCState(slot_psn=slot_psn, slot_bits=slot_bits), absorb, emit

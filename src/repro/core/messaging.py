@@ -161,11 +161,22 @@ def deferrable_vs_rendezvous_bandwidth(size: float, link: LinkModel,
     could have been overlapped; if smaller, the eager part overruns the
     window and stalls. Deferrable send tracks the window exactly.
 
+    Window pacing: with `true_window` bytes allowed in flight per RTT
+    (= 2α), a sender below the BDP (2α/β bytes) sends one window (β·w),
+    then stalls (2α − β·w) until the head acknowledgment returns, for
+    every full window after the first. At or above the BDP the stall is
+    zero and deferrable streams at line rate — both branches are real
+    now (the seed multiplied the stall term by 0.0, so the modeled
+    "window-paced" claim was vacuous).
+
     Returns effective bandwidths (bytes/sec) for both, expected case.
     """
     a, b = link.alpha, link.beta
-    # deferrable: streams at window pace — full rate when window >= BDP
-    t_def = a + b * size + max(0.0, (size / true_window - 1)) * 0.0
+    # deferrable: streams at window pace — full rate when window >= BDP,
+    # one ack-wait stall per additional window below it
+    stall = max(0.0, 2 * a - b * true_window)
+    full_windows_after_first = max(0.0, size / true_window - 1.0)
+    t_def = a + b * size + full_windows_after_first * stall
     bw_def = size / t_def
     # rendezvous: eager part then read round trip for the remainder
     first = min(size, eager_limit)

@@ -8,24 +8,24 @@ fabric two ways:
 1. `analytic_collective_time` — algorithmic lower bound: ring/tree costs
    on `links` of `link_gbps`, the classical alpha-beta model. This is the
    roofline's collective term.
-2. `simulated_efficiency` — run the actual packet-level UET fabric
-   simulator on the collective's traffic pattern (all-reduce => ring
-   neighbor exchange; all-to-all => full permutation bursts; all-gather =>
-   broadcast-like fan-in) under a chosen transport config (NSCC/RCCC,
-   spraying scheme, trimming) and report achieved goodput vs line rate.
-   This prices the paper's mechanisms into the framework's performance
-   model: e.g. oblivious spraying vs single-path ECMP changes the
-   delivered bandwidth of the gradient all-reduce, exactly the
-   polarization effect of Sec. 2.1.
+2. `simulated_collective_time` — run the WHOLE multi-phase collective
+   (dependency-scheduled ring / recursive-doubling / tree schedules from
+   `repro.network.collectives`) through the packet-level UET fabric
+   simulator under a chosen transport profile, optionally with
+   in-network reduction (INC), and price the collective term from the
+   actual simulated completion tick. This replaces the seed's
+   single-phase steady-state proxy (`_pattern_workload`, now a
+   deprecated alias): phase dependencies, stragglers, algorithm choice
+   and switch-resident reduction all show up in the number.
 
-The estimates feed launch/roofline.py (term = bytes / (chips * link_bw *
-efficiency)) and give the sharding planner a UET-aware cost signal.
+`simulated_efficiency` = analytic / simulated time for the same spec —
+the derate factor the roofline and the sharding planner consume
+(term = bytes / (chips * link_bw * efficiency)).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import numpy as np
+import warnings
+from dataclasses import dataclass, replace
 
 from repro.core.lb.schemes import LBScheme
 from repro.network.fabric import SimParams, Workload, simulate
@@ -37,6 +37,11 @@ class FabricSpec:
     link_gbps: float = 400.0   # per ICI/NIC link — paper's design point
     links_per_chip: int = 1
     mtu: int = 4096
+
+    @property
+    def tick_seconds(self) -> float:
+        """One simulator tick == one MTU serialization on one link."""
+        return self.mtu / (self.link_gbps * 1e9 / 8 * self.links_per_chip)
 
 
 def analytic_collective_time(kind: str, bytes_total: float, chips: int,
@@ -73,35 +78,100 @@ def collective_term_seconds(coll_bytes: dict, chips: int,
     return t / max(efficiency, 1e-6)
 
 
+def analytic_time_for_spec(kind: str, size_pkts: int, chips: int,
+                           fabric: FabricSpec = FabricSpec()) -> float:
+    """Alpha-beta bound for a per-rank-INPUT-denominated collective (the
+    `repro.network.collectives` convention, size in MTU packets).
+    `analytic_collective_time` is OUTPUT-denominated; the two differ for
+    all-gather, whose output is n x the per-rank input block."""
+    kind = kind.replace("_", "-")
+    mult = chips if kind == "all-gather" else 1
+    return analytic_collective_time(
+        kind, size_pkts * mult * fabric.mtu * chips, chips, fabric)
+
+
 # ---------------------------------------------------------------------------
-# packet-level efficiency factors from the UET simulator
+# packet-level collective time from the UET simulator
 # ---------------------------------------------------------------------------
 
-
-def _pattern_workload(kind: str, hosts: int, size_pkts: int):
-    """Map a collective onto a fabric traffic pattern."""
-    if kind in ("all-reduce", "reduce-scatter", "all-gather",
-                "collective-permute"):
-        # ring neighbor exchange: host i -> i+1 (the dominant phase of
-        # ring collectives); permutation distance 1
-        src = list(range(hosts))
-        dst = [(i + 1) % hosts for i in range(hosts)]
-    else:  # all-to-all: worst-case full shuffle, modeled as a rotating
-        # permutation burst at max distance
-        src = list(range(hosts))
-        dst = [(i + hosts // 2) % hosts for i in range(hosts)]
-    return Workload.of(src, dst, size_pkts)
+_SIM_KINDS = ("all-reduce", "reduce-scatter", "all-gather", "all-to-all")
 
 
-def simulated_efficiency(kind: str = "all-reduce", hosts: int = 32,
-                         size_pkts: int = 2000,
+def _collective_fabric(chips: int, hosts_per_leaf: int, oversub: int):
+    leaves = max(1, -(-chips // hosts_per_leaf))
+    return leaf_spine(leaves=leaves, spines=max(2, leaves // max(oversub, 1)),
+                      hosts_per_leaf=hosts_per_leaf)
+
+
+def simulated_collective_time(kind: str = "all-reduce",
+                              bytes_total: "float | None" = None,
+                              chips: int = 8, *,
+                              size_pkts: "int | None" = None,
+                              algo: str = "ring",
+                              profile=None,
+                              inc: bool = False,
+                              fabric: FabricSpec = FabricSpec(),
+                              hosts_per_leaf: int = 4,
+                              oversub: int = 1,
+                              trimming: bool = True,
+                              ticks: "int | None" = None) -> float:
+    """Wall seconds for ONE whole collective, measured on the packet
+    fabric: the dependency-scheduled schedule (ring / recursive_doubling
+    / tree) runs to completion inside one compiled scan and the result
+    is the source-completion tick times the MTU serialization time.
+
+    Give the payload either as `bytes_total` (collective output bytes,
+    converted to per-rank packets at `fabric.mtu`) or directly as
+    `size_pkts` (per-rank packets). `inc=True` switches on in-network
+    reduction (meaningful for the tree algorithm's fan-in phase).
+
+    Raises RuntimeError if the collective does not complete within the
+    tick budget (default: 6x the serialization lower bound + slack).
+    """
+    from repro.network import collectives as coll
+    from repro.network.profile import TransportProfile
+
+    if size_pkts is None:
+        if bytes_total is None:
+            raise ValueError("give bytes_total or size_pkts")
+        per_rank = bytes_total / max(chips, 1)
+        if kind.replace("_", "-") == "all-gather":
+            # bytes_total is OUTPUT-denominated (HLO convention) but the
+            # schedule wants the per-rank INPUT block = output/n
+            per_rank /= max(chips, 1)
+        spec = coll.CollectiveSpec.from_bytes(kind, range(chips), per_rank,
+                                              fabric.mtu)
+    else:
+        spec = coll.CollectiveSpec(kind, tuple(range(chips)), int(size_pkts))
+    if profile is None:
+        profile = TransportProfile.ai_full()
+    if inc and not profile.inc:
+        profile = replace(profile, inc=True, name=profile.name + "+inc")
+    g = _collective_fabric(chips, hosts_per_leaf, oversub)
+    wl = coll.build_workload(spec, algo)
+    est = coll.analytic_ticks(spec, algo)
+    budget = ticks if ticks is not None else 6 * est + 800
+    r = simulate(g, wl, profile, SimParams(ticks=budget, trimming=trimming))
+    ct = coll.collective_completion_ticks(r)
+    if ct < 0:
+        raise RuntimeError(
+            f"collective {spec.kind}/{algo} on {chips} chips did not "
+            f"complete within {budget} ticks — raise ticks=")
+    return ct * fabric.tick_seconds
+
+
+def simulated_efficiency(kind: str = "all-reduce", hosts: int = 8,
+                         size_pkts: int = 64,
                          lb: "LBScheme | None" = None,
                          profile=None,
+                         algo: str = "ring",
+                         inc: bool = False,
                          trimming: bool = True,
                          oversub: int = 1,
-                         ticks: int = 3000) -> float:
-    """Achieved goodput fraction of line rate for one collective phase on
-    the packet-level UET fabric (leaf-spine, `oversub`:1).
+                         ticks: "int | None" = None) -> float:
+    """Achieved efficiency of one collective on the packet-level UET
+    fabric: analytic alpha-beta time / simulated completion time, in
+    (0, 1]. This is the derate the roofline collective term divides by.
 
     ``profile`` selects the full transport composition; ``lb`` is the
     shorthand for the common collective ablation axis (ai_full profile
@@ -114,12 +184,29 @@ def simulated_efficiency(kind: str = "all-reduce", hosts: int = 32,
     elif lb is not None:
         raise ValueError("pass either profile= or lb=, not both — encode "
                          "the LB scheme in the profile")
-    hosts_per_leaf = 4
-    leaves = hosts // hosts_per_leaf
-    g = leaf_spine(leaves=leaves, spines=max(2, leaves // oversub),
-                   hosts_per_leaf=hosts_per_leaf)
-    wl = _pattern_workload(kind, g.num_hosts, size_pkts)
-    p = SimParams(ticks=ticks, trimming=trimming)
-    r = simulate(g, wl, profile, p)
-    gp = r.goodput((ticks // 3, ticks))
-    return float(np.mean(gp))
+    fabric = FabricSpec()
+    t_sim = simulated_collective_time(
+        kind, chips=hosts, size_pkts=size_pkts, algo=algo, profile=profile,
+        inc=inc, fabric=fabric, oversub=oversub, trimming=trimming,
+        ticks=ticks)
+    t_ana = analytic_time_for_spec(kind, size_pkts, hosts, fabric)
+    return float(min(1.0, t_ana / max(t_sim, 1e-12)))
+
+
+def _pattern_workload(kind: str, hosts: int, size_pkts: int) -> Workload:
+    """DEPRECATED single-phase proxy, kept for one PR as a thin alias.
+
+    The seed faked a collective as one steady-state phase (ring neighbor
+    exchange / half-shift permutation). It now lowers through the real
+    dependency-scheduled builders in `repro.network.collectives`; call
+    those directly.
+    """
+    warnings.warn(
+        "_pattern_workload is deprecated: collectives are now "
+        "dependency-scheduled — use repro.network.collectives."
+        "build_workload(CollectiveSpec(kind, hosts, size_pkts), algo)",
+        DeprecationWarning, stacklevel=2)
+    from repro.network import collectives as coll
+    kind = kind if kind in _SIM_KINDS else "all-reduce"
+    spec = coll.CollectiveSpec(kind, tuple(range(hosts)), size_pkts)
+    return coll.build_workload(spec, "ring")

@@ -45,6 +45,14 @@ Modeled faithfully (paper sections in parens):
 * OOO-count and EV-based loss inference, timeout fallback (3.2.4)
 * control traffic (ACKs, NACKs, credits) rides the second traffic class,
   modeled as a fixed-latency uncongested return path (3.1.4)
+* dependency-scheduled flows (``Workload.dep``): multi-phase collectives
+  (repro.network.collectives) gate each phase on its parent's source
+  completion inside the scan — a whole ring/recursive-doubling/tree
+  collective is one compiled run
+* in-network reduction (``TransportProfile.inc`` + ``Workload.red``):
+  switch-resident accumulator contexts absorb all but one child packet
+  per PSN at the destination ToR and ACK the absorbed sources
+  (repro.core.inc; the UE roadmap's in-network-collectives frontier)
 
 Simplifications recorded in DESIGN.md: RCCC credit grants apply without
 path delay (the grant *rate* is what the algorithm controls); trimmed
@@ -59,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pds
+from repro.core import inc, pds
 from repro.core.cms.nscc import NSCCParams
 from repro.core.lb.schemes import LBPolicy, LBScheme, LBState
 from repro.core.lb.schemes import _pick_lane as _pick
@@ -68,7 +76,7 @@ from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
 from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
                                    make_cc_policy)
-from repro.network.topology import QueueGraph
+from repro.network.topology import QueueGraph, Stage
 
 # packet meta bits
 META_TRIMMED = 1
@@ -109,6 +117,7 @@ class SimParams:
     ooo_threshold: int = 0        # 0 = disabled
     max_cwnd: float = 48.0        # ~BDP in packets (optimistic start)
     base_rtt: float = 10.0        # unloaded RTT in ticks, for NSCC
+    inc_slots: int = 64           # INC accumulator slots per reduction group
     # ---- deprecated (legacy signature only; see _normalize_call) --------
     mode: "TransportMode | None" = None
     lb: "LBScheme | None" = None
@@ -120,7 +129,19 @@ class SimParams:
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class Workload:
-    """Flow set: src/dst host ids, message size (packets), start tick.
+    """Flow set: src/dst host ids, message size (packets), start tick,
+    plus two scheduling lanes:
+
+    * ``dep`` — flow dependency: flow f becomes eligible to inject only
+      after flow ``dep[f]`` *completes at its source* (CACK reaches its
+      message size); -1 = no dependency. Gated in-scan exactly like
+      ``start``, so a whole multi-phase collective (repro.network.
+      collectives) compiles to ONE ``lax.scan``. Dependencies must be
+      acyclic (builders emit phase-ordered chains; a cycle never becomes
+      eligible).
+    * ``red`` — in-network-reduction group id (-1 = none): flows sharing
+      a ``red`` id and destination form one switch-resident reduction
+      group when the profile has ``inc=True`` (repro.core.inc).
 
     All fields are traced arrays — a Workload can carry a leading scenario
     axis ([B, F]) for ``simulate_batch``; build one with ``Workload.stack``.
@@ -130,16 +151,21 @@ class Workload:
     dst: jax.Array   # [F] int32
     size: jax.Array  # [F] int32
     start: jax.Array  # [F] int32
+    dep: jax.Array   # [F] int32 flow index this flow waits on (-1 = none)
+    red: jax.Array   # [F] int32 INC reduction-group id (-1 = none)
 
     @staticmethod
-    def of(src, dst, size, start=None) -> "Workload":
+    def of(src, dst, size, start=None, dep=None, red=None) -> "Workload":
         src = jnp.asarray(src, jnp.int32)
         f = src.shape[0]
+        neg1 = jnp.full((f,), -1, jnp.int32)
         return Workload(
             src=src, dst=jnp.asarray(dst, jnp.int32),
             size=jnp.asarray(size, jnp.int32) * jnp.ones((f,), jnp.int32),
             start=(jnp.zeros((f,), jnp.int32) if start is None
                    else jnp.asarray(start, jnp.int32)),
+            dep=(neg1 if dep is None else jnp.asarray(dep, jnp.int32)),
+            red=(neg1 if red is None else jnp.asarray(red, jnp.int32)),
         )
 
     @staticmethod
@@ -154,6 +180,8 @@ class Workload:
             dst=jnp.stack([w.dst for w in wls]),
             size=jnp.stack([w.size for w in wls]),
             start=jnp.stack([w.start for w in wls]),
+            dep=jnp.stack([w.dep for w in wls]),
+            red=jnp.stack([w.red for w in wls]),
         )
 
 
@@ -182,11 +210,18 @@ class SimState:
     lb: LBState
     # control-TC delay ring (packed: type/flow/psn/ev/ecn/tsent lanes)
     ev_buf: jax.Array   # [D, E, EVF_FIELDS] int32
+    # in-network reduction contexts (repro.core.inc; zero-size when the
+    # profile has INC off)
+    inc: object
     # stats
     delivered: jax.Array  # [F] int32 packets delivered (first copies)
     trims: jax.Array      # [] int32
     drops: jax.Array      # [] int32
     dups: jax.Array       # [] int32
+    #: packets absorbed by switch-resident reduction (each one a packet
+    #: the parent downlink never carried) / aggregates emitted
+    inc_reduced: jax.Array  # [] int32
+    inc_emits: jax.Array    # [] int32
     #: in-range arrivals a ROD receiver discarded for being out of order
     #: (go-back-N rejects; NOT duplicates — counted separately from dups)
     rod_rejects: jax.Array  # [] int32
@@ -260,8 +295,11 @@ def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
         cc=cc_pol.create(F),
         lb=LBState.create(F, p.ev_slots, seed),
         ev_buf=jnp.zeros((D, E, EVF_FIELDS), jnp.int32),
+        inc=(inc.INCState.create(F, p.inc_slots) if profile.inc
+             else inc.INCState.empty()),
         delivered=jnp.zeros((F,), jnp.int32),
         trims=jnp.int32(0), drops=jnp.int32(0), dups=jnp.int32(0),
+        inc_reduced=jnp.int32(0), inc_emits=jnp.int32(0),
         rod_rejects=jnp.int32(0), retransmits=jnp.int32(0),
     )
 
@@ -451,7 +489,13 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
 
         # ------------------------------------------- 2. RCCC receiver grants
         done = src_track.base.astype(jnp.int32) >= wl.size
-        active = ~done & (tick >= wl.start)
+        # dependency lane: flow f is eligible only once flow dep[f] has
+        # completed at ITS source (CACK == size) — gated in-scan like
+        # `start`, so multi-phase collectives run inside one scan. dep is
+        # traced: dep = -1 everywhere reproduces the ungated schedule.
+        safe_dep = jnp.where(wl.dep >= 0, wl.dep, 0)
+        dep_ok = (wl.dep < 0) | done[safe_dep]
+        active = ~done & (tick >= wl.start) & dep_ok
         cc_st = cc_pol.on_grant_tick(cc_st, flow_dst, active, H)
 
         # --------------------------------------------------- 3. injection
@@ -481,7 +525,8 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             win_ok = win_ok & jnp.where(rod_mask, rod_ok, True)
         mp_ok = (next_psn - src_track.base.astype(jnp.int32)) < p.mp_range
         can_new = (next_psn < wl.size) & mp_ok
-        eligible = (tick >= wl.start) & ~done & win_ok & (has_rtx | can_new)
+        eligible = (tick >= wl.start) & ~done & dep_ok & win_ok \
+            & (has_rtx | can_new)
 
         # fair per-host pick: per-tick pseudo-random rotation, flow id in
         # the low bits so exactly one winner exists per host
@@ -596,9 +641,34 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             ooo_fire = due
         last_ooo_nack = jnp.where(ooo_fire, tick, s.last_ooo_nack)
 
+        # ---------------------------------- 6b. in-network reduction (INC)
+        # Forwarded packets about to enter their destination host downlink
+        # and belonging to a reduction group are offered to the ToR's
+        # accumulator context: all but the bitmap-completing child are
+        # absorbed (switch ACKs the source, lane leaves the enqueue set);
+        # the completing child forwards as the aggregate. Static flag:
+        # INC-off profiles compile the exact pre-INC tick.
+        inc_st = s.inc
+        inc_absorb = jnp.zeros((Q,), jnp.bool_)
+        inc_emit = jnp.zeros((Q,), jnp.bool_)
+        if profile.inc:
+            member, grank, gsz = inc.member_ranks(
+                wl.red, rt.host_leaf[flow_src] != rt.host_leaf[flow_dst],
+                (~rod_mask) if any_rod else None)
+            into_host = forward & (rt.stage[jnp.clip(nq, 0, Q - 1)]
+                                   == jnp.int32(int(Stage.HOST))) \
+                & ((pm & META_TRIMMED) == 0)
+            inc_st, inc_absorb, inc_emit = inc.process(
+                inc_st, lane_flow=safe_pf, lane_psn=pp,
+                lane_cand=into_host, member=member, rank=grank, gsz=gsz,
+                red=wl.red, has_delivery=has_d)
+        inc_reduced = s.inc_reduced + inc_absorb.sum(dtype=jnp.int32)
+        inc_emits = s.inc_emits + inc_emit.sum(dtype=jnp.int32)
+
         # ------------------------------------------------- 7. enqueue phase
-        # candidates: forwarded packets (Q lanes) + injections (F lanes)
-        cand_q = jnp.concatenate([jnp.where(forward, nq, -1),
+        # candidates: forwarded packets (Q lanes, minus INC absorptions) +
+        # injections (F lanes)
+        cand_q = jnp.concatenate([jnp.where(forward & ~inc_absorb, nq, -1),
                                   jnp.where(injected, inj_q, -1)])
         cand_flow = jnp.concatenate([pf, jnp.arange(F)])
         cand_psn = jnp.concatenate([pp, psn_out])
@@ -637,18 +707,22 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
 
         # ------------------------------------------- 8. schedule control TC
         out_slot = (tick + p.ack_return_ticks) % D
-        # lanes [0, Q): ACKs from deliveries (ROD rejects become OOO
-        # NACKs carrying the receiver's first-gap PSN)
+        # lanes [0, Q): ACKs from deliveries and from INC absorptions
+        # (the switch ACKs an absorbed child exactly like a delivery
+        # would; disjoint from ddata — an absorbed packet never reached
+        # the downlink). ROD rejects become OOO NACKs carrying the
+        # receiver's first-gap PSN.
+        ack_like = ddata | inc_absorb
         if any_rod:
             rod_rej_lane = ddata & rod_rej_f[safe_pf]
             ack_lane_t = jnp.where(
                 rod_rej_lane, EV_OOO,
-                jnp.where(ddata, EV_ACK, EV_NONE))
+                jnp.where(ack_like, EV_ACK, EV_NONE))
             ack_lane_psn = jnp.where(
                 rod_rej_lane,
                 dst_track.base[safe_pf].astype(jnp.int32), pp)
         else:
-            ack_lane_t = jnp.where(ddata, EV_ACK, EV_NONE)
+            ack_lane_t = jnp.where(ack_like, EV_ACK, EV_NONE)
             ack_lane_psn = pp
         # lanes [Q, Q + (Q+F)): trim NACKs from enqueue overflow
         nack_lane_t = jnp.where(nack_mask, EV_NACK, EV_NONE)
@@ -689,8 +763,9 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             rtx=rtx, last_progress=last_progress, slot_last_ack=slot_last_ack,
             dst_track=dst_track, last_ooo_nack=last_ooo_nack,
             cc=cc_st, lb=lbs,
-            ev_buf=ev_buf,
+            ev_buf=ev_buf, inc=inc_st,
             delivered=delivered_ctr, trims=trims, drops=drops, dups=dups,
+            inc_reduced=inc_reduced, inc_emits=inc_emits,
             rod_rejects=rod_rejects, retransmits=retransmits,
         )
         out = {
@@ -698,6 +773,7 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             "cwnd": cc_pol.cwnd_view(cc_st, F),
             "qlen_max": q_len.max(),
             "rx_base": dst_track.base,
+            "src_base": src_track.base,
         }
         return ns, out
 
@@ -711,6 +787,7 @@ class SimResult:
     cwnd_per_tick: np.ndarray       # [T, F]
     qlen_max: np.ndarray            # [T]
     rx_base_per_tick: np.ndarray    # [T, F] receiver CACK per tick
+    src_base_per_tick: np.ndarray   # [T, F] source CACK per tick
     msg_size: np.ndarray            # [F] message sizes (packets)
 
     def completion_ticks(self) -> np.ndarray:
@@ -728,6 +805,21 @@ class SimResult:
         """Tick by which EVERY flow completed, as a plain int; -1 if any
         flow was still unfinished when the run ended."""
         ct = self.completion_ticks()
+        return -1 if bool((ct < 0).any()) else int(ct.max())
+
+    def source_completion_ticks(self) -> np.ndarray:
+        """Per-flow first tick at which the SOURCE saw its whole message
+        acknowledged (CACK == size; -1 = unfinished). This is the
+        completion notion the dependency lane gates on, and the right
+        one under INC, where switch-absorbed packets are ACKed to the
+        source but never surface at the receiver."""
+        reached = (self.src_base_per_tick.astype(np.int64)
+                   >= self.msg_size[None, :].astype(np.int64))
+        return np.where(reached.any(0), reached.argmax(axis=0), -1)
+
+    def source_completion_tick(self) -> int:
+        """Tick by which every flow source-completed; -1 if any didn't."""
+        ct = self.source_completion_ticks()
         return -1 if bool((ct < 0).any()) else int(ct.max())
 
     def goodput(self, window: "tuple[int, int] | None" = None) -> np.ndarray:
@@ -878,6 +970,7 @@ def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
         cwnd_per_tick=np.asarray(outs["cwnd"]),
         qlen_max=np.asarray(outs["qlen_max"]),
         rx_base_per_tick=np.asarray(outs["rx_base"]),
+        src_base_per_tick=np.asarray(outs["src_base"]),
         msg_size=np.asarray(msg_size),
     )
 
@@ -917,6 +1010,7 @@ def _run_batch(g, wls, profile, p, dead, seeds) -> "list[SimResult]":
             cwnd_per_tick=np.asarray(outs["cwnd"][b]),
             qlen_max=np.asarray(outs["qlen_max"][b]),
             rx_base_per_tick=np.asarray(outs["rx_base"][b]),
+            src_base_per_tick=np.asarray(outs["src_base"][b]),
             msg_size=sizes[b],
         )
         for b in range(B)

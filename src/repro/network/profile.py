@@ -91,6 +91,10 @@ class TransportProfile:
     cc: CCAlgo = CCAlgo.NSCC
     lb: LBScheme = LBScheme.OBLIVIOUS
     delivery: "DeliveryMode | tuple[DeliveryMode, ...]" = DeliveryMode.RUD
+    #: in-network collectives: switch-resident reduction of flows marked
+    #: with a ``Workload.red`` group id (see repro.core.inc). Static —
+    #: INC-off profiles compile the exact pre-INC tick.
+    inc: bool = False
     name: str = field(default="custom", compare=False)
 
     def __post_init__(self):
@@ -134,7 +138,9 @@ class TransportProfile:
     def describe(self) -> str:
         d = (self.delivery.name if isinstance(self.delivery, DeliveryMode)
              else "per-flow[" + ",".join(m.name for m in self.delivery) + "]")
-        return f"{self.name}(cc={self.cc.name}, lb={self.lb.name}, delivery={d})"
+        inc = ", inc=on" if self.inc else ""
+        return (f"{self.name}(cc={self.cc.name}, lb={self.lb.name}, "
+                f"delivery={d}{inc})")
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,57 @@ def profile_ablation_sweep(fan_in: int = 4, size: int = 600):
     wls = Workload.stack([wl] * len(profiles))
     return g, wls, profiles, [p.name for p in profiles]
 
+def collective_sweep(n: int = 8, size: int = 40, hosts_per_leaf: int = 2):
+    """The collective ablation grid — kind x algorithm x INC on/off x
+    transport profile — as ONE ``simulate_batch`` call.
+
+    Scenarios (15 with the defaults):
+
+    * all-reduce x {ring, recursive_doubling, tree} x {INC off, on}
+      under both ai_full (NSCC) and ai_base (RCCC)  -> 12
+    * reduce-scatter / all-gather / all-to-all (ring schedules, ai_full,
+      INC off) -> 3 more kinds for the kind axis.
+
+    Workloads have heterogeneous flow counts (a ring all-reduce is
+    2(n-1)*n flows, a tree 2(n-1)), so they are padded with inert size-0
+    flows (`collectives.stack_padded`) into one [B, Fmax] batch; the
+    engine groups the batch by distinct profile (INC on/off are distinct
+    executables; everything inside a group is traced).
+
+    `size` must stay <= SimParams.max_cwnd for the ai_base x INC lanes:
+    RCCC's receiver only grants credits to flows it has *seen*, and a
+    fully-absorbed INC member never surfaces at the receiver — it rides
+    its optimistic initial BDP credit (see DESIGN.md).
+
+    Returns (g, wls [B, Fmax], profiles [B], names [B]).
+    """
+    from dataclasses import replace
+
+    from repro.network import collectives as coll
+
+    leaves = max(2, -(-n // hosts_per_leaf))
+    g = leaf_spine(leaves=leaves, spines=4, hosts_per_leaf=hosts_per_leaf)
+    hosts = tuple(range(n))
+    grid = []
+    for prof in (TransportProfile.ai_full(), TransportProfile.ai_base()):
+        for kind, algo in (("all_reduce", "ring"),
+                           ("all_reduce", "recursive_doubling"),
+                           ("all_reduce", "tree")):
+            for inc in (False, True):
+                grid.append((prof, kind, algo, inc))
+    for kind in ("reduce_scatter", "all_gather", "all_to_all"):
+        grid.append((TransportProfile.ai_full(), kind, "ring", False))
+
+    wls, profiles, names = [], [], []
+    for prof, kind, algo, inc in grid:
+        spec = coll.CollectiveSpec(kind, hosts, size)
+        wls.append(coll.build_workload(spec, algo))
+        profiles.append(replace(prof, inc=True, name=prof.name + "+inc")
+                        if inc else prof)
+        names.append(f"{prof.name}/{kind}/{algo}{'/inc' if inc else ''}")
+    return g, coll.stack_padded(wls), profiles, names
+
+
 def failure_sweep(spines: int = 4, hosts_per_leaf: int = 8,
                   size: int = 100000):
     """One scenario per failed leaf-0 uplink, plus a no-failure baseline.

@@ -1,0 +1,295 @@
+"""Dependency-scheduled collectives + in-network reduction (INC).
+
+* flow-table builders: shapes, acyclic phase-ordered deps, validation;
+* the fabric's dependency lane actually gates eligibility in-scan;
+* whole collectives complete with EXACT per-host delivery totals
+  (reliable transport => the schedule's phase totals are deterministic);
+* INC: switch absorption conserves payload accounting (delivered +
+  absorbed == expected), beats the INC-off tree on completion, and is a
+  no-op for group-free schedules;
+* netmodel: packet-level collective time >= the alpha-beta bound.
+"""
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.network import collectives as coll
+from repro.network.fabric import SimParams, Workload, simulate, simulate_batch
+from repro.network.profile import TransportProfile
+from repro.network.topology import leaf_spine
+
+
+def _spec(kind="all_reduce", n=8, s=32):
+    return coll.CollectiveSpec(kind, tuple(range(n)), s)
+
+
+def _host_rx(wl, result, n):
+    rx = np.zeros((n,), np.int64)
+    np.add.at(rx, np.asarray(wl.dst), np.asarray(result.state.delivered,
+                                                 np.int64))
+    return rx
+
+
+# ------------------------------------------------------------------ builders
+
+def test_ring_allreduce_table():
+    t = coll.flow_table(_spec(), "ring")
+    n = 8
+    assert len(t.src) == 2 * (n - 1) * n
+    assert t.meta["chunk"] == 4  # ceil(32/8)
+    # phase-ordered acyclic deps: every dep points at a lower flow index
+    f = np.arange(len(t.src))
+    has = t.dep >= 0
+    assert (t.dep[has] < f[has]).all()
+    # dep of flow (p, i) is the phase-(p-1) flow INTO host i
+    assert (t.dst[t.dep[has]] == t.src[has]).all()
+
+
+def test_recursive_doubling_tables():
+    t = coll.flow_table(_spec(), "recursive_doubling")
+    assert len(t.src) == 3 * 8          # log2(8) phases x 8 hosts
+    has = t.dep >= 0
+    assert (t.dst[t.dep[has]] == t.src[has]).all()
+    # reduce-scatter halves, all-gather doubles; totals match (n-1)/n
+    trs = coll.flow_table(_spec("reduce_scatter"), "recursive_doubling")
+    tag = coll.flow_table(_spec("all_gather"), "recursive_doubling")
+    assert int(trs.size[trs.src == 0].sum()) == 16 + 8 + 4    # 32*(7/8)
+    assert int(tag.size[tag.src == 0].sum()) == 32 + 64 + 128  # doubling
+    with pytest.raises(ValueError, match="power-of-two"):
+        coll.flow_table(_spec(n=6), "recursive_doubling")
+
+
+def test_tree_table_and_validation():
+    t = coll.flow_table(_spec(), "tree")
+    assert len(t.src) == 14
+    assert (t.red[:7] == 0).all() and (t.red[7:] == -1).all()
+    assert (t.dst[:7] == 0).all() and (t.src[7:] == 0).all()
+    with pytest.raises(ValueError, match="all_reduce only"):
+        coll.flow_table(_spec("all_gather"), "tree")
+    with pytest.raises(ValueError):
+        coll.CollectiveSpec("nope", (0, 1), 4)
+    with pytest.raises(ValueError, match="distinct"):
+        coll.CollectiveSpec("all_reduce", (0, 0), 4)
+    assert coll.CollectiveSpec.from_bytes(
+        "all-reduce", range(4), 10_000, mtu=4096).size_pkts == 3
+
+
+def test_all_to_all_rounds_chained_per_host():
+    t = coll.flow_table(_spec("all_to_all"), "ring")
+    assert len(t.src) == 7 * 8
+    has = t.dep >= 0
+    # each host's rounds are serialized on its own previous round
+    assert (t.src[t.dep[has]] == t.src[has]).all()
+
+
+# ------------------------------------------------------------- dep gating
+
+def test_dep_lane_gates_eligibility():
+    """Flow 1 depends on flow 0: its first delivery must come after
+    flow 0 fully completed at the source."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    wl = Workload.of([0, 1], [2, 3], [60, 60], dep=[-1, 0])
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=500))
+    done0 = int(r.source_completion_ticks()[0])
+    first1 = int(np.argmax(r.delivered_per_tick[:, 1] > 0))
+    assert done0 > 0 and (r.delivered_per_tick[:, 1] > 0).any()
+    assert first1 > done0
+    # and without the dep both flows run concurrently
+    r2 = simulate(g, Workload.of([0, 1], [2, 3], [60, 60]),
+                  TransportProfile.ai_full(), SimParams(ticks=500))
+    first1_free = int(np.argmax(r2.delivered_per_tick[:, 1] > 0))
+    assert first1_free < first1
+
+
+def test_ring_allreduce_exact_delivery_and_bound():
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    spec = _spec(n=8, s=32)
+    wl = coll.build_workload(spec, "ring")
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=1200))
+    ct = coll.collective_completion_ticks(r)
+    assert ct >= coll.analytic_ticks(spec, "ring")
+    np.testing.assert_array_equal(_host_rx(wl, r, 8),
+                                  coll.expected_host_rx(spec, "ring"))
+
+
+# ------------------------------------------------------------------- INC
+
+def test_inc_tree_allreduce_correctness():
+    """INC off: exact per-host phase totals. INC on: every flow still
+    source-completes, the parent downlink carries strictly fewer packets
+    (delivered + absorbed == expected), and completion is faster."""
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    n, s = 8, 32
+    spec = _spec(n=n, s=s)
+    wl = coll.build_workload(spec, "tree")
+    p = SimParams(ticks=1500)
+    ai = TransportProfile.ai_full()
+    r_off = simulate(g, wl, ai, p)
+    r_on = simulate(g, wl, replace(ai, inc=True, name="ai_full+inc"), p)
+    expected = coll.expected_host_rx(spec, "tree")
+    np.testing.assert_array_equal(_host_rx(wl, r_off, n), expected)
+    assert int(r_off.state.inc_reduced) == 0
+
+    # INC on: all 14 flows complete at the source
+    assert coll.collective_completion_ticks(r_on) > 0
+    reduced = int(r_on.state.inc_reduced)
+    rx_on = _host_rx(wl, r_on, n)
+    # strictly fewer packets on the root downlink, payload conserved
+    assert reduced > 0
+    assert rx_on[0] < expected[0]
+    assert rx_on[0] + reduced == expected[0]
+    # non-root hosts (broadcast) are untouched by INC
+    np.testing.assert_array_equal(rx_on[1:], expected[1:])
+    # and the switch win shows up in completion time
+    assert (coll.collective_completion_ticks(r_on)
+            < coll.collective_completion_ticks(r_off))
+
+
+def test_inc_oversized_group_passes_through():
+    """A group wider than the 32-bit child bitmap can never complete —
+    it must pass through ENTIRELY (absorbing any child of an
+    unemittable group would destroy its data)."""
+    import jax.numpy as jnp
+
+    from repro.core import inc as inc_mod
+    f = 40
+    red = jnp.zeros((f,), jnp.int32)          # one group, 40 members
+    member, rank, gsz = inc_mod.member_ranks(red, jnp.ones((f,), bool))
+    assert int(gsz[0]) == 40
+    st = inc_mod.INCState.create(f, 8)
+    lanes = 34
+    st2, absorb, emit = inc_mod.process(
+        st, lane_flow=jnp.arange(lanes, dtype=jnp.int32),
+        lane_psn=jnp.zeros((lanes,), jnp.int32),
+        lane_cand=jnp.ones((lanes,), bool),
+        member=member, rank=rank, gsz=gsz, red=red,
+        has_delivery=jnp.zeros((f,), bool))
+    assert not bool(absorb.any()) and not bool(emit.any())
+    # and a 32-wide group still aggregates
+    red32 = jnp.where(jnp.arange(f) < 32, 0, -1).astype(jnp.int32)
+    member, rank, gsz = inc_mod.member_ranks(red32, jnp.ones((f,), bool))
+    _, absorb, emit = inc_mod.process(
+        inc_mod.INCState.create(f, 8),
+        lane_flow=jnp.arange(32, dtype=jnp.int32),
+        lane_psn=jnp.zeros((32,), jnp.int32),
+        lane_cand=jnp.ones((32,), bool),
+        member=member, rank=rank, gsz=gsz, red=red32,
+        has_delivery=jnp.zeros((f,), bool))
+    assert int(absorb.sum()) == 31 and int(emit.sum()) == 1
+
+
+def test_ring_and_rd_allgather_agree_on_traffic():
+    """Both algorithms are per-rank-INPUT denominated: same per-host
+    totals, (n-1)*S (the reviewer-caught factor-n mismatch)."""
+    spec = _spec("all_gather", n=8, s=64)
+    ring = coll.expected_host_rx(spec, "ring")
+    rd = coll.expected_host_rx(spec, "recursive_doubling")
+    np.testing.assert_array_equal(ring, rd)
+    assert int(ring[0]) == 7 * 64
+
+
+def test_inc_is_noop_without_reduction_groups():
+    """An INC-enabled profile on a red=-1 schedule (ring) must produce
+    identical lanes to INC off — aggregation is opportunistic, never a
+    behavior change for group-free traffic."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    spec = _spec(n=4, s=16)
+    wl = coll.build_workload(spec, "ring")
+    p = SimParams(ticks=400)
+    ai = TransportProfile.ai_full()
+    r_off = simulate(g, wl, ai, p)
+    r_on = simulate(g, wl, replace(ai, inc=True, name="ai_full+inc"), p)
+    np.testing.assert_array_equal(r_off.delivered_per_tick,
+                                  r_on.delivered_per_tick)
+    np.testing.assert_array_equal(r_off.cwnd_per_tick, r_on.cwnd_per_tick)
+    assert int(r_on.state.inc_reduced) == 0
+
+
+# -------------------------------------------------------- batching helpers
+
+def test_stack_padded_heterogeneous_grid():
+    """Ring (F=24), rd (F=8... different), tree (F=6) pad into one batch
+    and every scenario completes; inert pad flows deliver nothing."""
+    spec = _spec(n=4, s=16)
+    wls = [coll.build_workload(spec, a)
+           for a in ("ring", "recursive_doubling", "tree")]
+    fs = [int(w.src.shape[0]) for w in wls]
+    batch = coll.stack_padded(wls)
+    assert batch.src.shape == (3, max(fs))
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    rs = simulate_batch(g, batch, TransportProfile.ai_full(),
+                        SimParams(ticks=700))
+    for f, r in zip(fs, rs):
+        assert coll.collective_completion_ticks(r) > 0
+        pad = np.asarray(r.state.delivered)[f:]
+        assert (pad == 0).all()
+
+
+@pytest.mark.slow
+def test_collective_sweep_one_batch_call():
+    """The full kind x algorithm x INC x profile grid (>=12 scenarios)
+    runs as ONE simulate_batch call and shows the INC tree win."""
+    from repro.network import workloads
+    g, wls, profiles, names = workloads.collective_sweep()
+    assert len(names) >= 12
+    rs = simulate_batch(g, wls, profiles, SimParams(ticks=1600))
+    cts = {nm: coll.collective_completion_ticks(r)
+           for nm, r in zip(names, rs)}
+    assert all(ct > 0 for ct in cts.values()), cts
+    assert (cts["ai_full/all_reduce/tree/inc"]
+            < cts["ai_full/all_reduce/tree"])
+
+
+# ------------------------------------------------------------- netmodel
+
+def test_simulated_collective_time_ge_analytic():
+    from repro.distributed.netmodel import (FabricSpec,
+                                            analytic_time_for_spec,
+                                            simulated_collective_time)
+    fs = FabricSpec()
+    for kind, algo in (("all-reduce", "ring"),
+                       ("all-reduce", "tree"),
+                       ("all-gather", "ring")):
+        t_sim = simulated_collective_time(kind, chips=8, size_pkts=24,
+                                          algo=algo, fabric=fs)
+        t_ana = analytic_time_for_spec(kind, 24, 8, fs)
+        assert t_sim >= t_ana, (kind, algo, t_sim, t_ana)
+
+
+def test_bytes_total_matches_size_pkts_denomination():
+    """The bytes_total path is OUTPUT-denominated (HLO convention): for
+    all-gather the per-rank input block is output/n, so both entry
+    points must price the same schedule."""
+    from repro.distributed.netmodel import (FabricSpec,
+                                            simulated_collective_time)
+    fs = FabricSpec()
+    n, s = 4, 8
+    t_pkts = simulated_collective_time("all-gather", chips=n, size_pkts=s,
+                                       fabric=fs)
+    t_bytes = simulated_collective_time(
+        "all-gather", bytes_total=n * n * s * fs.mtu, chips=n, fabric=fs)
+    assert t_bytes == t_pkts
+    # all-reduce: output == input, no extra factor
+    t_pkts = simulated_collective_time("all-reduce", chips=n, size_pkts=s,
+                                       fabric=fs)
+    t_bytes = simulated_collective_time(
+        "all-reduce", bytes_total=n * s * fs.mtu, chips=n, fabric=fs)
+    assert t_bytes == t_pkts
+
+
+def test_simulated_efficiency_in_unit_interval():
+    from repro.distributed.netmodel import simulated_efficiency
+    eff = simulated_efficiency("all-reduce", hosts=4, size_pkts=16)
+    assert 0.0 < eff <= 1.0
+
+
+def test_pattern_workload_deprecated_alias():
+    import warnings
+
+    from repro.distributed import netmodel
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        wl = netmodel._pattern_workload("all-reduce", 4, 8)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    # routed through the real builder: full dep-scheduled ring
+    assert int(wl.src.shape[0]) == 2 * 3 * 4

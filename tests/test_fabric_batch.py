@@ -214,6 +214,73 @@ def test_record_rx_unique_rows_fast_path_matches_general():
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
+# ------------------------------------------------------------------------
+# dependency lane (Workload.dep) + INC: parity and golden anchoring
+# ------------------------------------------------------------------------
+
+def test_dep_gated_batch_vs_serial_bitwise():
+    """Dep-scheduled collectives through simulate_batch are bitwise
+    identical to serial simulate calls (sizes x seeds vary)."""
+    from repro.network import collectives as coll
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    p = SimParams(ticks=350)
+    prof = TransportProfile.ai_full()
+    wls, seeds = [], []
+    for i, s in enumerate((12, 16, 20)):
+        spec = coll.CollectiveSpec("all_reduce", (0, 1, 2, 3), s)
+        wls.append(coll.build_workload(spec, "ring"))
+        seeds.append(0x5EED + i)
+    serial = [simulate(g, wls[i], prof, p, seed=seeds[i]) for i in range(3)]
+    batch = simulate_batch(g, Workload.stack(wls), prof, p,
+                           seeds=np.asarray(seeds, np.uint32))
+    for i, (a, b) in enumerate(zip(serial, batch)):
+        np.testing.assert_array_equal(a.delivered_per_tick,
+                                      b.delivered_per_tick,
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.src_base_per_tick,
+                                      b.src_base_per_tick,
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} diverged"
+
+
+def test_inc_batch_vs_serial_bitwise():
+    """The INC-enabled executable is batch/serial bitwise-stable too
+    (accumulator slots ride the vmapped carry)."""
+    from dataclasses import replace
+
+    from repro.network import collectives as coll
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    prof = replace(TransportProfile.ai_full(), inc=True, name="ai_full+inc")
+    p = SimParams(ticks=600)
+    spec = coll.CollectiveSpec("all_reduce", tuple(range(8)), 24)
+    wl = coll.build_workload(spec, "tree")
+    a = simulate(g, wl, prof, p)
+    b = simulate_batch(g, Workload.stack([wl, wl]), prof, p)[1]
+    assert int(a.state.inc_reduced) > 0
+    np.testing.assert_array_equal(a.delivered_per_tick, b.delivered_per_tick)
+    np.testing.assert_array_equal(a.src_base_per_tick, b.src_base_per_tick)
+    assert _state_equal(a.state, b.state)
+
+
+def test_explicit_dep_minus_one_matches_golden():
+    """Golden anchor: a workload with dep/red lanes explicitly present
+    (all -1) reproduces the pre-dep-lane engine bitwise (the golden
+    lanes were captured before this PR)."""
+    import os
+    gold = np.load(os.path.join(os.path.dirname(__file__), "golden",
+                                "fabric_golden.npz"))
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200,
+                     dep=np.full(3, -1, np.int32),
+                     red=np.full(3, -1, np.int32))
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300))
+    np.testing.assert_array_equal(r.delivered_per_tick, gold["a_delivered"])
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"])
+    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"])
+    np.testing.assert_array_equal(np.asarray(r.state.src_track.base),
+                                  gold["a_state_src_base"])
+
+
 def test_run_cache_distinguishes_same_named_graphs():
     """Two topologies with identical name/counts but different wiring
     must not share a compiled executable (routing is baked in)."""

@@ -1,0 +1,45 @@
+"""Deferrable-send window pacing (Sec. 3.1.3) — both regimes.
+
+Kept OUT of tests/test_uet_core.py on purpose: that module is gated on
+`pytest.importorskip("hypothesis")` and silently skips in environments
+without dev deps, which would erase the only coverage of the
+window-paced stall this PR implemented (the seed multiplied the stall
+term by 0.0, so the modeled claim was vacuous).
+"""
+import pytest
+
+from repro.core import messaging
+
+
+def test_deferrable_window_pacing_both_branches():
+    """At/above BDP deferrable streams at line rate; below it every
+    extra window pays the ack-wait stall."""
+    link = messaging.LinkModel(alpha=1e-6, beta=2.5e-12)
+    a, b = link.alpha, link.beta
+    size = 1e6
+    bdp = 2 * a / b  # 800 kB
+    # branch 1: window >= BDP — full rate, no stall
+    hi = messaging.deferrable_vs_rendezvous_bandwidth(
+        size, link, eager_limit=16384.0, true_window=bdp)
+    assert hi["deferrable"] == pytest.approx(size / (a + b * size))
+    # branch 2: window < BDP — explicit stall formula, strictly slower
+    w = bdp / 8
+    lo = messaging.deferrable_vs_rendezvous_bandwidth(
+        size, link, eager_limit=16384.0, true_window=w)
+    t_expect = a + b * size + (size / w - 1.0) * (2 * a - b * w)
+    assert lo["deferrable"] == pytest.approx(size / t_expect)
+    assert lo["deferrable"] < hi["deferrable"]
+    # monotone in the window below BDP
+    mid = messaging.deferrable_vs_rendezvous_bandwidth(
+        size, link, eager_limit=16384.0, true_window=bdp / 2)
+    assert lo["deferrable"] < mid["deferrable"] <= hi["deferrable"]
+
+
+def test_deferrable_beats_stale_rendezvous_when_window_tracks():
+    """The paper's claim needs the window actually tracked: with a stale
+    small eager limit, rendezvous pays the read round trip while
+    deferrable at the true (>=BDP) window streams at line rate."""
+    link = messaging.LinkModel(alpha=1e-6, beta=2.5e-12)
+    out = messaging.deferrable_vs_rendezvous_bandwidth(
+        size=1e6, link=link, eager_limit=16384.0, true_window=1e6)
+    assert out["deferrable"] > out["rendezvous"]

@@ -167,6 +167,8 @@ def test_deferrable_tracks_window():
         size=1e6, link=messaging.LinkModel(alpha=1e-6, beta=2.5e-12),
         eager_limit=16384.0, true_window=1e6)
     assert out["deferrable"] > out["rendezvous"]
+    # the window-paced stall branches live in tests/test_messaging_window.py
+    # (this module is hypothesis-gated and skips without dev deps)
 
 
 # ------------------------------------------------------------------- PDC
