@@ -99,23 +99,27 @@ def bench_congestion():
     RCCC-only == TransportProfile.ai_base(); NSCC-only == ai_full()."""
     rows = []
     g, wl, exp = workloads.incast(4, size=100000)
-    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=1200))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=1200),
+                 goodput_window=(300, 1200))
     rows.append(("incast_rccc_share", round(float(
         r.goodput((300, 1200)).mean()), 3), exp["share"],
         "4->1 incast, RCCC exact fair share"))
 
     g, wl, exp = workloads.outcast(4, size=100000)
-    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500),
+                 goodput_window=(800, 2500))
     rows.append(("outcast_rccc_w_share", round(float(
         r.goodput((800, 2500))[4]), 3), exp["rccc_w_share"],
         "RCCC blind grant wastes 25%"))
-    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500))
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500),
+                 goodput_window=(1200, 2500))
     rows.append(("outcast_nscc_w_share", round(float(
         r.goodput((1200, 2500))[4]), 3), exp["nscc_w_share"],
         "NSCC converges to the optimum"))
 
     g, wl, exp = workloads.in_network(12, 4, size=100000)
-    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500),
+                 goodput_window=(800, 2500))
     gp = r.goodput((800, 2500))
     rows.append(("innetwork_cross_share", round(float(gp[:12].mean()), 3),
                  exp["cross_share"], "12 flows over 4 uplinks"))
@@ -131,7 +135,7 @@ def bench_loadbalance():
     for scheme in (LBScheme.STATIC, LBScheme.OBLIVIOUS, LBScheme.RR_SLOTS,
                    LBScheme.REPS, LBScheme.EVBITMAP):
         r = simulate(g, wl, TransportProfile.ai_full(lb=scheme),
-                     SimParams(ticks=1500))
+                     SimParams(ticks=1500), goodput_window=(700, 1500))
         gp = r.goodput((700, 1500))
         rows.append((f"perm_goodput_{scheme.name.lower()}",
                      round(float(gp.mean()), 3), None,
@@ -243,7 +247,7 @@ def bench_failure_mitigation():
     for scheme in (LBScheme.OBLIVIOUS, LBScheme.REPS):
         p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
         r = simulate(g, wl, TransportProfile.ai_full(lb=scheme), p,
-                     failed=dead)
+                     failed=dead, goodput_window=(1500, 3000))
         rows.append((f"fail_goodput_{scheme.name.lower()}",
                      round(float(r.goodput((1500, 3000)).mean()), 3),
                      0.375 if scheme == LBScheme.REPS else None,
@@ -260,7 +264,7 @@ def bench_failure_sweep_batched():
     g, wls, masks, exp = workloads.failure_sweep(spines=4, hosts_per_leaf=8)
     p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
     results = simulate_batch(g, wls, TransportProfile.ai_full(lb=LBScheme.REPS),
-                             p, failed=masks)
+                             p, failed=masks, goodput_window=(1500, 3000))
     rows = [("sweep_goodput_healthy",
              round(float(results[0].goodput((1500, 3000)).mean()), 3),
              exp["healthy_share"], "no failures")]

@@ -19,19 +19,27 @@ Measures the hot path of the UET fabric engine in four configurations —
                        (vmapped scan, carry donated), cold and warm.
 
 Also runs the profile-ablation sweep (ai_base / ai_full / hpc plus the
-NSCC-only / RCCC-only / hybrid CC ablation) as ONE ``simulate_batch``
-call — the engine groups the grid by distinct profile, one executable
-each — and records per-profile goodput under ``profile_ablation``.
+NSCC-only / RCCC-only / hybrid / open-loop CC ablation) as ONE
+``simulate_batch`` call — the engine groups the grid by distinct
+profile, one executable each, run concurrently — and records
+per-profile goodput under ``profile_ablation``. The scenario is the
+oversubscribed in-network pattern whose same-leaf victim flow actually
+separates the CC policies (asserted — a bench whose ablation axis
+reports one number is measuring nothing).
 
 The collective ablation grid (kind x algorithm x INC on/off x profile,
 15 dependency-scheduled whole collectives padded into one batch) runs
 as ONE ``simulate_batch`` call too and lands under ``collective_sweep``:
 per-scenario completion ticks, scenarios/sec, and the in-network-
 reduction win (INC-on / INC-off completion ratio for the tree
-all-reduce).
+all-reduce). Both sweeps run the default ``trace="stats"`` tier on the
+adaptive-horizon engine: completion ticks stream out of the chunked
+while-scan, scenarios exit at quiescence instead of padding to the
+budget, and INC on/off rides the traced ``red`` lanes (one executable
+per transport profile for the whole grid).
 
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
-accumulates across PRs (``api_version`` 3 == collectives + INC).
+accumulates across PRs (``api_version`` 4 == adaptive-horizon engine).
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
        [--ticks 600] [--out BENCH_fabric.json]
@@ -110,7 +118,7 @@ def run_benches(b: int, ticks: int) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 3,
+        "api_version": 4,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -171,29 +179,43 @@ def run_benches(b: int, ticks: int) -> dict:
 
 def _profile_ablation(ticks: int) -> dict:
     """The operating-point grid as ONE simulate_batch call: the three
-    named profiles + the CC ablation (6 scenarios, grouped by profile
-    into one executable each) on a congested incast."""
+    named profiles + the CC ablation (7 scenarios, grouped by profile
+    into one executable each) on the oversubscribed in-network pattern.
+
+    Asserts the realism property the old incast version silently lacked:
+    nscc_only / rccc_only / open_loop must visibly diverge on the
+    same-leaf victim flow (blind receiver credits cap it at ~50%; NSCC
+    pushes it toward the 1 - uplinks/pairs optimum)."""
     from repro.network import workloads
     from repro.network.fabric import SimParams, simulate_batch
 
-    g, wls, profiles, names = workloads.profile_ablation_sweep(
-        fan_in=4, size=100000)
+    g, wls, profiles, names, exp = workloads.profile_ablation_sweep()
     p = SimParams(ticks=ticks, timeout_ticks=64)
+    window = (ticks // 3, ticks)
+    run = lambda: simulate_batch(g, wls, profiles, p,  # noqa: E731
+                                 goodput_window=window)
     t0 = time.perf_counter()
-    rs = simulate_batch(g, wls, profiles, p)
+    rs = run()
     cold = time.perf_counter() - t0
-    warm = min(_timed(lambda: simulate_batch(g, wls, profiles, p))
-               for _ in range(2))
-    w0 = ticks // 3
+    warm = min(_timed(run) for _ in range(2))
+    v = exp["victim_flow"]
+    gp = {name: r.goodput(window) for name, r in zip(names, rs)}
+    victim = {name: round(float(x[v]), 4) for name, x in gp.items()}
+    # realism gate: if the CC axis reports one number, the sweep is
+    # differentiating nothing and the bench is broken
+    assert victim["nscc_only"] > victim["open_loop"] + 0.05, victim
+    assert victim["open_loop"] > victim["rccc_only"] + 0.05, victim
+    assert abs(victim["rccc_only"] - exp["rccc_local_share"]) < 0.08, victim
     return {
         "scenarios": len(profiles),
         "distinct_profiles": len(set(profiles)),
         "sweep_cold_s": cold,
         "sweep_warm_s": warm,
         "scenarios_per_sec": len(profiles) / warm,
+        "victim_flow_share": victim,
+        "victim_share_optimal": exp["optimal_local_share"],
         "goodput_mean": {
-            name: round(float(r.goodput((w0, ticks)).mean()), 4)
-            for name, r in zip(names, rs)
+            name: round(float(x.mean()), 4) for name, x in gp.items()
         },
     }
 
@@ -201,8 +223,11 @@ def _profile_ablation(ticks: int) -> dict:
 def _collective_sweep(ticks: int = 1600) -> dict:
     """The collective ablation grid — kind x algorithm x INC on/off x
     profile, 15 whole dependency-scheduled collectives — as ONE
-    ``simulate_batch`` call (grouped into 4 executables: ai_full /
-    ai_base, each with INC off and on)."""
+    ``simulate_batch`` call on the adaptive-horizon engine: INC on/off
+    rides the traced ``red`` lanes, so the grid compiles to just 2
+    executables (ai_full / ai_base), run concurrently, and every
+    scenario exits at quiescence instead of padding to the 1600-tick
+    budget (completions land at 71-542 ticks)."""
     from repro.network import collectives as coll
     from repro.network import workloads
     from repro.network.fabric import SimParams, simulate_batch
@@ -229,6 +254,7 @@ def _collective_sweep(ticks: int = 1600) -> dict:
         "flows_padded": int(wls.src.shape[1]),
         "distinct_profiles": len(set(profiles)),
         "ticks": ticks,
+        "horizons": sorted({int(r.horizon) for r in rs}),
         "sweep_cold_s": cold,
         "sweep_warm_s": warm,
         "scenarios_per_sec": len(names) / warm,

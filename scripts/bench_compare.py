@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Perf-regression gate: diff a fresh BENCH_fabric.json against the
+committed one.
+
+Guarded metrics (throughput — higher is better):
+
+* ``ticks_per_sec_batched``
+* ``scenarios_per_sec_batched``
+* ``collective_sweep.scenarios_per_sec``
+
+A metric that drops more than ``--threshold`` (default 20%) below the
+committed value is a regression: the script prints the table and exits
+2. ``scripts/check.sh`` wires this in as a SOFT gate — it warns and
+flags the output but does not fail the smoke run, because wall-clock
+benches on shared/loaded machines are advisory; CI or a reviewer reads
+the flag.
+
+Usage:
+    python scripts/bench_compare.py --fresh /tmp/BENCH_fresh.json
+    python scripts/bench_compare.py --run          # regenerate first (slow)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+COMMITTED = os.path.join(REPO, "BENCH_fabric.json")
+
+#: (label, path into the bench dict)
+METRICS = (
+    ("ticks_per_sec_batched", ("ticks_per_sec_batched",)),
+    ("scenarios_per_sec_batched", ("scenarios_per_sec_batched",)),
+    ("collective_sweep.scenarios_per_sec",
+     ("collective_sweep", "scenarios_per_sec")),
+)
+
+
+def _get(d: dict, path):
+    for k in path:
+        d = d[k]
+    return float(d)
+
+
+def compare(committed: dict, fresh: dict, threshold: float):
+    """Returns (ok, rows); rows are (label, base, new, ratio, regressed)."""
+    rows, ok = [], True
+    for label, path in METRICS:
+        try:
+            base = _get(committed, path)
+        except (KeyError, TypeError):
+            rows.append((label, None, None, None, False))
+            continue
+        new = _get(fresh, path)  # a fresh bench missing a metric IS a bug
+        ratio = new / base if base > 0 else float("inf")
+        regressed = ratio < 1.0 - threshold
+        ok = ok and not regressed
+        rows.append((label, base, new, ratio, regressed))
+    return ok, rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--committed", default=COMMITTED,
+                    help="baseline bench json (default: repo root)")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly generated bench json to judge")
+    ap.add_argument("--run", action="store_true",
+                    help="regenerate a fresh bench first (slow: runs "
+                         "benchmarks.perf_benches)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional drop (default 0.20)")
+    args = ap.parse_args()
+
+    if args.run:
+        fd, args.fresh = tempfile.mkstemp(prefix="BENCH_fresh_",
+                                          suffix=".json")
+        os.close(fd)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.perf_benches",
+             "--out", args.fresh],
+            cwd=REPO, env=env, check=True, stdout=subprocess.DEVNULL)
+    if not args.fresh:
+        ap.error("give --fresh PATH or --run")
+
+    with open(args.committed) as f:
+        committed = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    ok, rows = compare(committed, fresh, args.threshold)
+
+    width = max(len(r[0]) for r in rows)
+    for label, base, new, ratio, regressed in rows:
+        if base is None:
+            print(f"{label:<{width}}  (missing in committed baseline — "
+                  f"skipped)")
+            continue
+        flag = "REGRESSION" if regressed else "ok"
+        print(f"{label:<{width}}  {base:12.2f} -> {new:12.2f}  "
+              f"({ratio * 100:6.1f}%)  {flag}")
+    if not ok:
+        print(f"\nPERF REGRESSION: a guarded metric dropped >"
+              f"{args.threshold * 100:.0f}% vs {args.committed}")
+        return 2
+    print("\nperf gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,4 +29,23 @@ python -m benchmarks.run --only headers
 echo "== paper bench smoke: collectives (dep lane + INC canary) =="
 python -m benchmarks.run --only collectives
 
+echo "== perf gate (soft): BENCH_fabric.json regression diff =="
+# Soft gate: warns + flags, never fails the smoke run (wall-clock
+# benches are advisory on shared machines). Set RUN_BENCH=1 to
+# regenerate a fresh bench (~2 min) and diff it against the committed
+# BENCH_fabric.json; >20% throughput regressions are flagged loudly.
+if [ "${RUN_BENCH:-0}" = "1" ]; then
+  rc=0
+  python scripts/bench_compare.py --run || rc=$?
+  if [ "$rc" -eq 2 ]; then
+    echo "PERF-REGRESSION-FLAG: bench_compare reported >20% drop" \
+         "(soft gate — check.sh continues; see table above)"
+  elif [ "$rc" -ne 0 ]; then
+    echo "BENCH-ERROR: bench_compare failed to run (exit $rc) —" \
+         "no comparison was produced; fix the bench before reading perf"
+  fi
+else
+  echo "skipped (RUN_BENCH=1 ./scripts/check.sh to run the perf diff)"
+fi
+
 echo "OK"

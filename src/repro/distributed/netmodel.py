@@ -151,7 +151,11 @@ def simulated_collective_time(kind: str = "all-reduce",
     wl = coll.build_workload(spec, algo)
     est = coll.analytic_ticks(spec, algo)
     budget = ticks if ticks is not None else 6 * est + 800
-    r = simulate(g, wl, profile, SimParams(ticks=budget, trimming=trimming))
+    # the budget rides as the traced max_ticks bound: a size sweep with
+    # its size-dependent budgets shares ONE executable, and the chunked
+    # driver exits at quiescence, so a generous budget costs nothing
+    r = simulate(g, wl, profile, SimParams(trimming=trimming),
+                 max_ticks=budget)
     ct = coll.collective_completion_ticks(r)
     if ct < 0:
         raise RuntimeError(

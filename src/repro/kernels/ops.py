@@ -18,6 +18,7 @@ from __future__ import annotations
 from repro.core.cms.nscc import NSCCParams
 from repro.kernels import ON_TPU as _ON_TPU, ref
 from repro.kernels.ecmp_hash import ecmp_select as _ecmp_pallas
+from repro.kernels.nack_mark import nack_mark as _nack_mark_pallas
 from repro.kernels.nscc_update import nscc_update as _nscc_pallas
 from repro.kernels.sack_bitmap import sack_advance as _sack_pallas
 from repro.kernels.sack_fused import sack_fused as _sack_fused_pallas
@@ -47,6 +48,14 @@ def sack_fused(ring, base, rtx, mask, use_pallas: bool | None = None):
         return _sack_fused_pallas(ring, base, rtx, mask,
                                   interpret=not _ON_TPU)
     return ref.sack_fused_ref(ring, base, rtx, mask)
+
+
+def nack_mark(rtx, flow, off, valid, use_pallas: bool | None = None):
+    """Duplicate-safe OR of NACK-requested retransmit bits (Sec. 3.2.4)."""
+    if _use_pallas(use_pallas):
+        return _nack_mark_pallas(rtx, flow, off, valid,
+                                 interpret=not _ON_TPU)
+    return ref.nack_mark_ref(rtx, flow, off, valid)
 
 
 def ecmp_select(src, dst, ev, salt, fanout: int,

@@ -56,3 +56,34 @@ def sack_fused_ref(ring: jax.Array, base: jax.Array, rtx: jax.Array,
     adv = trailing_ones(ring)
     return (shift_ring(ring, adv), base + adv.astype(jnp.uint32),
             shift_ring(rtx, adv), adv)
+
+
+def nack_mark_ref(rtx: jax.Array, flow: jax.Array, off: jax.Array,
+                  valid: jax.Array) -> jax.Array:
+    """Duplicate-safe NACK retransmit-bit marking (Sec. 3.2.4).
+
+    Lane l with valid[l] sets bit off[l] (a PSN offset in [0, W*32)) of
+    ring row flow[l]; several lanes may hit one row, and two lanes may
+    carry the SAME (flow, off) — e.g. a packet and its retransmission
+    trimmed in one tick — so the combine must be OR, not add.
+
+    rtx: [F, W] uint32; flow/off: [L] int32; valid: [L] bool.
+    Returns rtx with the bits OR-ed in.
+
+    Scheme: each lane drops one True on an [F, W*32] bool plane (masked
+    lanes land on an out-of-range row), then the plane packs into ring
+    words — bits are distinct powers of two per word, so the pack-sum IS
+    the bitwise OR. E-Q scalar updates + an [F, mp] pack instead of the
+    [F, W, L] dense OR-fold this replaced (the fabric tick's largest
+    intermediate by an order of magnitude).
+    """
+    f, w = rtx.shape
+    mp = w * 32
+    rows = jnp.where(valid, flow, f)
+    cols = jnp.clip(off, 0, mp - 1)
+    plane = jnp.zeros((f, mp), jnp.bool_).at[rows, cols].set(True,
+                                                             mode="drop")
+    words = (plane.reshape(f, w, 32).astype(jnp.uint32)
+             << jnp.arange(32, dtype=jnp.uint32)).sum(axis=2,
+                                                      dtype=jnp.uint32)
+    return rtx | words

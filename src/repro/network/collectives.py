@@ -215,12 +215,22 @@ def flow_table(spec: CollectiveSpec, algo: str = "ring") -> FlowTable:
     raise ValueError(f"unknown algorithm {algo!r}; choose from {ALGOS}")
 
 
-def build_workload(spec: CollectiveSpec, algo: str = "ring") -> Workload:
-    """The fabric Workload for one whole collective (host-id space)."""
+def build_workload(spec: CollectiveSpec, algo: str = "ring", *,
+                   inc_groups: bool = True) -> Workload:
+    """The fabric Workload for one whole collective (host-id space).
+
+    ``inc_groups=False`` strips the ``red`` lanes (all -1), turning
+    in-network reduction off *for this scenario* even under an
+    ``inc=True`` profile. Because ``red`` is a traced lane and the INC
+    machinery is an exact no-op on group-free traffic (bitwise — see
+    tests), INC on/off is a data axis, not a compile axis: an INC
+    ablation grid shares one executable per transport profile instead
+    of two."""
     t = flow_table(spec, algo)
     hosts = np.asarray(spec.hosts, np.int32)
+    red = t.red if inc_groups else np.full_like(t.red, -1)
     return Workload.of(hosts[t.src], hosts[t.dst], t.size,
-                       dep=t.dep, red=t.red)
+                       dep=t.dep, red=red)
 
 
 def expected_host_rx(spec: CollectiveSpec, algo: str = "ring") -> np.ndarray:
@@ -252,7 +262,11 @@ def analytic_ticks(spec: CollectiveSpec, algo: str = "ring") -> int:
 def collective_completion_ticks(result: SimResult) -> int:
     """Tick at which the collective finished: every flow source-complete
     (the INC-correct notion — absorbed packets are ACKed at the switch
-    and never surface at the receiver). -1 = did not finish in the run."""
+    and never surface at the receiver). -1 = did not finish in the run.
+
+    Works on both trace tiers: under the default ``trace="stats"`` this
+    reads the completion lane streamed inside the chunked while-scan, so
+    pricing a collective costs no dense per-tick trace at all."""
     return result.source_completion_tick()
 
 

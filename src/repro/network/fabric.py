@@ -31,6 +31,21 @@ The engine runs in two modes:
   device launches for the whole grid. Per-lane results are bitwise
   identical to serial ``simulate`` calls.
 
+Execution model (the adaptive-horizon driver): the tick budget is NOT a
+fixed scan length. The driver runs a ``lax.while_loop`` over fixed-size
+scan chunks (``SimParams.chunk_ticks``) and exits as soon as a scenario
+is *quiescent* — every source CACK-complete, nothing inflight, queues
+and control-event buffers drained — so a 1600-tick budget costs only as
+many chunks as the scenario actually needs. The budget (``max_ticks`` /
+``SimParams.ticks``) is a traced bound: one compiled executable serves
+every horizon for a given (topology, profile, flow count, chunk) shape.
+Results come in two trace tiers (see :class:`SimResult`): the default
+``trace="stats"`` streams completion ticks / windowed goodput inside the
+scan (no per-tick lanes, memory independent of the horizon);
+``trace="full"`` buffers the dense per-tick lanes chunk by chunk and
+concatenates them on the host. The state trajectory on the ticks that
+run is bitwise identical across tiers, batching, and horizons.
+
 Modeled faithfully (paper sections in parens):
 
 * ECMP spraying with per-packet EVs through a real Clos topology (2.1)
@@ -107,6 +122,11 @@ class SimParams:
     """
 
     ticks: int = 2000
+    #: while-scan chunk size: quiescence is checked (and the dense trace
+    #: is flushed) every `chunk_ticks` ticks. Static — it shapes the
+    #: compiled chunk body — but the horizon itself is traced, so
+    #: executables are shared across every tick budget.
+    chunk_ticks: int = 128
     queue_capacity: int = 64
     ecn_threshold: int = 12
     trimming: bool = True
@@ -446,16 +466,13 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             n_ok = n_nack & (nack_off >= 0) & (nack_off < mp)
             if mixed_rod:
                 n_ok = n_ok & ~rod_mask[jnp.where(n_nack, nf, 0)]
-            no = jnp.clip(nack_off, 0, mp - 1)
-            nbit = jnp.where(n_ok, jnp.uint32(1) << (no % 32).astype(jnp.uint32),
-                             jnp.uint32(0))
-            hot_n = (nf[None, :] == flow_ids[:, None]) & n_ok[None, :]
-            contrib = jnp.where(
-                hot_n[:, None, :]
-                & ((no // 32)[None, None, :] == jnp.arange(W)[None, :, None]),
-                nbit[None, None, :], jnp.uint32(0))       # [F, W, E-Q]
-            rtx = rtx | jax.lax.reduce(contrib, jnp.uint32(0),
-                                       jax.lax.bitwise_or, (2,))
+            # duplicate-safe OR of the NACKed PSN bits into the rtx ring
+            # (kernels/nack_mark.py; jnp oracle scatters one bit per lane
+            # onto an [F, mp] bool plane and packs it into ring words).
+            # Replaces the [F, W, E-Q] dense OR-fold — the tick's largest
+            # intermediate by an order of magnitude.
+            rtx = kops.nack_mark(rtx, nf, jnp.clip(nack_off, 0, mp - 1),
+                                 n_ok)
         rod_gbn = hot_nack.any(axis=1)
 
         # EV-based loss detection (Sec. 3.2.4), RR_SLOTS layout:
@@ -782,13 +799,46 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
 
 @dataclass(frozen=True)
 class SimResult:
+    """One scenario's outcome, in one of two trace tiers.
+
+    ``trace="stats"`` (the default) carries only streaming statistics
+    computed inside the scan — per-flow completion ticks, the delivered
+    count over one pre-registered goodput window, and the peak queue
+    length. Memory traffic is independent of the horizon. The dense
+    per-tick lanes are ``None``.
+
+    ``trace="full"`` additionally carries the dense per-tick lanes
+    (``delivered_per_tick`` etc.), chunk-buffered on device and
+    concatenated on the host — exactly the pre-chunking ``SimResult``.
+
+    ``horizon`` is the number of ticks actually executed: the run exits
+    at the first chunk boundary at which the scenario is quiescent (all
+    sources CACK-complete, nothing inflight, queues and control-event
+    buffers drained), clamped to ``max_ticks`` (the requested budget).
+    Every tick past the horizon is provably a protocol no-op, so
+    windowed statistics treat missing ticks as zero-delivery — the
+    values equal a fixed-``max_ticks`` run bit for bit.
+    """
+
     state: SimState
-    delivered_per_tick: np.ndarray  # [T, F]
-    cwnd_per_tick: np.ndarray       # [T, F]
-    qlen_max: np.ndarray            # [T]
-    rx_base_per_tick: np.ndarray    # [T, F] receiver CACK per tick
-    src_base_per_tick: np.ndarray   # [T, F] source CACK per tick
     msg_size: np.ndarray            # [F] message sizes (packets)
+    #: ticks actually executed (chunk-aligned early exit; <= max_ticks)
+    horizon: int
+    #: the requested tick budget (``max_ticks`` arg / ``SimParams.ticks``)
+    max_ticks: int
+    trace: str = "full"
+    # ---- dense lanes (trace="full"; [horizon, ...] on the tick axis) ----
+    delivered_per_tick: "np.ndarray | None" = None  # [H, F]
+    cwnd_per_tick: "np.ndarray | None" = None       # [H, F]
+    qlen_max: "np.ndarray | None" = None            # [H]
+    rx_base_per_tick: "np.ndarray | None" = None    # [H, F] receiver CACK
+    src_base_per_tick: "np.ndarray | None" = None   # [H, F] source CACK
+    # ---- streaming stat lanes (trace="stats") ---------------------------
+    stat_completion: "np.ndarray | None" = None      # [F] tick or -1
+    stat_src_completion: "np.ndarray | None" = None  # [F] tick or -1
+    stat_win_delivered: "np.ndarray | None" = None   # [F] packets in window
+    goodput_window: "tuple[int, int] | None" = None
+    qlen_peak: "int | None" = None
 
     def completion_ticks(self) -> np.ndarray:
         """Per-flow first tick by which the full message was delivered
@@ -797,6 +847,8 @@ class SimResult:
         Completion means the message SIZE was reached — a run that ends
         mid-transfer reports -1, it does not silently count the last
         delivery as "done" (the pre-profile API's bug)."""
+        if self.trace == "stats":
+            return self.stat_completion.copy()
         cum = self.delivered_per_tick.cumsum(axis=0)
         reached = cum >= self.msg_size[None, :]
         return np.where(reached.any(0), reached.argmax(axis=0), -1)
@@ -813,6 +865,8 @@ class SimResult:
         completion notion the dependency lane gates on, and the right
         one under INC, where switch-absorbed packets are ACKed to the
         source but never surface at the receiver."""
+        if self.trace == "stats":
+            return self.stat_src_completion.copy()
         reached = (self.src_base_per_tick.astype(np.int64)
                    >= self.msg_size[None, :].astype(np.int64))
         return np.where(reached.any(0), reached.argmax(axis=0), -1)
@@ -824,61 +878,248 @@ class SimResult:
 
     def goodput(self, window: "tuple[int, int] | None" = None) -> np.ndarray:
         """Per-flow delivered packets / tick over a window (fraction of
-        line rate, since line rate == 1 packet/tick)."""
-        d = self.delivered_per_tick
-        if window is not None:
-            w0, w1 = window
-            d = d[w0:w1]
-        if d.shape[0] == 0:
+        line rate, since line rate == 1 packet/tick).
+
+        The window is in budget coordinates: ``[w0, min(w1, max_ticks))``.
+        Ticks past the early-exit ``horizon`` count as zero delivery
+        (post-quiescence ticks deliver nothing by construction), so the
+        value is identical to a fixed-``max_ticks`` run's. Windows that
+        start at or past the budget select no ticks and raise.
+
+        ``trace="stats"`` results answer only ``window=None`` (the whole
+        budget) or the window pre-registered via ``goodput_window=`` at
+        ``simulate()`` time; anything else needs ``trace="full"``.
+        """
+        mt = self.max_ticks
+        w0, w1 = (0, mt) if window is None else window
+        w1 = min(int(w1), mt)
+        w0 = int(w0)
+        if w0 < 0 or w1 <= w0:
             raise ValueError(
-                f"goodput window {window!r} selects no ticks (run recorded "
-                f"{self.delivered_per_tick.shape[0]} ticks)")
-        return d.mean(axis=0)
+                f"goodput window {window!r} selects no ticks within the "
+                f"{mt}-tick budget")
+        if self.trace == "stats":
+            if window is None:
+                return np.asarray(self.state.delivered) / float(mt)
+            if (self.goodput_window is not None
+                    and tuple(int(w) for w in window)
+                    == tuple(int(w) for w in self.goodput_window)):
+                return self.stat_win_delivered / float(w1 - w0)
+            raise ValueError(
+                f"trace='stats' recorded only the pre-registered goodput "
+                f"window {self.goodput_window!r}; pass goodput_window="
+                f"{tuple(window)!r} to simulate()/simulate_batch() or use "
+                f"trace='full' for arbitrary windows")
+        d = self.delivered_per_tick[w0:min(w1, self.horizon)]
+        return d.sum(axis=0) / float(w1 - w0)
 
 
 # --------------------------------------------------------------------------
-# scenario engine: compiled-run cache + single and batched entry points
+# scenario engine: chunked while-scan driver + compiled-run cache
 # --------------------------------------------------------------------------
 
-#: compiled scan cache. Keyed on (topology identity, profile, params,
-#: flow count, batch mode): workloads, seeds and failure masks are
-#: traced, so scenario sweeps reuse one executable; profiles are static
-#: and pick the executable. `id(g)` is part of the key because the
-#: compiled step bakes in g's wiring tables — two graphs sharing a name
-#: must not share an executable. (The cached closure keeps `g` alive via
-#: its RoutingTables, so a live entry's id can't be recycled by a
-#: different graph.)
+TRACE_MODES = ("stats", "full")
+
+
+def _quiescent(s: SimState, wl: Workload) -> jax.Array:
+    """Scenario-wide quiescence: no future tick can make protocol
+    progress. Requires every source CACK-complete, nothing inflight, all
+    queues empty, and the control-TC delay ring free of pending events.
+    (Flows that never became eligible — future ``start``, unsatisfied
+    ``dep`` — keep ``done`` false, so such scenarios run to the budget.)
+
+    Post-quiescence ticks still mutate tick-stamped bookkeeping (CC
+    epoch state, stale control-ring timestamp lanes), so the engine
+    FREEZES the carry once a scenario is quiescent: the executed prefix,
+    final counters, and completion ticks are bitwise what a longer fixed
+    run would produce."""
+    done = (s.src_track.base.astype(jnp.int32) >= wl.size).all()
+    idle = (s.inflight == 0).all() & (s.q_len == 0).all()
+    drained = (s.ev_buf[:, :, EVF_TYPE] == EV_NONE).all()
+    return done & idle & drained
+
+
+def _freeze(run, new, old):
+    """Carry-wide select: keep `new` where the scalar `run` is set."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(run, a, b), new, old)
+
+
+def _stats_init(F: int) -> dict:
+    return {
+        "comp": jnp.full((F,), -1, jnp.int32),
+        "src_comp": jnp.full((F,), -1, jnp.int32),
+        "win_delivered": jnp.zeros((F,), jnp.int32),
+        "qlen_peak": jnp.int32(0),
+    }
+
+
+def _stats_update(st: dict, prev: SimState, s: SimState, wl: Workload,
+                  tick, w0, w1) -> dict:
+    """In-scan streaming statistics — the trace="stats" lanes. Each is
+    an elementwise [F] update off state the tick already computed, so
+    recording costs no extra memory traffic on the horizon axis."""
+    fresh = s.delivered - prev.delivered
+    inwin = (tick >= w0) & (tick < w1)
+    rx_done = s.delivered >= wl.size
+    src_done = s.src_track.base.astype(jnp.int32) >= wl.size
+    return {
+        "comp": jnp.where((st["comp"] < 0) & rx_done, tick, st["comp"]),
+        "src_comp": jnp.where((st["src_comp"] < 0) & src_done, tick,
+                              st["src_comp"]),
+        "win_delivered": st["win_delivered"] + jnp.where(inwin, fresh, 0),
+        "qlen_peak": jnp.maximum(st["qlen_peak"], s.q_len.max()),
+    }
+
+
+#: compiled run cache. Keyed on (topology identity, profile, params
+#: minus the horizon, flow count, batch mode, trace tier): workloads,
+#: seeds, failure masks AND the tick budget are traced, so scenario
+#: sweeps at any horizon reuse one executable; profiles are static and
+#: pick the executable. `id(g)` is part of the key because the compiled
+#: step bakes in g's wiring tables — two graphs sharing a name must not
+#: share an executable. (The cached closure keeps `g` alive via its
+#: RoutingTables, so a live entry's id can't be recycled by a different
+#: graph.)
 _RUN_CACHE: dict = {}
 
 
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
-               F: int, batched: bool):
-    return (id(g), g.name, profile, p, F, batched)
+               F: int, batched: bool, trace: str = "stats"):
+    # the horizon (p.ticks) is a traced bound, not a compiled constant:
+    # strip it so one executable serves every tick budget
+    return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace)
 
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
-             F: int, batched: bool):
-    """(jitted init, jitted scan) pair. The scan donates the carry (`s0`
-    buffers are reused in place); init is compiled so scenario setup
-    costs microseconds, not eager-dispatch milliseconds."""
-    key = _cache_key(g, profile, p, F, batched)
+             F: int, batched: bool, trace: str):
+    """(jitted init, jitted run) pair for one trace tier.
+
+    ``trace="stats"`` compiles the whole adaptive-horizon run as ONE
+    device program: a ``lax.while_loop`` whose body scans a
+    ``chunk_ticks``-long chunk (streaming the stat lanes in the scan
+    carry) and whose predicate stops at quiescence or the (traced)
+    budget. Under ``vmap`` the loop runs until every scenario stops,
+    freezing finished lanes — each lane's trajectory is bitwise the
+    serial one.
+
+    ``trace="full"`` compiles ONE CHUNK (scan + per-tick out lanes +
+    quiescence flag); the host drives the chunk loop and concatenates
+    the buffered lanes. Both runs donate the carry.
+
+    Ticks at or past the budget, and every tick of an already-stopped
+    scenario, pass the carry through unchanged (a carry-wide select on
+    the scalar predicate), so a partial final chunk cannot overrun the
+    budget and a stopped lane is frozen at its own chunk boundary.
+    """
+    key = _cache_key(g, profile, p, F, batched, trace)
     fns = _RUN_CACHE.get(key)
     if fns is None:
         step = make_step(g, profile, p, F)
+        chunk = int(p.chunk_ticks)
+        if chunk < 1:
+            raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
+        xs = jnp.arange(chunk, dtype=jnp.int32)
 
         def init_one(wl, seed):
             return init_state(g, wl, profile, p, seed)
 
-        def scan_one(s0, wl, dead):
-            def body(s, tick):
-                return step(s, tick, wl, dead)
-            return jax.lax.scan(body, s0, jnp.arange(p.ticks, dtype=jnp.int32))
+        if trace == "stats":
+            def run_one(s0, wl, dead, budget, w0, w1):
+                def tick_body(carry, i):
+                    s, st, tick0 = carry
+                    tick = tick0 + i
+                    run = tick < budget
+                    ns, _ = step(s, tick, wl, dead)
+                    nst = _stats_update(st, s, ns, wl, tick, w0, w1)
+                    return (*_freeze(run, (ns, nst), (s, st)), tick0), None
 
-        if batched:
-            init_one, scan_one = jax.vmap(init_one), jax.vmap(scan_one)
-        fns = (jax.jit(init_one), jax.jit(scan_one, donate_argnums=(0,)))
+                def body(c):
+                    s, st, tick0, _ = c
+                    (s, st, _), _ = jax.lax.scan(tick_body, (s, st, tick0), xs)
+                    tick0 = tick0 + jnp.int32(chunk)
+                    stop = _quiescent(s, wl) | (tick0 >= budget)
+                    return (s, st, tick0, stop)
+
+                s, st, tick0, _ = jax.lax.while_loop(
+                    lambda c: ~c[3], body,
+                    (s0, _stats_init(F), jnp.int32(0),
+                     budget <= jnp.int32(0)))
+                return s, st, jnp.minimum(tick0, budget)
+
+            if batched:
+                init_one = jax.vmap(init_one)
+                run_one = jax.vmap(run_one,
+                                   in_axes=(0, 0, 0, None, None, None))
+            fns = (jax.jit(init_one), jax.jit(run_one, donate_argnums=(0,)))
+        elif trace == "full":
+            def run_chunk(s0, stopped, tick0, wl, dead, budget):
+                def tick_body(s, i):
+                    tick = tick0 + i
+                    run = (tick < budget) & ~stopped
+                    ns, out = step(s, tick, wl, dead)
+                    return _freeze(run, ns, s), out
+
+                s, outs = jax.lax.scan(tick_body, s0, xs)
+                return s, stopped | _quiescent(s, wl), outs
+
+            if batched:
+                init_one = jax.vmap(init_one)
+                run_chunk = jax.vmap(run_chunk,
+                                     in_axes=(0, 0, None, 0, 0, None))
+            fns = (jax.jit(init_one), jax.jit(run_chunk, donate_argnums=(0,)))
+        else:
+            raise ValueError(
+                f"unknown trace tier {trace!r}; choose from {TRACE_MODES}")
         _RUN_CACHE[key] = fns
     return fns
+
+
+def _run_full_host(run_chunk, s0, wl, dead, budget: int, chunk: int,
+                   batch: "int | None"):
+    """Drive the trace="full" chunk executable from the host: run chunks
+    until every scenario is quiescent or the budget is spent, buffering
+    the dense out lanes per chunk and concatenating once at the end.
+
+    Returns (final_state, outs, horizon[np int64 array]) — `horizon[b]`
+    is scenario b's own stop boundary (min(chunk end, budget)), which is
+    also where its carry froze, so slicing lane b to `horizon[b]` reproduces
+    the serial run of that scenario exactly.
+    """
+    serial = batch is None
+    nb = 1 if serial else batch
+    stopped = jnp.zeros((() if serial else (nb,)), bool)
+    horizon = np.full((nb,), -1, np.int64)
+    s = s0
+    chunks: list = []
+    tick0 = 0
+    while True:
+        s, stopped, outs = run_chunk(s, stopped, jnp.int32(tick0), wl, dead,
+                                     jnp.int32(budget))
+        chunks.append(jax.device_get(outs))
+        tick0 += chunk
+        t_end = min(tick0, budget)
+        stop_np = np.atleast_1d(np.asarray(stopped))
+        horizon[(horizon < 0) & stop_np] = t_end
+        if tick0 >= budget or stop_np.all():
+            break
+    horizon[horizon < 0] = budget
+    t_axis = 0 if serial else 1
+    outs = {k: np.concatenate([c[k] for c in chunks], axis=t_axis)
+            for k in chunks[0]}
+    return s, outs, horizon
+
+
+def _window_bounds(goodput_window, budget: int) -> "tuple[int, int]":
+    if goodput_window is None:
+        return 0, budget
+    w0, w1 = goodput_window
+    return int(w0), int(w1)
+
+
+def _check_trace(trace: str):
+    if trace not in TRACE_MODES:
+        raise ValueError(f"unknown trace tier {trace!r}; choose from "
+                         f"{TRACE_MODES}")
 
 
 def _profile_from_legacy(p: SimParams) -> TransportProfile:
@@ -963,64 +1204,121 @@ def _failed_to_mask(g: QueueGraph, failed) -> np.ndarray:
     return mask
 
 
-def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
+def _full_result(final: SimState, outs: dict, msg_size, horizon: int,
+                 budget: int) -> SimResult:
     return SimResult(
-        state=jax.device_get(final),
-        delivered_per_tick=np.asarray(outs["delivered"]),
-        cwnd_per_tick=np.asarray(outs["cwnd"]),
-        qlen_max=np.asarray(outs["qlen_max"]),
-        rx_base_per_tick=np.asarray(outs["rx_base"]),
-        src_base_per_tick=np.asarray(outs["src_base"]),
-        msg_size=np.asarray(msg_size),
+        state=final, msg_size=np.asarray(msg_size),
+        horizon=int(horizon), max_ticks=int(budget), trace="full",
+        delivered_per_tick=np.asarray(outs["delivered"])[:horizon],
+        cwnd_per_tick=np.asarray(outs["cwnd"])[:horizon],
+        qlen_max=np.asarray(outs["qlen_max"])[:horizon],
+        rx_base_per_tick=np.asarray(outs["rx_base"])[:horizon],
+        src_base_per_tick=np.asarray(outs["src_base"])[:horizon],
     )
+
+
+def _stats_result(final: SimState, st: dict, msg_size, horizon: int,
+                  budget: int, goodput_window) -> SimResult:
+    return SimResult(
+        state=final, msg_size=np.asarray(msg_size),
+        horizon=int(horizon), max_ticks=int(budget), trace="stats",
+        stat_completion=np.asarray(st["comp"]),
+        stat_src_completion=np.asarray(st["src_comp"]),
+        stat_win_delivered=np.asarray(st["win_delivered"]),
+        goodput_window=(None if goodput_window is None
+                        else tuple(int(w) for w in goodput_window)),
+        qlen_peak=int(st["qlen_peak"]),
+    )
+
+
+def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
+    """Wrap a fixed-length scan's raw (state, out-lanes) as a full-trace
+    SimResult (horizon == the recorded length; bench/diagnostic helper
+    for hand-rolled scans outside the chunked driver)."""
+    t = int(np.asarray(outs["delivered"]).shape[0])
+    return _full_result(jax.device_get(final), outs, msg_size, t, t)
 
 
 def simulate(g: QueueGraph, wl: Workload,
              profile: "TransportProfile | SimParams | None" = None,
              p: "SimParams | None" = None, *,
-             seed: int = DEFAULT_SEED, failed=None) -> SimResult:
-    """Run one scenario for p.ticks; returns dense per-tick stats.
+             seed: int = DEFAULT_SEED, failed=None,
+             trace: str = "stats", max_ticks: "int | None" = None,
+             goodput_window: "tuple[int, int] | None" = None) -> SimResult:
+    """Run one scenario for at most ``max_ticks`` (default p.ticks),
+    exiting early at the first chunk boundary where the scenario is
+    quiescent.
 
     profile: the transport composition (defaults to ai_full()). Passing a
              SimParams here takes the deprecated pre-profile path.
     failed:  queue ids (tuple) or [Q] bool mask of dead links.
+    trace:   "stats" (default — streaming stat lanes only, one device
+             program) or "full" (dense per-tick lanes, chunk-buffered).
+    max_ticks: plain tick-budget bound; traced, so sweeping it reuses
+             the compiled executable.
+    goodput_window: (w0, w1) to record in-scan for trace="stats" so
+             ``result.goodput((w0, w1))`` works without a dense trace.
     """
     profile, p, failed = _normalize_call(profile, p, failed)
+    _check_trace(trace)
+    budget = int(p.ticks if max_ticks is None else max_ticks)
     F = int(wl.src.shape[0])
     profile.delivery_modes(F)  # validate per-flow tuples early
-    init, run = _get_fns(g, profile, p, F, batched=False)
+    init, run = _get_fns(g, profile, p, F, batched=False, trace=trace)
     s0 = init(wl, jnp.uint32(seed))
-    final, outs = run(s0, wl, jnp.asarray(_failed_to_mask(g, failed)))
-    return _to_result(final, outs, wl.size)
+    dead = jnp.asarray(_failed_to_mask(g, failed))
+    if trace == "stats":
+        w0, w1 = _window_bounds(goodput_window, budget)
+        final, st, horizon = run(s0, wl, dead, jnp.int32(budget),
+                                 jnp.int32(w0), jnp.int32(w1))
+        return _stats_result(jax.device_get(final), jax.device_get(st),
+                             wl.size, int(horizon), budget, goodput_window)
+    final, outs, horizon = _run_full_host(run, s0, wl, dead, budget,
+                                          p.chunk_ticks, batch=None)
+    return _full_result(jax.device_get(final), outs, wl.size,
+                        int(horizon[0]), budget)
 
 
-def _run_batch(g, wls, profile, p, dead, seeds) -> "list[SimResult]":
+def _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
+               goodput_window) -> "list[SimResult]":
     B, F = wls.src.shape
     profile.delivery_modes(F)
-    init, run = _get_fns(g, profile, p, F, batched=True)
+    init, run = _get_fns(g, profile, p, F, batched=True, trace=trace)
     s0 = init(wls, seeds)
-    final, outs = run(s0, wls, dead)
-    final = jax.device_get(final)
-    outs = jax.device_get(outs)
     sizes = np.asarray(wls.size)
+    if trace == "stats":
+        w0, w1 = _window_bounds(goodput_window, budget)
+        final, st, horizon = run(s0, wls, dead, jnp.int32(budget),
+                                 jnp.int32(w0), jnp.int32(w1))
+        final = jax.device_get(final)
+        st = jax.device_get(st)
+        horizon = np.asarray(horizon)
+        return [
+            _stats_result(
+                jax.tree_util.tree_map(lambda a: a[b], final),
+                jax.tree_util.tree_map(lambda a: a[b], st),
+                sizes[b], int(horizon[b]), budget, goodput_window)
+            for b in range(B)
+        ]
+    final, outs, horizon = _run_full_host(run, s0, wls, dead, budget,
+                                          p.chunk_ticks, batch=B)
+    final = jax.device_get(final)
     return [
-        SimResult(
-            state=jax.tree_util.tree_map(lambda a: a[b], final),
-            delivered_per_tick=np.asarray(outs["delivered"][b]),
-            cwnd_per_tick=np.asarray(outs["cwnd"][b]),
-            qlen_max=np.asarray(outs["qlen_max"][b]),
-            rx_base_per_tick=np.asarray(outs["rx_base"][b]),
-            src_base_per_tick=np.asarray(outs["src_base"][b]),
-            msg_size=sizes[b],
-        )
+        _full_result(
+            jax.tree_util.tree_map(lambda a: a[b], final),
+            {k: v[b] for k, v in outs.items()},
+            sizes[b], int(horizon[b]), budget)
         for b in range(B)
     ]
 
 
 def simulate_batch(g: QueueGraph, wls: Workload,
                    profile=None, p: "SimParams | None" = None, *,
-                   failed=None, seeds=None) -> "list[SimResult]":
-    """Run B scenarios as compiled, vmapped scans.
+                   failed=None, seeds=None,
+                   trace: str = "stats", max_ticks: "int | None" = None,
+                   goodput_window: "tuple[int, int] | None" = None
+                   ) -> "list[SimResult]":
+    """Run B scenarios as compiled, vmapped chunked while-scans.
 
     wls:     Workload with a leading scenario axis ([B, F]); build with
              ``Workload.stack`` or pass a list of same-F Workloads.
@@ -1033,10 +1331,16 @@ def simulate_batch(g: QueueGraph, wls: Workload,
              [Q] mask, or a queue-id tuple (broadcast to every scenario).
     seeds:   optional [B] — per-scenario LB/EV seeds (default: the same
              DEFAULT_SEED every ``simulate`` call uses).
+    trace / max_ticks / goodput_window: as in :func:`simulate`. The tick
+             budget is traced — sweeping it reuses the executable — and
+             each group runs until its slowest scenario is quiescent,
+             with faster lanes frozen at their own stop boundary.
 
     Returns one SimResult per scenario, bitwise identical to the
     corresponding serial ``simulate`` call: the tick function is the same
-    compiled code, vmapped over the scenario axis with the carry donated.
+    compiled code, vmapped over the scenario axis with the carry donated,
+    and each lane freezes at the same chunk boundary the serial run
+    exits at.
     """
     if isinstance(wls, (list, tuple)):
         wls = Workload.stack(wls)
@@ -1048,6 +1352,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
             raise TypeError("per-scenario profiles must all be "
                             "TransportProfile instances")
     profile, p, failed = _normalize_call(profile, p, failed)
+    _check_trace(trace)
+    budget = int(p.ticks if max_ticks is None else max_ticks)
     B, F = wls.src.shape
     if seeds is None:
         seeds = np.full((B,), DEFAULT_SEED, np.uint32)
@@ -1069,20 +1375,40 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     dead = jnp.asarray(dead, bool)
 
     if profiles is None:
-        return _run_batch(g, wls, profile, p, dead, seeds)
+        return _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
+                          goodput_window)
 
     # per-scenario profiles: group scenarios by (static) profile and run
-    # each group as one vmapped scan — one executable per distinct profile
+    # each group as one vmapped scan — one executable per distinct profile.
+    # Groups are independent device programs, so they run on worker
+    # threads: their compiles (the dominant cold cost of a profile
+    # ablation) and executions overlap instead of serializing. Results
+    # are reassembled by scenario index — ordering, and every lane's
+    # bits, are unaffected.
     if len(profiles) != B:
         raise ValueError(f"got {len(profiles)} profiles for B={B} scenarios")
     groups: "dict[TransportProfile, list[int]]" = {}
     for i, q in enumerate(profiles):
         groups.setdefault(q, []).append(i)
-    results: "list[SimResult | None]" = [None] * B
+    items = []
     for prof, idxs in groups.items():
         sel = np.asarray(idxs)
-        sub_wls = jax.tree_util.tree_map(lambda a: a[sel], wls)
-        rs = _run_batch(g, sub_wls, prof, p, dead[sel], seeds[sel])
+        sub_wls = jax.tree_util.tree_map(lambda a, s=sel: a[s], wls)
+        items.append((prof, idxs, sub_wls, dead[sel], seeds[sel]))
+
+    def _run_group(item):
+        prof, idxs, sub_wls, sub_dead, sub_seeds = item
+        return idxs, _run_batch(g, sub_wls, prof, p, sub_dead, sub_seeds,
+                                trace, budget, goodput_window)
+
+    if len(items) > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=min(len(items), 8)) as ex:
+            group_results = list(ex.map(_run_group, items))
+    else:
+        group_results = [_run_group(items[0])]
+    results: "list[SimResult | None]" = [None] * B
+    for idxs, rs in group_results:
         for j, i in enumerate(idxs):
             results[i] = rs[j]
     return results

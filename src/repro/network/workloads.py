@@ -16,10 +16,12 @@ assert against them:
 """
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
 
 from repro.network.fabric import Workload
-from repro.network.profile import TransportProfile, cc_ablation
+from repro.network.profile import (CCAlgo, TransportProfile, cc_ablation)
 from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
 
 
@@ -27,21 +29,39 @@ from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
 # scenario sweeps (batched: feed to fabric.simulate_batch)
 # ------------------------------------------------------------------------
 
-def profile_ablation_sweep(fan_in: int = 4, size: int = 600):
+def profile_ablation_sweep(pairs: int = 12, uplinks: int = 4,
+                           size: int = 100000):
     """The paper's operating-point grid as ONE ``simulate_batch`` call:
     the three named profiles (ai_base / ai_full / hpc) plus the CC
     ablation over the ai_full composition (NSCC-only vs RCCC-only vs
-    hybrid), all on the same congested incast.
+    hybrid vs open-loop), all on the Fig. 7 in-network oversubscription
+    pattern (:func:`in_network`): `pairs` cross-leaf flows squeeze
+    through `uplinks` spine links while one same-leaf "victim" flow
+    shares one of the receivers.
 
-    Returns (g, wls [P, F], profiles [P], names [P]) — pass the profiles
-    list straight to ``simulate_batch(g, wls, profiles, p)``; the engine
-    groups scenarios by profile (one executable each).
+    This scenario actually DIFFERENTIATES congestion control — a plain
+    incast does not: every functioning policy converges onto the
+    receiver fair share, which is why the pre-PR-4 bench reported six
+    identical goodput numbers. Here the victim flow's share is the
+    discriminator: ~0.5 under blind receiver credits (RCCC grants its
+    ingress 50/50 regardless of what the cross traffic can use), rising
+    toward the ``1 - uplinks/pairs`` optimum under NSCC's network
+    signals, with open loop floating in between.
+
+    Returns (g, wls [P, F], profiles [P], names [P], expectations);
+    ``expectations["victim_flow"]`` indexes the discriminating flow.
+    Pass the profiles list straight to ``simulate_batch(g, wls,
+    profiles, p)``; the engine groups scenarios by profile (one
+    executable each, run concurrently).
     """
-    g, wl, _ = incast(fan_in, size=size)
+    g, wl, exp = in_network(pairs, uplinks, size=size)
     profiles = [TransportProfile.ai_base(), TransportProfile.ai_full(),
-                TransportProfile.hpc(), *cc_ablation()]
+                TransportProfile.hpc(), *cc_ablation(),
+                replace(TransportProfile.ai_full(), cc=CCAlgo.NONE,
+                        name="open_loop")]
     wls = Workload.stack([wl] * len(profiles))
-    return g, wls, profiles, [p.name for p in profiles]
+    exp = dict(exp, victim_flow=pairs)
+    return g, wls, profiles, [p.name for p in profiles], exp
 
 def collective_sweep(n: int = 8, size: int = 40, hosts_per_leaf: int = 2):
     """The collective ablation grid — kind x algorithm x INC on/off x
@@ -56,9 +76,12 @@ def collective_sweep(n: int = 8, size: int = 40, hosts_per_leaf: int = 2):
 
     Workloads have heterogeneous flow counts (a ring all-reduce is
     2(n-1)*n flows, a tree 2(n-1)), so they are padded with inert size-0
-    flows (`collectives.stack_padded`) into one [B, Fmax] batch; the
-    engine groups the batch by distinct profile (INC on/off are distinct
-    executables; everything inside a group is traced).
+    flows (`collectives.stack_padded`) into one [B, Fmax] batch. INC
+    on/off is a TRACED axis: every scenario runs under an ``inc=True``
+    profile and the off lanes simply carry ``red=-1`` workloads
+    (`build_workload(..., inc_groups=False)` — bitwise identical to an
+    inc=False executable), so the whole grid compiles to ONE executable
+    per transport profile (two here) instead of four.
 
     `size` must stay <= SimParams.max_cwnd for the ai_base x INC lanes:
     RCCC's receiver only grants credits to flows it has *seen*, and a
@@ -87,9 +110,8 @@ def collective_sweep(n: int = 8, size: int = 40, hosts_per_leaf: int = 2):
     wls, profiles, names = [], [], []
     for prof, kind, algo, inc in grid:
         spec = coll.CollectiveSpec(kind, hosts, size)
-        wls.append(coll.build_workload(spec, algo))
-        profiles.append(replace(prof, inc=True, name=prof.name + "+inc")
-                        if inc else prof)
+        wls.append(coll.build_workload(spec, algo, inc_groups=inc))
+        profiles.append(replace(prof, inc=True, name=prof.name + "+inc"))
         names.append(f"{prof.name}/{kind}/{algo}{'/inc' if inc else ''}")
     return g, coll.stack_padded(wls), profiles, names
 

@@ -1,0 +1,291 @@
+"""Adaptive-horizon engine: chunked while-scan, quiescence early-exit,
+streaming stat lanes, and horizon-free executables.
+
+Contracts locked here (see DESIGN.md "Chunked while-scan driver"):
+
+* chunked-vs-fixed bitwise parity: the executed trace is a PREFIX of
+  the fixed-horizon golden lanes (PR-2 goldens, both configs incl.
+  REPS + failure + non-default seed), and the golden tail is inert;
+* ``trace="stats"`` results equal the stats derived from a
+  ``trace="full"`` run — completion ticks, source completion, windowed
+  goodput, and the final state, bitwise;
+* the early-exited completion ticks equal the golden-derived ones;
+* a scenario that never completes runs to ``max_ticks`` (and batches
+  fine next to early-exiting lanes, each frozen at its own boundary);
+* the tick budget is traced: different horizons share one executable;
+* goodput window semantics on early-exited traces (zero-extension past
+  the horizon, clamp to the budget, ValueError past the budget);
+* INC on/off as a traced axis: ``red=-1`` under an ``inc=True`` profile
+  is bitwise the ``inc=False`` executable.
+"""
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lb.schemes import LBScheme
+from repro.network import collectives as coll
+from repro.network.fabric import (SimParams, Workload, _cache_key, simulate,
+                                  simulate_batch)
+from repro.network.profile import TransportProfile
+from repro.network.topology import leaf_spine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fabric_golden.npz")
+
+
+def _state_equal(a, b) -> bool:
+    return all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)))
+
+
+def _config_a():
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
+    return g, wl, SimParams(ticks=300)
+
+
+# ------------------------------------------------------------------------
+# early exit + golden prefix parity
+# ------------------------------------------------------------------------
+
+def test_early_exit_is_chunk_aligned_prefix_of_golden():
+    gold = np.load(GOLDEN)
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    assert 0 < r.horizon < 300 and r.horizon % p.chunk_ticks == 0
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:r.horizon])
+    np.testing.assert_array_equal(r.rx_base_per_tick.shape,
+                                  (r.horizon, 3))
+    # the golden tail is provably inert: quiescence means a longer run
+    # delivers nothing more
+    assert (gold["a_delivered"][r.horizon:] == 0).all()
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  gold["a_state_delivered"])
+
+
+def test_early_exit_completion_equals_golden_completion():
+    """The streamed completion lane must equal the completion derived
+    from the fixed-horizon golden trace."""
+    gold = np.load(GOLDEN)
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p)  # trace="stats"
+    cum = gold["a_delivered"].cumsum(axis=0)
+    reached = cum >= np.asarray(wl.size)[None, :]
+    golden_ct = np.where(reached.any(0), reached.argmax(axis=0), -1)
+    np.testing.assert_array_equal(r.completion_ticks(), golden_ct)
+
+
+# ------------------------------------------------------------------------
+# trace="stats" == trace="full"-derived statistics (bitwise)
+# ------------------------------------------------------------------------
+
+def _assert_stats_match(rs, rf, window):
+    np.testing.assert_array_equal(rs.completion_ticks(),
+                                  rf.completion_ticks())
+    np.testing.assert_array_equal(rs.source_completion_ticks(),
+                                  rf.source_completion_ticks())
+    np.testing.assert_array_equal(rs.goodput(window), rf.goodput(window))
+    np.testing.assert_array_equal(rs.goodput(), rf.goodput())
+    assert rs.horizon == rf.horizon
+    assert rs.qlen_peak == int(rf.qlen_max.max()) if rf.horizon else True
+    assert _state_equal(rs.state, rf.state), "trace tiers diverged in state"
+
+
+def test_stats_equals_full_derived_plain():
+    g, wl, p = _config_a()
+    win = (50, 250)
+    rf = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    rs = simulate(g, wl, TransportProfile.ai_full(), p, trace="stats",
+                  goodput_window=win)
+    _assert_stats_match(rs, rf, win)
+
+
+def test_stats_equals_full_derived_reps_failure_seed():
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    wl = Workload.of(list(range(8)), [8 + i for i in range(8)], 300)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=900, timeout_ticks=64, ooo_threshold=24)
+    dead = (int(g.up1_table[0, 1]),)
+    win = (100, 900)
+    rf = simulate(g, wl, prof, p, failed=dead, seed=0x5EED + 7,
+                  trace="full")
+    rs = simulate(g, wl, prof, p, failed=dead, seed=0x5EED + 7,
+                  trace="stats", goodput_window=win)
+    _assert_stats_match(rs, rf, win)
+
+
+def test_stats_equals_full_derived_inc_collective_batch():
+    """Dep-scheduled tree all-reduce with INC, batched: the stats tier
+    must match the dense tier lane for lane."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    prof = replace(TransportProfile.ai_full(), inc=True, name="ai_full+inc")
+    p = SimParams(ticks=800)
+    spec = coll.CollectiveSpec("all_reduce", tuple(range(8)), 24)
+    wls = Workload.stack([coll.build_workload(spec, "tree"),
+                          coll.build_workload(spec, "tree",
+                                              inc_groups=False)])
+    win = (0, 800)
+    full = simulate_batch(g, wls, prof, p, trace="full")
+    stats = simulate_batch(g, wls, prof, p, trace="stats",
+                           goodput_window=win)
+    for rs, rf in zip(stats, full):
+        _assert_stats_match(rs, rf, win)
+    assert int(stats[0].state.inc_reduced) > 0
+    assert int(stats[1].state.inc_reduced) == 0
+
+
+# ------------------------------------------------------------------------
+# budgets: never-completing lanes, max_ticks bound, horizon-free cache
+# ------------------------------------------------------------------------
+
+def test_never_completing_lane_runs_to_budget():
+    """One lane completes (early exit at its own boundary), the other
+    can't finish in the budget: it must run to max_ticks exactly and
+    report -1 completions."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    small = Workload.of([0, 1], [2, 3], 60)
+    huge = Workload.of([0, 1], [2, 3], 10**6)
+    p = SimParams(ticks=500)
+    done, undone = simulate_batch(g, Workload.stack([small, huge]),
+                                  TransportProfile.ai_full(), p)
+    assert done.horizon < 500 and (done.completion_ticks() >= 0).all()
+    assert undone.horizon == 500
+    assert (undone.completion_ticks() == -1).all()
+    assert undone.completion_tick() == -1
+    # the early lane is frozen at its own boundary: bitwise == serial
+    solo = simulate(g, small, TransportProfile.ai_full(), p)
+    assert solo.horizon == done.horizon
+    assert _state_equal(solo.state, done.state)
+
+
+def test_max_ticks_is_a_plain_traced_bound():
+    """max_ticks= overrides p.ticks, never overruns (non-chunk-multiple
+    budgets freeze mid-chunk), and equals a run whose p.ticks says the
+    same thing."""
+    g, wl, p = _config_a()
+    prof = TransportProfile.ai_full()
+    a = simulate(g, wl, prof, p, max_ticks=100, trace="full")
+    assert a.horizon == 100 and a.max_ticks == 100
+    b = simulate(g, wl, prof, SimParams(ticks=100), trace="full")
+    np.testing.assert_array_equal(a.delivered_per_tick, b.delivered_per_tick)
+    assert _state_equal(a.state, b.state)
+    assert a.completion_tick() == -1  # 200-packet messages can't finish
+
+
+def test_one_executable_serves_every_horizon():
+    """The compile-cache key must not depend on the tick budget: runs at
+    different horizons (via p.ticks or max_ticks) share one executable."""
+    g, wl, _ = _config_a()
+    prof = TransportProfile.ai_full()
+    assert (_cache_key(g, prof, SimParams(ticks=100), 3, False, "stats")
+            == _cache_key(g, prof, SimParams(ticks=9999), 3, False, "stats"))
+    from repro.network.fabric import _RUN_CACHE
+    simulate(g, wl, prof, SimParams(ticks=64))
+    n0 = len(_RUN_CACHE)
+    simulate(g, wl, prof, SimParams(ticks=192))
+    simulate(g, wl, prof, SimParams(ticks=64), max_ticks=320)
+    assert len(_RUN_CACHE) == n0, "a new horizon recompiled the engine"
+    # but the chunk size IS a compiled constant
+    assert (_cache_key(g, prof, SimParams(chunk_ticks=64), 3, False, "stats")
+            != _cache_key(g, prof, SimParams(chunk_ticks=128), 3, False,
+                          "stats"))
+
+
+# ------------------------------------------------------------------------
+# goodput / completion semantics on early-exited traces
+# ------------------------------------------------------------------------
+
+def test_goodput_zero_extends_past_horizon():
+    """Windows reaching past the horizon count the missing (quiescent)
+    ticks as zero delivery — the value equals the fixed-horizon run's."""
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    assert r.horizon < 300
+    gold = np.load(GOLDEN)
+    want = gold["a_delivered"][0:300].mean(axis=0)
+    np.testing.assert_allclose(r.goodput((0, 300)), want)
+    # a window entirely past the horizon but inside the budget is legal
+    # (and zero — nothing is delivered after quiescence)
+    late = r.goodput((r.horizon, 300))
+    np.testing.assert_array_equal(late, np.zeros(3))
+
+
+def test_goodput_rejects_windows_past_the_budget():
+    g, wl, p = _config_a()
+    r = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    with pytest.raises(ValueError, match="selects no ticks"):
+        r.goodput((300, 400))        # starts at the budget
+    with pytest.raises(ValueError, match="selects no ticks"):
+        r.goodput((-5, 100))
+    # w1 past the budget clamps (documented), denominator included
+    np.testing.assert_array_equal(r.goodput((0, 10**9)), r.goodput((0, 300)))
+
+
+def test_stats_goodput_registered_window_only():
+    g, wl, p = _config_a()
+    win = (100, 300)
+    r = simulate(g, wl, TransportProfile.ai_full(), p, goodput_window=win)
+    assert r.goodput(win).shape == (3,)
+    assert r.goodput().shape == (3,)
+    with pytest.raises(ValueError, match="pre-registered"):
+        r.goodput((0, 50))
+
+
+def test_horizon_exposed_on_both_tiers():
+    g, wl, p = _config_a()
+    rf = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    rs = simulate(g, wl, TransportProfile.ai_full(), p)
+    assert rf.horizon == rs.horizon == rf.delivered_per_tick.shape[0]
+    assert rf.max_ticks == rs.max_ticks == 300
+
+
+# ------------------------------------------------------------------------
+# INC on/off as a traced axis
+# ------------------------------------------------------------------------
+
+def test_inc_profile_with_red_disabled_is_bitwise_inc_off():
+    """``inc=True`` + ``red=-1`` lanes must compile-in the INC machinery
+    yet produce bitwise the inc=False executable's lanes AND state — the
+    property that lets a whole INC ablation share one executable per
+    transport profile."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    spec = coll.CollectiveSpec("all_reduce", tuple(range(8)), 24)
+    wl_on = coll.build_workload(spec, "tree")
+    wl_off = coll.build_workload(spec, "tree", inc_groups=False)
+    assert (np.asarray(wl_off.red) == -1).all()
+    p = SimParams(ticks=700)
+    ai = TransportProfile.ai_full()
+    inc_prof = replace(ai, inc=True, name="ai_full+inc")
+    a = simulate(g, wl_on, ai, p, trace="full")          # inc=False exe
+    b = simulate(g, wl_off, inc_prof, p, trace="full")   # inc=True, red=-1
+    np.testing.assert_array_equal(a.delivered_per_tick, b.delivered_per_tick)
+    np.testing.assert_array_equal(a.cwnd_per_tick, b.cwnd_per_tick)
+    np.testing.assert_array_equal(a.src_base_per_tick, b.src_base_per_tick)
+    assert int(b.state.inc_reduced) == 0 and int(b.state.inc_emits) == 0
+    # states match except the INC pytree itself (absent vs empty slots)
+    sa = replace(a.state, inc=None)
+    sb = replace(b.state, inc=None)
+    assert _state_equal(jax.tree_util.tree_leaves(sa),
+                        jax.tree_util.tree_leaves(sb))
+
+
+def test_chunk_size_changes_horizon_not_trajectory():
+    """chunk_ticks trades exit granularity for nothing else: the
+    executed prefix is identical across chunk sizes."""
+    g, wl, _ = _config_a()
+    prof = TransportProfile.ai_full()
+    a = simulate(g, wl, prof, SimParams(ticks=300, chunk_ticks=32),
+                 trace="full")
+    b = simulate(g, wl, prof, SimParams(ticks=300, chunk_ticks=128),
+                 trace="full")
+    assert a.horizon % 32 == 0 and b.horizon % 128 == 0
+    assert a.horizon <= b.horizon
+    np.testing.assert_array_equal(a.delivered_per_tick,
+                                  b.delivered_per_tick[:a.horizon])
+    np.testing.assert_array_equal(a.completion_ticks(), b.completion_ticks())

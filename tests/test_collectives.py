@@ -89,14 +89,16 @@ def test_dep_lane_gates_eligibility():
     flow 0 fully completed at the source."""
     g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
     wl = Workload.of([0, 1], [2, 3], [60, 60], dep=[-1, 0])
-    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=500))
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=500),
+                 trace="full")
     done0 = int(r.source_completion_ticks()[0])
     first1 = int(np.argmax(r.delivered_per_tick[:, 1] > 0))
     assert done0 > 0 and (r.delivered_per_tick[:, 1] > 0).any()
     assert first1 > done0
     # and without the dep both flows run concurrently
     r2 = simulate(g, Workload.of([0, 1], [2, 3], [60, 60]),
-                  TransportProfile.ai_full(), SimParams(ticks=500))
+                  TransportProfile.ai_full(), SimParams(ticks=500),
+                  trace="full")
     first1_free = int(np.argmax(r2.delivered_per_tick[:, 1] > 0))
     assert first1_free < first1
 
@@ -197,8 +199,9 @@ def test_inc_is_noop_without_reduction_groups():
     wl = coll.build_workload(spec, "ring")
     p = SimParams(ticks=400)
     ai = TransportProfile.ai_full()
-    r_off = simulate(g, wl, ai, p)
-    r_on = simulate(g, wl, replace(ai, inc=True, name="ai_full+inc"), p)
+    r_off = simulate(g, wl, ai, p, trace="full")
+    r_on = simulate(g, wl, replace(ai, inc=True, name="ai_full+inc"), p,
+                    trace="full")
     np.testing.assert_array_equal(r_off.delivered_per_tick,
                                   r_on.delivered_per_tick)
     np.testing.assert_array_equal(r_off.cwnd_per_tick, r_on.cwnd_per_tick)

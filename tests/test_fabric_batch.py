@@ -126,8 +126,9 @@ def test_simulate_batch1_equals_simulate():
     wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
     prof = TransportProfile.ai_full()
     p = SimParams(ticks=300)
-    r = simulate(g, wl, prof, p)
-    rb = simulate_batch(g, Workload.stack([wl]), prof, p)[0]
+    r = simulate(g, wl, prof, p, trace="full")
+    rb = simulate_batch(g, Workload.stack([wl]), prof, p, trace="full")[0]
+    assert r.horizon == rb.horizon and r.max_ticks == 300
     np.testing.assert_array_equal(r.delivered_per_tick, rb.delivered_per_tick)
     np.testing.assert_array_equal(r.cwnd_per_tick, rb.cwnd_per_tick)
     np.testing.assert_array_equal(r.qlen_max, rb.qlen_max)
@@ -155,10 +156,11 @@ def test_simulate_batch8_bitwise_identical_to_serial():
         fqs.append(fq)
         seeds.append(0x5EED + i)
     serial = [simulate(g, wls[i], prof, p, failed=fqs[i],
-                       seed=seeds[i]) for i in range(8)]
+                       seed=seeds[i], trace="full") for i in range(8)]
     batch = simulate_batch(g, Workload.stack(wls), prof, p,
                            failed=np.stack(masks),
-                           seeds=np.asarray(seeds, np.uint32))
+                           seeds=np.asarray(seeds, np.uint32),
+                           trace="full")
     for i, (a, b) in enumerate(zip(serial, batch)):
         np.testing.assert_array_equal(
             a.delivered_per_tick, b.delivered_per_tick,
@@ -230,9 +232,15 @@ def test_dep_gated_batch_vs_serial_bitwise():
         spec = coll.CollectiveSpec("all_reduce", (0, 1, 2, 3), s)
         wls.append(coll.build_workload(spec, "ring"))
         seeds.append(0x5EED + i)
-    serial = [simulate(g, wls[i], prof, p, seed=seeds[i]) for i in range(3)]
+    serial = [simulate(g, wls[i], prof, p, seed=seeds[i], trace="full")
+              for i in range(3)]
     batch = simulate_batch(g, Workload.stack(wls), prof, p,
-                           seeds=np.asarray(seeds, np.uint32))
+                           seeds=np.asarray(seeds, np.uint32),
+                           trace="full")
+    # scenarios complete at different ticks: each batch lane must freeze
+    # at ITS OWN chunk boundary, exactly like its serial run
+    for a, b in zip(serial, batch):
+        assert a.horizon == b.horizon
     for i, (a, b) in enumerate(zip(serial, batch)):
         np.testing.assert_array_equal(a.delivered_per_tick,
                                       b.delivered_per_tick,
@@ -254,8 +262,9 @@ def test_inc_batch_vs_serial_bitwise():
     p = SimParams(ticks=600)
     spec = coll.CollectiveSpec("all_reduce", tuple(range(8)), 24)
     wl = coll.build_workload(spec, "tree")
-    a = simulate(g, wl, prof, p)
-    b = simulate_batch(g, Workload.stack([wl, wl]), prof, p)[1]
+    a = simulate(g, wl, prof, p, trace="full")
+    b = simulate_batch(g, Workload.stack([wl, wl]), prof, p,
+                       trace="full")[1]
     assert int(a.state.inc_reduced) > 0
     np.testing.assert_array_equal(a.delivered_per_tick, b.delivered_per_tick)
     np.testing.assert_array_equal(a.src_base_per_tick, b.src_base_per_tick)
@@ -273,10 +282,14 @@ def test_explicit_dep_minus_one_matches_golden():
     wl = Workload.of([0, 1, 2], [4, 5, 6], 200,
                      dep=np.full(3, -1, np.int32),
                      red=np.full(3, -1, np.int32))
-    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300))
-    np.testing.assert_array_equal(r.delivered_per_tick, gold["a_delivered"])
-    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"])
-    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"])
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300),
+                 trace="full")
+    h = r.horizon
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:h])
+    assert (gold["a_delivered"][h:] == 0).all()
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"][:h])
+    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"][:h])
     np.testing.assert_array_equal(np.asarray(r.state.src_track.base),
                                   gold["a_state_src_base"])
 

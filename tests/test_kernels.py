@@ -89,3 +89,40 @@ def test_ecmp_determinism_and_spread():
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
     hist = np.bincount(np.asarray(p1), minlength=4) / n
     np.testing.assert_allclose(hist, 0.25, atol=0.02)
+
+
+@pytest.mark.parametrize("f,w,lanes", [(1, 2, 5), (9, 16, 64), (130, 4, 300)])
+def test_nack_mark_matches_ref(f, w, lanes):
+    rtx = jnp.asarray(RNG.integers(0, 2 ** 32, (f, w), dtype=np.uint32))
+    flow = jnp.asarray(RNG.integers(-2, f + 2, lanes), jnp.int32)
+    off = jnp.asarray(RNG.integers(-4, w * 32 + 8, lanes), jnp.int32)
+    valid = jnp.asarray(RNG.integers(0, 2, lanes).astype(bool))
+    # the fabric always hands the kernel in-range rows/offsets; clip the
+    # sweep the same way so both paths see the contract inputs
+    valid = valid & (flow >= 0) & (flow < f) & (off >= 0) & (off < w * 32)
+    a = ops.nack_mark(rtx, flow, off, valid, use_pallas=True)
+    b = ops.nack_mark(rtx, flow, off, valid, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nack_mark_or_semantics_with_duplicates():
+    """Two lanes carrying the SAME (flow, offset) must set the bit once
+    (OR, not add) — the packet + its retransmission trimmed in one tick."""
+    rtx = jnp.zeros((3, 2), jnp.uint32)
+    flow = jnp.asarray([1, 1, 1, 2, 0], jnp.int32)
+    off = jnp.asarray([5, 5, 37, 0, 63], jnp.int32)
+    valid = jnp.asarray([True, True, True, True, False])
+    for up in (True, False):
+        out = np.asarray(ops.nack_mark(rtx, flow, off, valid, use_pallas=up))
+        assert out[1, 0] == 1 << 5
+        assert out[1, 1] == 1 << (37 - 32)
+        assert out[2, 0] == 1
+        assert out[0].sum() == 0, "invalid lane must mark nothing"
+
+
+def test_nack_mark_preserves_existing_bits():
+    rtx = jnp.full((2, 2), 0x80000001, jnp.uint32)
+    out = np.asarray(ops.nack_mark(
+        rtx, jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32),
+        jnp.asarray([True]), use_pallas=True))
+    assert out[0, 0] == 0x80000003 and out[1, 0] == 0x80000001

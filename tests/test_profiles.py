@@ -39,12 +39,20 @@ def _config_a():
 # ------------------------------------------------------------------------
 
 def test_ai_full_matches_pre_refactor_golden_lanes():
+    """The chunked driver exits at the first quiescent chunk boundary;
+    its trace must be a bitwise PREFIX of the fixed-horizon golden
+    lanes, with the golden tail provably inert (no deliveries), and the
+    frozen final state must match the golden final state."""
     gold = _golden()
     g, wl, p = _config_a()
-    r = simulate(g, wl, TransportProfile.ai_full(), p)
-    np.testing.assert_array_equal(r.delivered_per_tick, gold["a_delivered"])
-    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"])
-    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"])
+    r = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
+    h = r.horizon
+    assert h <= 300 and h % p.chunk_ticks == 0
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:h])
+    assert (gold["a_delivered"][h:] == 0).all()
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"][:h])
+    np.testing.assert_array_equal(r.qlen_max, gold["a_qlen"][:h])
     np.testing.assert_array_equal(np.asarray(r.state.delivered),
                                   gold["a_state_delivered"])
     np.testing.assert_array_equal(np.asarray(r.state.next_psn),
@@ -66,7 +74,11 @@ def test_ai_full_reps_failure_matches_golden_batched():
     mask = np.zeros((1, g.num_queues), bool)
     mask[0, q] = True
     rb = simulate_batch(g, Workload.stack([wl]), prof, p, failed=mask,
-                        seeds=np.asarray([0x5EED + 3], np.uint32))[0]
+                        seeds=np.asarray([0x5EED + 3], np.uint32),
+                        trace="full")[0]
+    # this config never completes within the budget: the chunked driver
+    # must run the FULL horizon and still match the goldens bitwise
+    assert rb.horizon == 400
     np.testing.assert_array_equal(rb.delivered_per_tick, gold["b_delivered"])
     np.testing.assert_array_equal(rb.cwnd_per_tick, gold["b_cwnd"])
     np.testing.assert_array_equal(rb.qlen_max, gold["b_qlen"])
@@ -88,7 +100,7 @@ def test_nscc_vs_rccc_diverge_under_congested_incast():
     aggregate near the receiver line rate."""
     g, wl, exp = workloads.incast(4, size=100000)
     p = SimParams(ticks=1200)
-    rs = {q.name: simulate(g, wl, q, p)
+    rs = {q.name: simulate(g, wl, q, p, trace="full")
           for q in cc_ablation()}  # nscc_only / rccc_only / hybrid
     nscc, rccc = rs["nscc_only"], rs["rccc_only"]
     assert not np.array_equal(nscc.delivered_per_tick,
@@ -119,7 +131,7 @@ def test_rod_in_order_delivery_invariant():
     g, wl, _ = workloads.incast(2, size=300)
     prof = TransportProfile(cc=CCAlgo.NSCC, delivery=DeliveryMode.ROD,
                             name="rod_test")
-    r = simulate(g, wl, prof, SimParams(ticks=2500))
+    r = simulate(g, wl, prof, SimParams(ticks=2500), trace="full")
     cum = r.delivered_per_tick.cumsum(axis=0)
     assert (cum[-1] == np.asarray(wl.size)).all(), "ROD must complete"
     np.testing.assert_array_equal(cum.astype(np.uint32),
@@ -135,7 +147,7 @@ def test_mixed_per_flow_delivery_modes():
         cc=CCAlgo.NSCC, lb=LBScheme.REPS,
         delivery=(DeliveryMode.RUD, DeliveryMode.ROD, DeliveryMode.RUDI),
         name="mixed")
-    r = simulate(g, wl, prof, replace(p, ticks=800))
+    r = simulate(g, wl, prof, replace(p, ticks=800), trace="full")
     cum = r.delivered_per_tick.cumsum(axis=0)
     assert (cum[-1] == 200).all()
     np.testing.assert_array_equal(cum[:, 1].astype(np.uint32),
@@ -157,9 +169,10 @@ def test_batch_with_per_scenario_profiles_matches_serial():
     g, wl, p = _config_a()
     profs = [TransportProfile.ai_base(), TransportProfile.ai_full(),
              TransportProfile.hpc(), TransportProfile.ai_full()]
-    rs = simulate_batch(g, Workload.stack([wl] * 4), profs, p)
+    rs = simulate_batch(g, Workload.stack([wl] * 4), profs, p,
+                        trace="full")
     for prof, rb in zip(profs, rs):
-        r = simulate(g, wl, prof, p)
+        r = simulate(g, wl, prof, p, trace="full")
         np.testing.assert_array_equal(r.delivered_per_tick,
                                       rb.delivered_per_tick,
                                       err_msg=prof.name)
@@ -181,10 +194,11 @@ def test_profile_hash_ignores_name():
 
 def test_legacy_simparams_signature_warns_and_matches():
     g, wl, p = _config_a()
-    r_new = simulate(g, wl, TransportProfile.ai_full(), p)
+    r_new = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
     with pytest.warns(DeprecationWarning, match="TransportProfile"):
         r_old = simulate(g, wl, SimParams(ticks=300, nscc=True,
-                                          lb=LBScheme.OBLIVIOUS))
+                                          lb=LBScheme.OBLIVIOUS),
+                         trace="full")
     np.testing.assert_array_equal(r_old.delivered_per_tick,
                                   r_new.delivered_per_tick)
     np.testing.assert_array_equal(r_old.cwnd_per_tick, r_new.cwnd_per_tick)
@@ -196,9 +210,10 @@ def test_failed_queues_field_deprecated_single_conversion():
     dead = (int(g.up1_table[0, 0]),)
     prof = TransportProfile.ai_full()
     p = SimParams(ticks=200, timeout_ticks=64)
-    r_new = simulate(g, wl, prof, p, failed=dead)
+    r_new = simulate(g, wl, prof, p, failed=dead, trace="full")
     with pytest.warns(DeprecationWarning, match="failed_queues"):
-        r_old = simulate(g, wl, prof, replace(p, failed_queues=dead))
+        r_old = simulate(g, wl, prof, replace(p, failed_queues=dead),
+                         trace="full")
     np.testing.assert_array_equal(r_old.delivered_per_tick,
                                   r_new.delivered_per_tick)
     assert int(r_old.state.drops) > 0
@@ -254,7 +269,7 @@ def test_new_api_rejects_legacy_composition_fields():
 
 def test_goodput_rejects_empty_or_inverted_window():
     g, wl, p = _config_a()
-    r = simulate(g, wl, TransportProfile.ai_full(), p)
+    r = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
     with pytest.raises(ValueError, match="selects no ticks"):
         r.goodput((200, 100))
     with pytest.raises(ValueError, match="selects no ticks"):

@@ -13,8 +13,11 @@ from repro.network.profile import CCAlgo, DeliveryMode, TransportProfile
 def incast_rccc():
     g, wl, exp = workloads.incast(4, size=100000)
     # ai_base: receiver-credit CC only — the exact-share incast profile
+    # default trace="stats": the (300, 1200) goodput window is
+    # registered up front and streamed inside the scan
     return simulate(g, wl, TransportProfile.ai_base(),
-                    SimParams(ticks=1200)), exp
+                    SimParams(ticks=1200),
+                    goodput_window=(300, 1200)), exp
 
 
 def test_incast_rccc_optimal_shares(incast_rccc):
@@ -29,10 +32,12 @@ def test_outcast_rccc_blind_vs_nscc():
     """Fig. 7 group 1: RCCC grants w->v only 50% (waste); NSCC converges
     toward the 75% optimum."""
     g, wl, exp = workloads.outcast(4, size=100000)
-    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500),
+                 goodput_window=(800, 2500))
     w_share_rccc = r.goodput((800, 2500))[4]
     assert abs(w_share_rccc - exp["rccc_w_share"]) < 0.03
-    r2 = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500))
+    r2 = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=2500),
+                  goodput_window=(1200, 2500))
     w_share_nscc = r2.goodput((1200, 2500))[4]
     assert w_share_nscc > 0.65  # approaches 0.75, strictly beats RCCC
     assert w_share_nscc > w_share_rccc + 0.1
@@ -42,7 +47,8 @@ def test_in_network_rccc_grant():
     """Fig. 7 groups 2/3: 12 flows over 4 uplinks deliver ~33% each; the
     same-leaf flow is granted only 50% by RCCC though 67% is available."""
     g, wl, exp = workloads.in_network(12, 4, size=100000)
-    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500))
+    r = simulate(g, wl, TransportProfile.ai_base(), SimParams(ticks=2500),
+                 goodput_window=(800, 2500))
     gp = r.goodput((800, 2500))
     assert abs(gp[:12].mean() - exp["cross_share"]) < 0.04
     assert abs(gp[12] - exp["rccc_local_share"]) < 0.04
@@ -56,7 +62,7 @@ def test_spraying_beats_static_ecmp():
     res = {}
     for scheme in (LBScheme.STATIC, LBScheme.OBLIVIOUS, LBScheme.REPS):
         r = simulate(g, wl, TransportProfile.ai_full(lb=scheme),
-                     SimParams(ticks=1500))
+                     SimParams(ticks=1500), goodput_window=(700, 1500))
         res[scheme] = r.goodput((700, 1500)).mean()
     assert res[LBScheme.OBLIVIOUS] > res[LBScheme.STATIC] + 0.2
     assert res[LBScheme.REPS] >= res[LBScheme.OBLIVIOUS] - 0.02
@@ -121,7 +127,7 @@ def test_reps_failure_mitigation():
     res = {}
     for scheme in (LBScheme.OBLIVIOUS, LBScheme.REPS):
         r = simulate(g, wl, TransportProfile.ai_full(lb=scheme), p,
-                     failed=dead)
+                     failed=dead, goodput_window=(1500, 3000))
         res[scheme] = float(r.goodput((1500, 3000)).mean())
     optimum = 3.0 / 8.0
     assert res[LBScheme.REPS] > 0.9 * optimum
