@@ -38,11 +38,31 @@ while-scan, scenarios exit at quiescence instead of padding to the
 budget, and INC on/off rides the traced ``red`` lanes (one executable
 per transport profile for the whole grid).
 
+api_version 5 additions (the scale-out engine):
+
+* ``ticks_per_sec_fixed_scan`` — the PR-3 driver reproduced (one
+  vmapped fixed-length scan, dense out lanes materialized into
+  SimResults) as the same-box head-to-head reference for the chunked
+  driver's fast path; ``..._device`` is the device-program-only
+  variant (no gather/result build), isolating driver speed from the
+  trace tiers;
+* ``ticks_per_sec_batched_fastpath`` — the chunked driver with
+  ``chunk_ticks`` aligned to divide the budget, so every chunk takes
+  the select-free fast body (no masked remainder);
+* ``sharded_sweep`` — a heterogeneous-horizon scenario sweep, sorted by
+  expected horizon, run unsharded vs ``shard=True``. Runs in a CHILD
+  process with ``--devices`` virtual CPU devices forced, so the main
+  process — and every guarded regression metric — stays on an unsplit
+  host: ``scenarios_per_sec_sharded``, device count, and the speedup;
+* ``calibration`` — a fixed tiny scenario re-measured on every box;
+  ``scripts/bench_compare.py`` normalizes cross-box regression ratios
+  by it so machine drift stops masquerading as engine regressions.
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
-accumulates across PRs (``api_version`` 4 == adaptive-horizon engine).
+accumulates across PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
-       [--ticks 600] [--out BENCH_fabric.json]
+       [--ticks 600] [--devices 4] [--out BENCH_fabric.json]
 """
 from __future__ import annotations
 
@@ -52,6 +72,43 @@ import os
 import time
 
 import numpy as np
+
+
+def _force_host_devices(n: int) -> None:
+    """Split the host CPU into n virtual devices (the sharded-sweep
+    child process). Only effective before the first jax import (jax
+    locks the backend), and only when the user hasn't already forced a
+    count."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def _sharded_sweep_subprocess(devices: int) -> dict:
+    """Run `_sharded_sweep` in a child interpreter with the device split
+    forced there, so the main bench process — and every guarded
+    regression metric measured in it — runs on an unsplit host (the
+    split redistributes XLA's CPU threads and would skew the other
+    numbers)."""
+    import subprocess
+    import sys
+
+    if devices <= 1:
+        return {"devices": max(devices, 1),
+                "skipped": "sharding disabled (--devices <= 1)"}
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "benchmarks.perf_benches",
+           "--sharded-only", "--devices", str(devices)]
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=repo,
+                       env=env)
+    if r.returncode != 0:
+        return {"devices": devices,
+                "skipped": f"child process failed: {r.stderr[-500:]}"}
+    return json.loads(r.stdout)
 
 
 def _bench_config(ticks: int):
@@ -84,6 +141,69 @@ def _scenarios(g, wl, b: int):
     return wls, masks, seeds
 
 
+def _fixed_scan_batched(g, wls, prof, p, masks, seeds, b: int):
+    """The PR-3 batched driver reproduced: ONE vmapped fixed-length
+    ``lax.scan`` over the whole tick budget with dense per-tick out
+    lanes, materialized into full-trace SimResults — the head-to-head
+    reference the chunked driver's fast path is measured against.
+    Returns (call, call_device_only): the first materializes results as
+    PR-3's simulate_batch did, the second just blocks on the device
+    program (isolates driver speed from the trace tier)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.network import fabric
+
+    F = int(wls.src.shape[-1])
+    step = fabric.make_step(g, prof, p, F)
+    xs = jnp.arange(p.ticks, dtype=jnp.int32)
+
+    def scan_one(s0, wl_, dead):
+        def body(s, tick):
+            return step(s, tick, wl_, dead)
+        return jax.lax.scan(body, s0, xs)
+
+    run = jax.jit(jax.vmap(scan_one), donate_argnums=(0,))
+    init = jax.jit(jax.vmap(
+        lambda w_, s_: fabric.init_state(g, w_, prof, p, s_)))
+    dead = jnp.asarray(masks)
+    sds = jnp.asarray(seeds, jnp.uint32)
+    sizes = np.asarray(wls.size)
+
+    def call():
+        s0 = init(wls, sds)
+        final, outs = run(s0, wls, dead)
+        final = jax.device_get(final)
+        outs = jax.device_get(outs)
+        return [
+            fabric._full_result(
+                jax.tree_util.tree_map(lambda a: a[i], final),
+                {k: v[i] for k, v in outs.items()},
+                sizes[i], p.ticks, p.ticks)
+            for i in range(b)
+        ]
+
+    def call_device_only():
+        s0 = init(wls, sds)
+        jax.block_until_ready(run(s0, wls, dead))
+
+    return call, call_device_only
+
+
+def _aligned_chunk(budget: int, target: int = 128) -> int:
+    """Divisor of `budget` near `target`: a chunk size under which every
+    chunk of the budget takes the driver fast path (no masked
+    remainder). Budgets with no usable divisor (e.g. primes) fall back
+    to `target` — one masked remainder, same as the default chunking —
+    rather than degenerating to a tiny chunk that measures while-loop
+    overhead instead of the fast path."""
+    k = max(1, round(budget / target))
+    while k <= budget and budget % k:
+        k += 1
+    chunk = budget // k if k <= budget else budget
+    return chunk if chunk >= 16 else min(budget, target)
+
+
 def _seed_style_simulate(g, wl, prof, p, mask, seed):
     """One scenario the way the seed architecture ran it: the failure set
     baked into the executable as a static constant, so this scenario's
@@ -108,7 +228,7 @@ def _seed_style_simulate(g, wl, prof, p, mask, seed):
     return fabric._to_result(final, outs, wl.size)
 
 
-def run_benches(b: int, ticks: int) -> dict:
+def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     import jax
 
     from repro.network.fabric import simulate, simulate_batch
@@ -118,7 +238,7 @@ def run_benches(b: int, ticks: int) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 4,
+        "api_version": 5,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -172,9 +292,124 @@ def run_benches(b: int, ticks: int) -> dict:
     results["batch_speedup_vs_serial"] = serial_seed / batched_cold
     results["batch_speedup_vs_serial_shared_warm"] = serial_shared / batched
 
+    # --- fixed-scan head-to-head: the driver the chunked engine replaced ---
+    from dataclasses import replace as _replace
+    fixed, fixed_dev = _fixed_scan_batched(g, wls, prof, p, masks, seeds, b)
+    fixed()  # compile
+    fixed_warm = min(_timed(fixed) for _ in range(3))
+    results["fixed_scan_sweep_s"] = fixed_warm
+    results["ticks_per_sec_fixed_scan"] = b * ticks / fixed_warm
+    # device-program-only variant (block_until_ready, nothing gathered):
+    # isolates raw driver speed from each engine's result tier — the
+    # fixed scan ships dense [T, B, F] lanes, the chunked default ships
+    # streamed stats, and the as-shipped comparison below includes each
+    # one's own materialization cost.
+    fixed_dev_warm = min(_timed(fixed_dev) for _ in range(3))
+    results["ticks_per_sec_fixed_scan_device"] = b * ticks / fixed_dev_warm
+    # the acceptance ratio: chunked driver (fast path, stats tier) vs
+    # the fixed-scan driver as PR-3 shipped it (dense tier), same box,
+    # same sweep, each materializing its own results
+    results["fastpath_vs_fixed_scan"] = (
+        results["ticks_per_sec_batched"] / results["ticks_per_sec_fixed_scan"])
+
+    # --- fast path with a budget-aligned chunk: no masked remainder ---
+    chunk = _aligned_chunk(ticks)
+    pf = _replace(p, chunk_ticks=chunk)
+    simulate_batch(g, wls, prof, pf, failed=masks, seeds=seeds)
+    fast = min(_timed(
+        lambda: simulate_batch(g, wls, prof, pf, failed=masks, seeds=seeds))
+        for _ in range(3))
+    results["fastpath_chunk_ticks"] = chunk
+    results["ticks_per_sec_batched_fastpath"] = b * ticks / fast
+
     results["profile_ablation"] = _profile_ablation(ticks)
     results["collective_sweep"] = _collective_sweep()
+    results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
+    results["calibration"] = _calibration()
     return results
+
+
+def _sharded_sweep(b: int = 32, budget: int = 4096) -> dict:
+    """Scenario sharding across devices: a heterogeneous incast-free
+    sweep (per-scenario message sizes spanning ~20x, sorted ascending so
+    each device gets a contiguous horizon band) run unsharded vs
+    ``shard=True``. Sorting matters: the unsharded engine pays the
+    max-lane horizon for every lane, while each device's while loop
+    exits at its own band's quiescence — the speedup is device
+    parallelism times that work saving."""
+    import jax
+
+    from repro.core.lb.schemes import LBScheme
+    from repro.network.fabric import SimParams, Workload, simulate_batch
+    from repro.network.profile import TransportProfile
+    from repro.network.topology import leaf_spine
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return {"devices": ndev,
+                "skipped": "one device visible (pass --devices N on CPU)"}
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    f = 8
+    sizes = np.geomspace(60, 1200, b).astype(int)
+    wls = Workload.stack(
+        [Workload.of(list(range(f)), [f + i for i in range(f)], int(s))
+         for s in sizes])
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=budget, timeout_ticks=64, ooo_threshold=24)
+
+    t0 = time.perf_counter()
+    rs = simulate_batch(g, wls, prof, p)
+    unsh_cold = time.perf_counter() - t0
+    unsh = min(_timed(lambda: simulate_batch(g, wls, prof, p))
+               for _ in range(2))
+    t0 = time.perf_counter()
+    rs_sh = simulate_batch(g, wls, prof, p, shard=True)
+    sh_cold = time.perf_counter() - t0
+    sh = min(_timed(lambda: simulate_batch(g, wls, prof, p, shard=True))
+             for _ in range(2))
+    # the whole point is bitwise-equal lanes: assert it on every run
+    for a, c in zip(rs, rs_sh):
+        assert a.horizon == c.horizon
+        np.testing.assert_array_equal(a.completion_ticks(),
+                                      c.completion_ticks())
+    return {
+        "devices": ndev,
+        "scenarios": b,
+        "horizon_band": [int(rs[0].horizon), int(rs[-1].horizon)],
+        "unsharded_cold_s": unsh_cold,
+        "unsharded_warm_s": unsh,
+        "sharded_cold_s": sh_cold,
+        "sharded_warm_s": sh,
+        "scenarios_per_sec_unsharded": b / unsh,
+        "scenarios_per_sec_sharded": b / sh,
+        "shard_speedup": unsh / sh,
+    }
+
+
+def _calibration() -> dict:
+    """Fixed tiny scenario re-measured on every box. bench_compare
+    divides cross-box regression ratios by (fresh / committed) of this
+    number, so a slower/faster machine shifts every metric AND the
+    calibration together and cancels out — the PR-4 27.2k->17.2k
+    confusion (box drift read as an engine regression) can't recur.
+    Limitation: this scenario runs the engine itself, so an engine-wide
+    per-tick regression shifts it too; bench_compare prints a loud
+    CALIBRATION-SHIFT warning in that case instead of silently
+    normalizing it away."""
+    from repro.network.fabric import SimParams, Workload, simulate
+    from repro.network.profile import TransportProfile
+    from repro.network.topology import leaf_spine
+
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    wl = Workload.of([0, 1], [2, 3], 10**6)      # never completes
+    p = SimParams(ticks=256)
+    prof = TransportProfile.ai_full()
+    simulate(g, wl, prof, p)                     # compile
+    warm = min(_timed(lambda: simulate(g, wl, prof, p)) for _ in range(7))
+    return {
+        "config": "leafspine_L2_S2_H2 / 2 flows / 256 ticks / ai_full",
+        "ticks_per_sec": 256 / warm,
+    }
 
 
 def _profile_ablation(ticks: int) -> dict:
@@ -275,11 +510,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", type=int, default=8)
     ap.add_argument("--ticks", type=int, default=600)
+    ap.add_argument("--devices", type=int, default=4,
+                    help="virtual CPU devices for the sharded sweep "
+                         "(forced in a child process only; 0/1 disables)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="internal: run just the sharded sweep with the "
+                         "device split forced, print its json to stdout "
+                         "(the child-process half of the main bench)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_fabric.json"))
     args = ap.parse_args()
 
-    results = run_benches(args.scenarios, args.ticks)
+    if args.sharded_only:
+        _force_host_devices(args.devices)
+        print(json.dumps(_sharded_sweep(), indent=2, sort_keys=True))
+        return
+
+    results = run_benches(args.scenarios, args.ticks, args.devices)
     results["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
@@ -288,10 +535,20 @@ def main() -> None:
 
     print(json.dumps(results, indent=2, sort_keys=True))
     cs = results["collective_sweep"]
+    sh = results["sharded_sweep"]
+    sh_line = (f"sharded sweep skipped ({sh['skipped']})" if "skipped" in sh
+               else f"sharded sweep {sh['shard_speedup']:.2f}x on "
+                    f"{sh['devices']} devices "
+                    f"({sh['scenarios_per_sec_sharded']:.1f} scen/s)")
     print(f"\nbatched sweep (cold, incl. compile) is "
           f"{results['batch_speedup_vs_serial']:.1f}x the seed-style serial "
           f"sweep; warm-vs-warm against the shared-executable serial loop it "
           f"is {results['batch_speedup_vs_serial_shared_warm']:.2f}x; "
+          f"chunked driver vs fixed scan "
+          f"{results['fastpath_vs_fixed_scan']:.2f}x "
+          f"(aligned-chunk fast path "
+          f"{results['ticks_per_sec_batched_fastpath']:.0f} ticks/s); "
+          f"{sh_line}; "
           f"collective grid ran {cs['scenarios']} scenarios at "
           f"{cs['scenarios_per_sec']:.2f}/s, INC tree-all-reduce completion "
           f"ratio {cs['inc_tree_allreduce_ratio']}; wrote {out}")

@@ -15,6 +15,23 @@ flags the output but does not fail the smoke run, because wall-clock
 benches on shared/loaded machines are advisory; CI or a reviewer reads
 the flag.
 
+Box-drift calibration: when both jsons carry the ``calibration`` block
+(api_version >= 5; a fixed tiny scenario re-measured on every box),
+every regression ratio is divided by the calibration ratio
+(fresh / committed) before judging. A box that is uniformly 30% slower
+shifts the metrics and the calibration together, so the normalized
+ratios stay ~1.0 — cross-box noise stops masquerading as engine
+regressions (the PR-4 27.2k->17.2k confusion). Disable with
+``--no-calibrate`` to judge raw wall-clock.
+
+KNOWN LIMITATION: the calibration scenario runs the same engine code it
+guards, so a change that slows EVERY tick uniformly (a per-tick tax in
+``make_step`` itself) shifts the calibration too and normalizes itself
+away. The script therefore prints a loud warning whenever the
+calibration itself moved beyond the threshold — on the same box that
+can only be an engine-wide per-tick change (or heavy load), and the raw
+columns must be read by hand (or rerun with ``--no-calibrate``).
+
 Usage:
     python scripts/bench_compare.py --fresh /tmp/BENCH_fresh.json
     python scripts/bench_compare.py --run          # regenerate first (slow)
@@ -46,8 +63,25 @@ def _get(d: dict, path):
     return float(d)
 
 
-def compare(committed: dict, fresh: dict, threshold: float):
-    """Returns (ok, rows); rows are (label, base, new, ratio, regressed)."""
+def calibration_scale(committed: dict, fresh: dict) -> "float | None":
+    """fresh/committed ratio of the fixed calibration scenario — the
+    box-speed factor every throughput ratio is normalized by. None when
+    either json predates the calibration block (api_version < 5)."""
+    try:
+        base = _get(committed, ("calibration", "ticks_per_sec"))
+        new = _get(fresh, ("calibration", "ticks_per_sec"))
+    except (KeyError, TypeError):
+        return None
+    if base <= 0 or new <= 0:
+        return None
+    return new / base
+
+
+def compare(committed: dict, fresh: dict, threshold: float,
+            scale: "float | None" = None):
+    """Returns (ok, rows); rows are (label, base, new, norm_ratio,
+    regressed). `scale` is the calibration box-speed factor (None =
+    judge raw ratios); the regression verdict uses ratio / scale."""
     rows, ok = [], True
     for label, path in METRICS:
         try:
@@ -57,6 +91,8 @@ def compare(committed: dict, fresh: dict, threshold: float):
             continue
         new = _get(fresh, path)  # a fresh bench missing a metric IS a bug
         ratio = new / base if base > 0 else float("inf")
+        if scale:
+            ratio = ratio / scale
         regressed = ratio < 1.0 - threshold
         ok = ok and not regressed
         rows.append((label, base, new, ratio, regressed))
@@ -74,6 +110,9 @@ def main() -> int:
                          "benchmarks.perf_benches)")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional drop (default 0.20)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="judge raw wall-clock ratios (skip the box-drift "
+                         "calibration normalization)")
     args = ap.parse_args()
 
     if args.run:
@@ -94,8 +133,21 @@ def main() -> int:
         committed = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    ok, rows = compare(committed, fresh, args.threshold)
+    scale = (None if args.no_calibrate
+             else calibration_scale(committed, fresh))
+    ok, rows = compare(committed, fresh, args.threshold, scale)
 
+    if scale is None:
+        print("calibration: unavailable — judging raw wall-clock ratios")
+    else:
+        print(f"calibration: this box measures {scale * 100:.1f}% of the "
+              f"baseline box (ratios normalized by it)")
+        if abs(scale - 1.0) > args.threshold:
+            print(f"CALIBRATION-SHIFT: the calibration scenario itself "
+                  f"moved {scale * 100:.1f}% — on the same box this means "
+                  f"an engine-wide per-tick change (or heavy load), which "
+                  f"normalization CANNOT distinguish from box drift; read "
+                  f"the raw columns or rerun with --no-calibrate")
     width = max(len(r[0]) for r in rows)
     for label, base, new, ratio, regressed in rows:
         if base is None:
@@ -103,11 +155,13 @@ def main() -> int:
                   f"skipped)")
             continue
         flag = "REGRESSION" if regressed else "ok"
+        norm = "" if scale is None else " normalized"
         print(f"{label:<{width}}  {base:12.2f} -> {new:12.2f}  "
-              f"({ratio * 100:6.1f}%)  {flag}")
+              f"({ratio * 100:6.1f}%{norm})  {flag}")
     if not ok:
         print(f"\nPERF REGRESSION: a guarded metric dropped >"
-              f"{args.threshold * 100:.0f}% vs {args.committed}")
+              f"{args.threshold * 100:.0f}% vs {args.committed}"
+              + ("" if scale is None else " (box-drift normalized)"))
         return 2
     print("\nperf gate ok")
     return 0

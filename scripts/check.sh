@@ -29,11 +29,20 @@ python -m benchmarks.run --only headers
 echo "== paper bench smoke: collectives (dep lane + INC canary) =="
 python -m benchmarks.run --only collectives
 
+echo "== sharded engine smoke: 4 virtual devices, bitwise parity =="
+# Fresh interpreter so the forced host-device split lands before jax
+# locks the backend; the smoke runs a ragged sharded batch and asserts
+# bitwise parity with the unsharded engine (repro.network.shard).
+XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=4}" \
+  python -m repro.network.shard
+
 echo "== perf gate (soft): BENCH_fabric.json regression diff =="
 # Soft gate: warns + flags, never fails the smoke run (wall-clock
 # benches are advisory on shared machines). Set RUN_BENCH=1 to
 # regenerate a fresh bench (~2 min) and diff it against the committed
 # BENCH_fabric.json; >20% throughput regressions are flagged loudly.
+# api_version >= 5 jsons carry a calibration scenario: ratios are
+# box-drift normalized, so the diff is meaningful across machines.
 if [ "${RUN_BENCH:-0}" = "1" ]; then
   rc=0
   python scripts/bench_compare.py --run || rc=$?

@@ -29,7 +29,10 @@ The engine runs in two modes:
   profiles groups the batch by profile — one executable per distinct
   profile, e.g. a 3-profile x N-scenario ablation is 3 compiles and 3
   device launches for the whole grid. Per-lane results are bitwise
-  identical to serial ``simulate`` calls.
+  identical to serial ``simulate`` calls. ``shard=True`` (or
+  ``devices=``) additionally shards the scenario axis across devices
+  with ``shard_map`` — see `repro.network.shard` — still bitwise
+  identical, with each device exiting at its own lanes' quiescence.
 
 Execution model (the adaptive-horizon driver): the tick budget is NOT a
 fixed scan length. The driver runs a ``lax.while_loop`` over fixed-size
@@ -500,9 +503,12 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
                 hot_sl, jnp.maximum(slot_last_ack, ack_psn[:, None]),
                 slot_last_ack)
 
-        # consume the slot (a whole-record clear is one dynamic-update-
-        # slice; stale non-type lanes were masked by type==NONE anyway)
-        ev_buf = s.ev_buf.at[slot].set(jnp.zeros((E, EVF_FIELDS), jnp.int32))
+        # consume the slot: clear only the EVF_TYPE lane (every read of
+        # the other lanes is masked by type != NONE, and the slot is
+        # fully rewritten when it next comes up as out_slot) — a [E, 1]
+        # dynamic-update-slice instead of the whole [E, EVF_FIELDS]
+        # record, and no zeros materialized
+        ev_buf = s.ev_buf.at[slot, :, EVF_TYPE].set(jnp.int32(EV_NONE))
 
         # ------------------------------------------- 2. RCCC receiver grants
         done = src_track.base.astype(jnp.int32) >= wl.size
@@ -940,8 +946,13 @@ def _quiescent(s: SimState, wl: Workload) -> jax.Array:
 
 
 def _freeze(run, new, old):
-    """Carry-wide select: keep `new` where the scalar `run` is set."""
-    return jax.tree_util.tree_map(lambda a, b: jnp.where(run, a, b), new, old)
+    """Carry-wide select: keep `new` where `run` is set. `run` is a
+    scalar (serial driver) or a per-lane [B] vector (the hand-batched
+    driver), broadcast against each leaf's trailing axes."""
+    def sel(a, b):
+        r = run.reshape(run.shape + (1,) * (a.ndim - run.ndim))
+        return jnp.where(r, a, b)
+    return jax.tree_util.tree_map(sel, new, old)
 
 
 def _stats_init(F: int) -> dict:
@@ -984,92 +995,157 @@ _RUN_CACHE: dict = {}
 
 
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
-               F: int, batched: bool, trace: str = "stats"):
+               F: int, batched: bool, trace: str = "stats", shard=None):
     # the horizon (p.ticks) is a traced bound, not a compiled constant:
-    # strip it so one executable serves every tick budget
-    return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace)
+    # strip it so one executable serves every tick budget. `shard` is
+    # None (unsharded) or the device-id tuple a sharded executable was
+    # built for (repro.network.shard).
+    return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace,
+            shard)
+
+
+def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
+               F: int, batched: bool, trace: str):
+    """(init, run) pair for one trace tier — UN-jitted, so the sharded
+    engine (repro.network.shard) can wrap the same driver in shard_map
+    before compiling. `_get_fns` jits and caches; behavior contract:
+
+    ``trace="stats"`` builds the whole adaptive-horizon run as ONE
+    device program: a ``lax.while_loop`` whose body scans a
+    ``chunk_ticks``-long chunk (streaming the stat lanes in the scan
+    carry) and whose predicate stops once every lane is quiescent or at
+    the (traced) budget.
+
+    ``trace="full"`` builds ONE CHUNK (scan + per-tick out lanes +
+    quiescence flag, time-major: ``[chunk, B?, ...]``); the host drives
+    the chunk loop and concatenates the buffered lanes.
+
+    Batching is by hand — the scenario axis is an explicit leading [B]
+    axis (the per-tick step/stat/quiescence functions are vmapped, the
+    chunk loop is written once over lane vectors) rather than a vmap of
+    the whole driver. That keeps the chunk dispatch a SCALAR decision,
+    which buys the driver fast path: whenever no lane is frozen and the
+    chunk lies strictly below the budget (every chunk of a
+    never-quiescing sweep except a non-multiple remainder), a
+    ``lax.cond`` runs a select-free tick body — bitwise identical to
+    the masked body, whose selects all have a true predicate there —
+    and the carry-wide freeze/budget selects are paid only by the
+    residual chunks that can actually need them. Per-lane trajectories
+    are unchanged: a stopped lane is frozen at its own chunk boundary,
+    and a partial final chunk cannot overrun the budget.
+    """
+    step = make_step(g, profile, p, F)
+    chunk = int(p.chunk_ticks)
+    if chunk < 1:
+        raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
+    xs = jnp.arange(chunk, dtype=jnp.int32)
+
+    def init_one(wl, seed):
+        return init_state(g, wl, profile, p, seed)
+
+    if batched:
+        init_fn = jax.vmap(init_one)
+        stepf = jax.vmap(step, in_axes=(0, None, 0, 0))
+        quiet = jax.vmap(_quiescent)
+        statf = jax.vmap(_stats_update,
+                         in_axes=(0, 0, 0, 0, None, None, None))
+    else:
+        init_fn, stepf, quiet, statf = (init_one, step, _quiescent,
+                                        _stats_update)
+
+    if trace == "stats":
+        def run(s0, wl, dead, budget, w0, w1):
+            bshape = wl.src.shape[:-1]          # () serial, (B,) batched
+
+            def chunk_scan(s, st, tick0, stop):
+                # ONE tick body serves both cond branches, so the
+                # fast-path contract (fast == masked with all-true
+                # predicates; where(True, a, b) == a, bitwise) lives
+                # in one place: `stop=None` builds the select-free fast
+                # body, a lane vector builds the masked residual body
+                # (select against the budget + per-lane freeze flags —
+                # the only carry leaves selected are the ones that can
+                # change, SimState + stat lanes).
+                def tick_body(c, i):
+                    s, st = c
+                    tick = tick0 + i
+                    ns, _ = stepf(s, tick, wl, dead)
+                    nst = statf(st, s, ns, wl, tick, w0, w1)
+                    if stop is None:
+                        return (ns, nst), None
+                    live = (tick < budget) & ~stop
+                    return _freeze(live, (ns, nst), (s, st)), None
+
+                (s, st), _ = jax.lax.scan(tick_body, (s, st), xs)
+                return s, st
+
+            def fast_chunk(ops):
+                s, st, tick0, _ = ops
+                return chunk_scan(s, st, tick0, None)
+
+            def masked_chunk(ops):
+                s, st, tick0, stop = ops
+                return chunk_scan(s, st, tick0, stop)
+
+            def body(c):
+                s, st, tick0, stop, hz = c
+                fast = (tick0 + chunk <= budget) & ~stop.any()
+                s, st = jax.lax.cond(fast, fast_chunk, masked_chunk,
+                                     (s, st, tick0, stop))
+                tick0 = tick0 + jnp.int32(chunk)
+                nstop = stop | quiet(s, wl) | (tick0 >= budget)
+                hz = jnp.where(nstop & ~stop,
+                               jnp.minimum(tick0, budget), hz)
+                return s, st, tick0, nstop, hz
+
+            stop0 = jnp.broadcast_to(budget <= jnp.int32(0), bshape)
+            hz0 = jnp.where(stop0, jnp.minimum(jnp.int32(0), budget), -1)
+            st0 = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, bshape + a.shape),
+                _stats_init(F))
+            s, st, _, _, hz = jax.lax.while_loop(
+                lambda c: ~c[3].all(), body,
+                (s0, st0, jnp.int32(0), stop0, hz0))
+            return s, st, hz
+
+        return init_fn, run
+
+    if trace == "full":
+        def run_chunk(s0, stopped, tick0, wl, dead, budget):
+            def chunk_scan(s0, stop):
+                # stop=None -> the select-free fast body (see the stats
+                # tier: one tick body keeps the bitwise contract)
+                def tick_body(s, i):
+                    tick = tick0 + i
+                    ns, out = stepf(s, tick, wl, dead)
+                    if stop is None:
+                        return ns, out
+                    live = (tick < budget) & ~stop
+                    return _freeze(live, ns, s), out
+
+                return jax.lax.scan(tick_body, s0, xs)
+
+            do_fast = (tick0 + chunk <= budget) & ~stopped.any()
+            s, outs = jax.lax.cond(do_fast,
+                                   lambda s0: chunk_scan(s0, None),
+                                   lambda s0: chunk_scan(s0, stopped), s0)
+            return s, stopped | quiet(s, wl), outs
+
+        return init_fn, run_chunk
+
+    raise ValueError(
+        f"unknown trace tier {trace!r}; choose from {TRACE_MODES}")
 
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
              F: int, batched: bool, trace: str):
-    """(jitted init, jitted run) pair for one trace tier.
-
-    ``trace="stats"`` compiles the whole adaptive-horizon run as ONE
-    device program: a ``lax.while_loop`` whose body scans a
-    ``chunk_ticks``-long chunk (streaming the stat lanes in the scan
-    carry) and whose predicate stops at quiescence or the (traced)
-    budget. Under ``vmap`` the loop runs until every scenario stops,
-    freezing finished lanes — each lane's trajectory is bitwise the
-    serial one.
-
-    ``trace="full"`` compiles ONE CHUNK (scan + per-tick out lanes +
-    quiescence flag); the host drives the chunk loop and concatenates
-    the buffered lanes. Both runs donate the carry.
-
-    Ticks at or past the budget, and every tick of an already-stopped
-    scenario, pass the carry through unchanged (a carry-wide select on
-    the scalar predicate), so a partial final chunk cannot overrun the
-    budget and a stopped lane is frozen at its own chunk boundary.
-    """
+    """Jitted + cached (init, run) pair — see `_build_fns` for the
+    driver contract. Both runs donate the carry."""
     key = _cache_key(g, profile, p, F, batched, trace)
     fns = _RUN_CACHE.get(key)
     if fns is None:
-        step = make_step(g, profile, p, F)
-        chunk = int(p.chunk_ticks)
-        if chunk < 1:
-            raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
-        xs = jnp.arange(chunk, dtype=jnp.int32)
-
-        def init_one(wl, seed):
-            return init_state(g, wl, profile, p, seed)
-
-        if trace == "stats":
-            def run_one(s0, wl, dead, budget, w0, w1):
-                def tick_body(carry, i):
-                    s, st, tick0 = carry
-                    tick = tick0 + i
-                    run = tick < budget
-                    ns, _ = step(s, tick, wl, dead)
-                    nst = _stats_update(st, s, ns, wl, tick, w0, w1)
-                    return (*_freeze(run, (ns, nst), (s, st)), tick0), None
-
-                def body(c):
-                    s, st, tick0, _ = c
-                    (s, st, _), _ = jax.lax.scan(tick_body, (s, st, tick0), xs)
-                    tick0 = tick0 + jnp.int32(chunk)
-                    stop = _quiescent(s, wl) | (tick0 >= budget)
-                    return (s, st, tick0, stop)
-
-                s, st, tick0, _ = jax.lax.while_loop(
-                    lambda c: ~c[3], body,
-                    (s0, _stats_init(F), jnp.int32(0),
-                     budget <= jnp.int32(0)))
-                return s, st, jnp.minimum(tick0, budget)
-
-            if batched:
-                init_one = jax.vmap(init_one)
-                run_one = jax.vmap(run_one,
-                                   in_axes=(0, 0, 0, None, None, None))
-            fns = (jax.jit(init_one), jax.jit(run_one, donate_argnums=(0,)))
-        elif trace == "full":
-            def run_chunk(s0, stopped, tick0, wl, dead, budget):
-                def tick_body(s, i):
-                    tick = tick0 + i
-                    run = (tick < budget) & ~stopped
-                    ns, out = step(s, tick, wl, dead)
-                    return _freeze(run, ns, s), out
-
-                s, outs = jax.lax.scan(tick_body, s0, xs)
-                return s, stopped | _quiescent(s, wl), outs
-
-            if batched:
-                init_one = jax.vmap(init_one)
-                run_chunk = jax.vmap(run_chunk,
-                                     in_axes=(0, 0, None, 0, 0, None))
-            fns = (jax.jit(init_one), jax.jit(run_chunk, donate_argnums=(0,)))
-        else:
-            raise ValueError(
-                f"unknown trace tier {trace!r}; choose from {TRACE_MODES}")
+        init_fn, run = _build_fns(g, profile, p, F, batched, trace)
+        fns = (jax.jit(init_fn), jax.jit(run, donate_argnums=(0,)))
         _RUN_CACHE[key] = fns
     return fns
 
@@ -1083,7 +1159,8 @@ def _run_full_host(run_chunk, s0, wl, dead, budget: int, chunk: int,
     Returns (final_state, outs, horizon[np int64 array]) — `horizon[b]`
     is scenario b's own stop boundary (min(chunk end, budget)), which is
     also where its carry froze, so slicing lane b to `horizon[b]` reproduces
-    the serial run of that scenario exactly.
+    the serial run of that scenario exactly. The dense out lanes are
+    time-major: ``[T]`` serial, ``[T, B, ...]`` batched.
     """
     serial = batch is None
     nb = 1 if serial else batch
@@ -1103,8 +1180,7 @@ def _run_full_host(run_chunk, s0, wl, dead, budget: int, chunk: int,
         if tick0 >= budget or stop_np.all():
             break
     horizon[horizon < 0] = budget
-    t_axis = 0 if serial else 1
-    outs = {k: np.concatenate([c[k] for c in chunks], axis=t_axis)
+    outs = {k: np.concatenate([c[k] for c in chunks], axis=0)
             for k in chunks[0]}
     return s, outs, horizon
 
@@ -1279,8 +1355,38 @@ def simulate(g: QueueGraph, wl: Workload,
                         int(horizon[0]), budget)
 
 
+def _split_stats_results(final, st, sizes, horizon, budget, goodput_window,
+                         B: int) -> "list[SimResult]":
+    """Per-scenario SimResults from host-side batched stats lanes (lanes
+    past B — shard padding — are dropped)."""
+    return [
+        _stats_result(
+            jax.tree_util.tree_map(lambda a: a[b], final),
+            jax.tree_util.tree_map(lambda a: a[b], st),
+            sizes[b], int(horizon[b]), budget, goodput_window)
+        for b in range(B)
+    ]
+
+
+def _split_full_results(final, outs, sizes, horizon, budget,
+                        B: int) -> "list[SimResult]":
+    """Per-scenario SimResults from time-major dense out lanes
+    ([T, Bp, ...]; lanes past B — shard padding — are dropped)."""
+    return [
+        _full_result(
+            jax.tree_util.tree_map(lambda a: a[b], final),
+            {k: v[:, b] for k, v in outs.items()},
+            sizes[b], int(horizon[b]), budget)
+        for b in range(B)
+    ]
+
+
 def _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
-               goodput_window) -> "list[SimResult]":
+               goodput_window, devices=None) -> "list[SimResult]":
+    if devices is not None:
+        from repro.network import shard
+        return shard.run_sharded(g, wls, profile, p, dead, seeds, trace,
+                                 budget, goodput_window, devices)
     B, F = wls.src.shape
     profile.delivery_modes(F)
     init, run = _get_fns(g, profile, p, F, batched=True, trace=trace)
@@ -1293,32 +1399,22 @@ def _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
         final = jax.device_get(final)
         st = jax.device_get(st)
         horizon = np.asarray(horizon)
-        return [
-            _stats_result(
-                jax.tree_util.tree_map(lambda a: a[b], final),
-                jax.tree_util.tree_map(lambda a: a[b], st),
-                sizes[b], int(horizon[b]), budget, goodput_window)
-            for b in range(B)
-        ]
+        return _split_stats_results(final, st, sizes, horizon, budget,
+                                    goodput_window, B)
     final, outs, horizon = _run_full_host(run, s0, wls, dead, budget,
                                           p.chunk_ticks, batch=B)
     final = jax.device_get(final)
-    return [
-        _full_result(
-            jax.tree_util.tree_map(lambda a: a[b], final),
-            {k: v[b] for k, v in outs.items()},
-            sizes[b], int(horizon[b]), budget)
-        for b in range(B)
-    ]
+    return _split_full_results(final, outs, sizes, horizon, budget, B)
 
 
 def simulate_batch(g: QueueGraph, wls: Workload,
                    profile=None, p: "SimParams | None" = None, *,
                    failed=None, seeds=None,
                    trace: str = "stats", max_ticks: "int | None" = None,
-                   goodput_window: "tuple[int, int] | None" = None
+                   goodput_window: "tuple[int, int] | None" = None,
+                   shard: bool = False, devices=None
                    ) -> "list[SimResult]":
-    """Run B scenarios as compiled, vmapped chunked while-scans.
+    """Run B scenarios as compiled, batched chunked while-scans.
 
     wls:     Workload with a leading scenario axis ([B, F]); build with
              ``Workload.stack`` or pass a list of same-F Workloads.
@@ -1335,6 +1431,14 @@ def simulate_batch(g: QueueGraph, wls: Workload,
              budget is traced — sweeping it reuses the executable — and
              each group runs until its slowest scenario is quiescent,
              with faster lanes frozen at their own stop boundary.
+    shard / devices: shard the scenario axis across devices with
+             ``shard_map`` (repro.network.shard). ``shard=True`` uses
+             every ``jax.devices()``; ``devices=`` takes an int (first n
+             devices) or an explicit device sequence. Composes with
+             per-scenario profiles (each profile group is sharded);
+             ragged scenario counts are padded with inert no-op lanes
+             and the padding is dropped from the results. Per-lane
+             results stay bitwise identical to the unsharded path.
 
     Returns one SimResult per scenario, bitwise identical to the
     corresponding serial ``simulate`` call: the tick function is the same
@@ -1344,6 +1448,11 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     """
     if isinstance(wls, (list, tuple)):
         wls = Workload.stack(wls)
+    if shard or devices is not None:
+        from repro.network.shard import resolve_devices
+        devices = resolve_devices(devices, shard)
+    else:
+        devices = None
     profiles = None
     if isinstance(profile, (list, tuple)):
         profiles = list(profile)
@@ -1376,7 +1485,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
 
     if profiles is None:
         return _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
-                          goodput_window)
+                          goodput_window, devices=devices)
 
     # per-scenario profiles: group scenarios by (static) profile and run
     # each group as one vmapped scan — one executable per distinct profile.
@@ -1399,7 +1508,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     def _run_group(item):
         prof, idxs, sub_wls, sub_dead, sub_seeds = item
         return idxs, _run_batch(g, sub_wls, prof, p, sub_dead, sub_seeds,
-                                trace, budget, goodput_window)
+                                trace, budget, goodput_window,
+                                devices=devices)
 
     if len(items) > 1:
         from concurrent.futures import ThreadPoolExecutor

@@ -18,11 +18,45 @@ from __future__ import annotations
 
 from dataclasses import replace
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.network.fabric import Workload
 from repro.network.profile import (CCAlgo, TransportProfile, cc_ablation)
 from repro.network.topology import QueueGraph, fat_tree3, leaf_spine
+
+
+# ------------------------------------------------------------------------
+# scenario-axis padding (device sharding wants B % devices == 0)
+# ------------------------------------------------------------------------
+
+def noop_scenarios(f: int, b: int) -> Workload:
+    """[b, f] inert scenario lanes: zero-size flows (src == dst == host
+    0, no deps, no reduction groups). A zero-size flow is source- and
+    receiver-complete from tick 0, never becomes eligible to inject, and
+    leaves queues and the control ring untouched — the lane is quiescent
+    at the first chunk boundary and freezes there."""
+    z = jnp.zeros((b, f), jnp.int32)
+    neg1 = jnp.full((b, f), -1, jnp.int32)
+    return Workload(src=z, dst=z, size=z, start=z, dep=neg1, red=neg1)
+
+
+def pad_scenarios(wls: Workload, multiple: int) -> "tuple[Workload, int]":
+    """Pad a stacked [B, F] workload along the scenario axis up to a
+    multiple of ``multiple`` with :func:`noop_scenarios` lanes, so the
+    axis shards evenly across devices. Lanes are independent, so padding
+    never changes a real lane's bits. Returns (padded, pad_count)."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    b, f = wls.src.shape
+    pad = (-b) % multiple
+    if pad == 0:
+        return wls, 0
+    extra = noop_scenarios(f, pad)
+    return jax.tree_util.tree_map(
+        lambda a, e: jnp.concatenate([jnp.asarray(a), e], axis=0),
+        wls, extra), pad
 
 
 # ------------------------------------------------------------------------

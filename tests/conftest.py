@@ -1,0 +1,13 @@
+"""Split the host CPU into 4 virtual XLA devices for the whole test
+session so the device-sharded scenario engine (repro.network.shard,
+tests/test_shard.py) is exercised under plain ``pytest``.
+
+Must run before the first jax import anywhere in the process — jax
+locks the backend on first use. Respected only when the user has not
+set their own XLA_FLAGS; the unsharded engine's results do not depend
+on the visible device count (everything runs on device 0 by default).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")

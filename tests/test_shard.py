@@ -1,0 +1,326 @@
+"""Device-sharded scenario engine (repro.network.shard) + driver fast
+path: bitwise parity contracts.
+
+Contracts locked here (see DESIGN.md "Sharded scenario axis"):
+
+* shard-vs-unshard bitwise parity — completion ticks, horizons, dense
+  lanes, and the full final state — for uniform and per-scenario
+  profile batches, ragged (non-divisible) scenario counts, per-scenario
+  failure masks + seeds, and both trace tiers;
+* padding lanes are inert: a padded sharded run returns exactly B
+  results, none of them a padding artifact;
+* the driver fast path (`lax.cond` between the select-free and masked
+  chunk bodies) is bitwise invisible: budgets that are not a chunk
+  multiple, and batches where one lane freezes while others run (the
+  masked residual path), still match the goldens / serial runs;
+* sharded executables are cached per device set, and the unsharded
+  cache key is unchanged.
+
+conftest.py forces 4 virtual CPU devices for the session; the tests
+skip (not fail) if the user's own XLA_FLAGS leaves fewer than 2.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.lb.schemes import LBScheme
+from repro.network import workloads
+from repro.network.fabric import (SimParams, Workload, _cache_key, simulate,
+                                  simulate_batch)
+from repro.network.profile import TransportProfile
+from repro.network.shard import resolve_devices
+from repro.network.topology import leaf_spine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fabric_golden.npz")
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4; set by tests/conftest.py unless overridden)")
+
+
+def _state_equal(a, b) -> bool:
+    return all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)))
+
+
+def _mixed_batch(b=6):
+    """Ragged-by-design sweep: heterogeneous sizes (staggered horizons,
+    so lanes freeze at different boundaries), per-scenario seeds, one
+    failure mask."""
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    sizes = [40, 90, 140, 5000, 60, 220][:b]
+    wls = Workload.stack(
+        [Workload.of([0, 1, 2], [4, 5, 6], s) for s in sizes])
+    masks = np.zeros((b, g.num_queues), bool)
+    masks[2, int(g.up1_table[0, 0])] = True
+    seeds = np.arange(b, dtype=np.uint32) + 0x5EED
+    return g, wls, masks, seeds
+
+
+# ------------------------------------------------------------------------
+# padding helpers
+# ------------------------------------------------------------------------
+
+def test_pad_scenarios_shapes_and_inertness():
+    _, wls, _, _ = _mixed_batch()
+    padded, pad = workloads.pad_scenarios(wls, 4)
+    assert pad == 2 and padded.src.shape == (8, 3)
+    np.testing.assert_array_equal(np.asarray(padded.src[:6]),
+                                  np.asarray(wls.src))
+    assert (np.asarray(padded.size[6:]) == 0).all()
+    assert (np.asarray(padded.dep[6:]) == -1).all()
+    aligned, pad0 = workloads.pad_scenarios(wls, 3)
+    assert pad0 == 0 and aligned is wls
+
+
+def test_noop_scenarios_quiesce_at_first_chunk():
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    wls = workloads.noop_scenarios(f=2, b=2)
+    rs = simulate_batch(g, wls, TransportProfile.ai_full(),
+                        SimParams(ticks=2000))
+    for r in rs:
+        assert r.horizon == SimParams().chunk_ticks  # first boundary
+        assert int(np.asarray(r.state.delivered).sum()) == 0
+
+
+# ------------------------------------------------------------------------
+# shard-vs-unshard bitwise parity
+# ------------------------------------------------------------------------
+
+@multi_device
+def test_sharded_ragged_stats_parity():
+    """B=6 on 4 devices (ragged), failure masks + seeds, stats tier."""
+    g, wls, masks, seeds = _mixed_batch()
+    p = SimParams(ticks=700)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    win = (100, 700)
+    base = simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds,
+                          goodput_window=win)
+    shd = simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds,
+                         goodput_window=win, shard=True)
+    assert len(shd) == len(base) == 6
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(a.completion_ticks(),
+                                      b.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.source_completion_ticks(),
+                                      b.source_completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.goodput(win), b.goodput(win),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} state"
+
+
+@multi_device
+def test_sharded_full_trace_parity():
+    """trace="full": the dense per-tick lanes gathered from the sharded
+    chunk loop match the unsharded ones bitwise, per lane horizon."""
+    g, wls, masks, seeds = _mixed_batch()
+    p = SimParams(ticks=500)
+    prof = TransportProfile.ai_full()
+    base = simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds,
+                          trace="full")
+    shd = simulate_batch(g, wls, prof, p, failed=masks, seeds=seeds,
+                         trace="full", shard=True)
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(a.delivered_per_tick,
+                                      b.delivered_per_tick,
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.cwnd_per_tick, b.cwnd_per_tick,
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.qlen_max, b.qlen_max,
+                                      err_msg=f"scenario {i}")
+        np.testing.assert_array_equal(a.rx_base_per_tick,
+                                      b.rx_base_per_tick,
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} state"
+
+
+@multi_device
+def test_sharded_serial_cross_parity():
+    """Sharded lanes equal the SERIAL engine too — the transitive
+    contract (serial == batched == sharded)."""
+    g, wls, masks, seeds = _mixed_batch(b=3)
+    p = SimParams(ticks=600)
+    prof = TransportProfile.ai_full()
+    shd = simulate_batch(g, wls, prof, p, failed=masks[:3], seeds=seeds,
+                         devices=2)
+    for i, r in enumerate(shd):
+        solo = simulate(g, jax.tree_util.tree_map(lambda a: a[i], wls),
+                        prof, p, failed=np.asarray(masks[i]),
+                        seed=int(seeds[i]))
+        assert solo.horizon == r.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(solo.completion_ticks(),
+                                      r.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(solo.state, r.state), f"scenario {i}"
+
+
+@multi_device
+def test_sharded_per_profile_groups_parity():
+    """Per-scenario profiles: groups shard independently, results are
+    reassembled in scenario order, bitwise == unsharded grouped run."""
+    g, wls, masks, seeds = _mixed_batch()
+    p = SimParams(ticks=500)
+    profs = [TransportProfile.ai_full(), TransportProfile.ai_base(),
+             TransportProfile.hpc()] * 2
+    base = simulate_batch(g, wls, profs, p, failed=masks, seeds=seeds)
+    shd = simulate_batch(g, wls, profs, p, failed=masks, seeds=seeds,
+                         shard=True)
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(a.completion_ticks(),
+                                      b.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} state"
+
+
+@multi_device
+@pytest.mark.slow
+def test_sharded_wide_sweep_parity_four_devices():
+    """The multi-device sweep: a 16-scenario heterogeneous-horizon batch
+    across every visible device, non-chunk-multiple budget (fast +
+    masked chunks both on the device path)."""
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    f = 8
+    sizes = np.geomspace(40, 900, 16).astype(int)
+    wls = Workload.stack(
+        [Workload.of(list(range(f)), [f + i for i in range(f)], int(s))
+         for s in sizes])
+    seeds = np.arange(16, dtype=np.uint32)
+    p = SimParams(ticks=2500, timeout_ticks=64)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    base = simulate_batch(g, wls, prof, p, seeds=seeds, max_ticks=2500 - 37)
+    shd = simulate_batch(g, wls, prof, p, seeds=seeds, max_ticks=2500 - 37,
+                         shard=True)
+    assert len({r.horizon for r in base}) > 1, "sweep must be heterogeneous"
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(a.completion_ticks(),
+                                      b.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} state"
+
+
+# ------------------------------------------------------------------------
+# device resolution + caching
+# ------------------------------------------------------------------------
+
+def test_resolve_devices_forms():
+    assert resolve_devices(None, False) is None
+    assert resolve_devices(0, False) is None          # 0/1: unsharded
+    assert resolve_devices(1, False) is None
+    with pytest.raises(ValueError, match="requested"):
+        resolve_devices(10**6, False)
+    if len(jax.devices()) >= 2:
+        devs = resolve_devices(2, False)
+        assert devs == tuple(jax.devices()[:2])
+        assert resolve_devices(True, False) == tuple(jax.devices())
+        assert resolve_devices(list(jax.devices()), False) \
+            == tuple(jax.devices())
+
+
+def test_cache_key_separates_shard_from_unsharded():
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    prof = TransportProfile.ai_full()
+    p = SimParams()
+    assert (_cache_key(g, prof, p, 2, True, "stats")
+            != _cache_key(g, prof, p, 2, True, "stats", shard=(0, 1)))
+    assert (_cache_key(g, prof, p, 2, True, "stats", shard=(0, 1))
+            != _cache_key(g, prof, p, 2, True, "stats", shard=(0, 1, 2)))
+    # and the budget stays traced on the sharded key too
+    assert (_cache_key(g, prof, SimParams(ticks=1), 2, True, "stats",
+                       shard=(0, 1))
+            == _cache_key(g, prof, SimParams(ticks=9), 2, True, "stats",
+                          shard=(0, 1)))
+
+
+@multi_device
+def test_sharded_runs_share_one_executable_across_horizons():
+    from repro.network.fabric import _RUN_CACHE
+    g, wls, masks, seeds = _mixed_batch()
+    p = SimParams(ticks=300)
+    prof = TransportProfile.ai_base()
+    simulate_batch(g, wls, prof, p, shard=True)
+    n0 = len(_RUN_CACHE)
+    simulate_batch(g, wls, prof, p, max_ticks=550, shard=True)
+    assert len(_RUN_CACHE) == n0, "a new horizon recompiled the sharded run"
+
+
+# ------------------------------------------------------------------------
+# driver fast path: the cond must be bitwise invisible
+# ------------------------------------------------------------------------
+
+def test_fastpath_non_chunk_multiple_budget_matches_golden_prefix():
+    """Budget 300 with chunk 128: two fast chunks + one masked remainder
+    must still be a bitwise prefix of the fixed-horizon golden."""
+    gold = np.load(GOLDEN)
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300),
+                 trace="full")
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:r.horizon])
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  gold["a_state_delivered"])
+
+
+def test_fastpath_chunk_alignment_is_bitwise_invisible():
+    """A budget hit exactly at a chunk boundary (all-fast chunks) equals
+    the same budget reached with a masked remainder (chunk misaligned):
+    the cond branches must be bitwise interchangeable."""
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 40)
+    prof = TransportProfile.ai_full()
+    budget = 384
+    aligned = simulate(g, wl, prof, SimParams(ticks=budget, chunk_ticks=128),
+                       trace="full")          # 3 fast chunks
+    residual = simulate(g, wl, prof, SimParams(ticks=budget, chunk_ticks=80),
+                        trace="full")         # 4 fast + masked remainder
+    h = min(aligned.horizon, residual.horizon)
+    np.testing.assert_array_equal(aligned.delivered_per_tick[:h],
+                                  residual.delivered_per_tick[:h])
+    np.testing.assert_array_equal(aligned.completion_ticks(),
+                                  residual.completion_ticks())
+
+
+def test_fastpath_frozen_lane_forces_masked_chunks_bitwise():
+    """Once one batch lane freezes (quiescent) while another runs, every
+    later chunk takes the masked body: the frozen lane must stay frozen
+    and the live lane must match its serial run bitwise."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    small = Workload.of([0, 1], [2, 3], 30)       # freezes after chunk 1
+    big = Workload.of([0, 1], [2, 3], 700)        # runs many chunks more
+    p = SimParams(ticks=2000)
+    prof = TransportProfile.ai_full()
+    r_small, r_big = simulate_batch(g, Workload.stack([small, big]), prof, p)
+    assert r_small.horizon < r_big.horizon
+    for wl, r in ((small, r_small), (big, r_big)):
+        solo = simulate(g, wl, prof, p)
+        assert solo.horizon == r.horizon
+        np.testing.assert_array_equal(solo.completion_ticks(),
+                                      r.completion_ticks())
+        assert _state_equal(solo.state, r.state)
+
+
+def test_event_slot_type_only_clear_keeps_stats_equal_full():
+    """The event-slot consume clears only the EVF_TYPE lane; stale
+    payload lanes must stay invisible — both trace tiers and the final
+    state (including ev_buf) agree on a congested REPS run."""
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=8)
+    wl = Workload.of(list(range(8)), [8 + i for i in range(8)], 250)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=640, timeout_ticks=64, ooo_threshold=24)
+    rf = simulate(g, wl, prof, p, trace="full")
+    rs = simulate(g, wl, prof, p, trace="stats")
+    np.testing.assert_array_equal(rs.completion_ticks(),
+                                  rf.completion_ticks())
+    assert _state_equal(rs.state, rf.state)
+    assert int(rf.state.trims) > 0, "run must exercise the NACK lanes"
