@@ -58,6 +58,15 @@ api_version 5 additions (the scale-out engine):
   ``scripts/bench_compare.py`` normalizes cross-box regression ratios
   by it so machine drift stops masquerading as engine regressions.
 
+api_version 6 additions (the fault-injection engine): ``fault_sweep``
+— the dynamic-fault grid (link flaps, gray links, mid-run death;
+``workloads.fault_sweep``) as one batch with per-scenario
+FaultSchedules riding the scenario axis, with in-bench gates: liveness
+(>= 1 surviving path -> every flow completes), degradation (faults
+cost ticks and fire timeouts), and the recovery-loop separation
+(``ev_eviction=True`` beats eviction-off under a permanent mid-run
+failure of a static path).
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
 accumulates across PRs.
 
@@ -154,25 +163,27 @@ def _fixed_scan_batched(g, wls, prof, p, masks, seeds, b: int):
 
     from repro.network import fabric
 
+    from repro.network.faults import FaultSchedule
+
     F = int(wls.src.shape[-1])
     step = fabric.make_step(g, prof, p, F)
     xs = jnp.arange(p.ticks, dtype=jnp.int32)
 
-    def scan_one(s0, wl_, dead):
+    def scan_one(s0, wl_, fault):
         def body(s, tick):
-            return step(s, tick, wl_, dead)
+            return step(s, tick, wl_, fault)
         return jax.lax.scan(body, s0, xs)
 
     run = jax.jit(jax.vmap(scan_one), donate_argnums=(0,))
     init = jax.jit(jax.vmap(
         lambda w_, s_: fabric.init_state(g, w_, prof, p, s_)))
-    dead = jnp.asarray(masks)
+    fault = FaultSchedule.from_mask(jnp.asarray(masks))
     sds = jnp.asarray(seeds, jnp.uint32)
     sizes = np.asarray(wls.size)
 
     def call():
         s0 = init(wls, sds)
-        final, outs = run(s0, wls, dead)
+        final, outs = run(s0, wls, fault)
         final = jax.device_get(final)
         outs = jax.device_get(outs)
         return [
@@ -185,7 +196,7 @@ def _fixed_scan_batched(g, wls, prof, p, masks, seeds, b: int):
 
     def call_device_only():
         s0 = init(wls, sds)
-        jax.block_until_ready(run(s0, wls, dead))
+        jax.block_until_ready(run(s0, wls, fault))
 
     return call, call_device_only
 
@@ -213,13 +224,15 @@ def _seed_style_simulate(g, wl, prof, p, mask, seed):
 
     from repro.network import fabric
 
+    from repro.network.faults import FaultSchedule
+
     F = int(wl.src.shape[0])
     step = fabric.make_step(g, prof, p, F)
-    dead_const = jnp.asarray(mask)
+    fault_const = FaultSchedule.from_mask(jnp.asarray(mask))
 
     def scan_one(s0, wl_):
         def body(s, tick):
-            return step(s, tick, wl_, dead_const)
+            return step(s, tick, wl_, fault_const)
         return jax.lax.scan(body, s0, jnp.arange(p.ticks, dtype=jnp.int32))
 
     run = jax.jit(scan_one, donate_argnums=(0,))
@@ -238,7 +251,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 5,
+        "api_version": 6,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -324,6 +337,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
 
     results["profile_ablation"] = _profile_ablation(ticks)
     results["collective_sweep"] = _collective_sweep()
+    results["fault_sweep"] = _fault_sweep()
     results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
     results["calibration"] = _calibration()
     return results
@@ -500,6 +514,84 @@ def _collective_sweep(ticks: int = 1600) -> dict:
     }
 
 
+def _fault_sweep(ticks: int = 4000) -> dict:
+    """The dynamic-fault grid (workloads.fault_sweep: flaps, gray links,
+    a mid-run permanent death) as ONE ``simulate_batch`` call with the
+    per-scenario FaultSchedule riding the scenario axis, plus the
+    closed-recovery-loop separation experiment.
+
+    In-bench realism gates (a fault bench whose faults change nothing is
+    measuring nothing):
+
+    * every scenario keeps >= 1 healthy uplink, so every flow must
+      complete within the budget (the liveness invariant);
+    * fault scenarios must actually degrade (timeouts fire, completion
+      later than healthy);
+    * under a permanent mid-run failure pinned to a static path,
+      ``ev_eviction=True`` must complete while eviction-off must be
+      slower or stuck (the recovery loop separates).
+    """
+    from dataclasses import replace as _replace
+
+    from repro.core.lb.schemes import LBScheme
+    from repro.network import workloads
+    from repro.network.fabric import SimParams, Workload, simulate, \
+        simulate_batch
+    from repro.network.faults import FaultSchedule
+    from repro.network.profile import TransportProfile
+    from repro.network.topology import leaf_spine
+
+    g, wls, faults, exp = workloads.fault_sweep()
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=ticks, timeout_ticks=64, ooo_threshold=24)
+    run = lambda: simulate_batch(g, wls, prof, p, faults=faults)  # noqa: E731
+    t0 = time.perf_counter()
+    rs = run()
+    cold = time.perf_counter() - t0
+    warm = min(_timed(run) for _ in range(2))
+    names = exp["names"]
+    cts = {n: int(r.completion_tick()) for n, r in zip(names, rs)}
+    # liveness: >= 1 healthy uplink everywhere -> everything completes
+    assert all(ct > 0 for ct in cts.values()), cts
+    # the faults must bite: timeouts fire, completion degrades
+    assert rs[1].timeouts > 0 and cts["flap_1"] > cts["healthy"], cts
+
+    # recovery-loop separation: permanent mid-run death of a STATIC
+    # path; eviction-on must migrate off it and beat eviction-off
+    g2 = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl2 = Workload.of([0, 1, 2, 3], [4, 5, 6, 7], 150)
+    dead = FaultSchedule.healthy(g2.num_queues).flap(
+        int(g2.up1_table[0, 0]), 100)
+    off = TransportProfile.ai_full(lb=LBScheme.STATIC, name="static")
+    on = _replace(off, ev_eviction=True, rto_backoff=2.0,
+                  name="static_evict")
+    p2 = SimParams(ticks=ticks, timeout_ticks=64)
+    r_off = simulate(g2, wl2, off, p2, faults=dead)
+    r_on = simulate(g2, wl2, on, p2, faults=dead)
+    ct_on, ct_off = r_on.completion_tick(), r_off.completion_tick()
+    assert ct_on > 0, "eviction must migrate flows off the dead path"
+    assert r_on.ev_evictions > 0
+    assert ct_off == -1 or ct_on < ct_off, (ct_on, ct_off)
+
+    return {
+        "scenarios": len(names),
+        "ticks": ticks,
+        "sweep_cold_s": cold,
+        "sweep_warm_s": warm,
+        "scenarios_per_sec": len(names) / warm,
+        "completion_ticks": cts,
+        "timeouts": {n: int(r.timeouts) for n, r in zip(names, rs)},
+        "rtx_packets": {n: int(r.rtx_packets) for n, r in zip(names, rs)},
+        "ticks_degraded": {n: int(r.ticks_degraded)
+                           for n, r in zip(names, rs)},
+        "eviction_separation": {
+            "completion_evict_on": ct_on,
+            "completion_evict_off": ct_off,
+            "ev_evictions": int(r_on.ev_evictions),
+        },
+    }
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -535,6 +627,7 @@ def main() -> None:
 
     print(json.dumps(results, indent=2, sort_keys=True))
     cs = results["collective_sweep"]
+    fs = results["fault_sweep"]
     sh = results["sharded_sweep"]
     sh_line = (f"sharded sweep skipped ({sh['skipped']})" if "skipped" in sh
                else f"sharded sweep {sh['shard_speedup']:.2f}x on "
@@ -551,7 +644,12 @@ def main() -> None:
           f"{sh_line}; "
           f"collective grid ran {cs['scenarios']} scenarios at "
           f"{cs['scenarios_per_sec']:.2f}/s, INC tree-all-reduce completion "
-          f"ratio {cs['inc_tree_allreduce_ratio']}; wrote {out}")
+          f"ratio {cs['inc_tree_allreduce_ratio']}; fault grid "
+          f"{fs['scenarios']} scenarios at {fs['scenarios_per_sec']:.2f}/s, "
+          f"eviction separation "
+          f"{fs['eviction_separation']['completion_evict_on']} vs "
+          f"{fs['eviction_separation']['completion_evict_off']}; "
+          f"wrote {out}")
 
 
 if __name__ == "__main__":

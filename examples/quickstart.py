@@ -13,7 +13,9 @@ new operating point is a config sweep, not a code fork: this script runs
   [4] a mixed ROD+RUD profile showing the in-order delivery invariant,
   [5] a failure sweep batched into ONE compiled scan,
   [6] whole collectives (dep-scheduled) + in-network reduction,
-  [7] the adaptive-horizon engine: quiescence early-exit + trace tiers.
+  [7] the adaptive-horizon engine: quiescence early-exit + trace tiers,
+  [8] dynamic faults: a mid-run link flap + a gray link, survived by
+      the recovery loop (RTO backoff + path eviction, Sec 3.2.4).
 
 The engine runs every scenario on a chunked while-scan that EXITS as
 soon as the scenario is quiescent — a generous tick budget costs only
@@ -143,6 +145,32 @@ def main():
           f"(completion {r1.completion_tick()}); budget 5000: executed "
           f"{r2.horizon} — same executable, same bits")
     assert r1.completion_tick() == r2.completion_tick()
+
+    print("\n[8] dynamic faults: links that flap and gray-fail mid-run, "
+          "and the recovery loop that survives them")
+    # a FaultSchedule is a traced input like the workload: per-queue
+    # outage windows (dead while fail_at <= t < heal_at) + per-queue
+    # packet-loss probability; drops are SILENT (no NACK), recovery is
+    # the transport's job — RTO backoff, OOO loss inference, and EV
+    # (path) eviction off dead paths
+    from repro.network.faults import FaultSchedule
+    g = workloads.leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2, 3], [4, 5, 6, 7], 150)
+    ups = [int(g.up1_table[0, i]) for i in range(2)]
+    sched = (FaultSchedule.healthy(g.num_queues)
+             .flap(ups[0], 150, 500)       # uplink 0 flaps for 350 ticks
+             .lossy(ups[1], 0.05))         # uplink 1 drops 5% silently
+    prof = replace(TransportProfile.ai_full(lb=LBScheme.REPS),
+                   ev_eviction=True, rto_backoff=2.0, name="ai_full+rec")
+    r = simulate(g, wl, prof,
+                 SimParams(ticks=8000, timeout_ticks=64, ooo_threshold=24),
+                 faults=sched)
+    print(f"    completion tick {r.completion_tick()} (healthy fabric "
+          f"~{wl.size.max()}+): {r.timeouts} timeouts, "
+          f"{r.rtx_packets} rtx, {r.ev_evictions} evictions, "
+          f"{r.ticks_degraded} degraded ticks, "
+          f"{int(r.state.drops)} silent drops recovered")
+    assert r.completion_tick() != -1
 
 
 if __name__ == "__main__":

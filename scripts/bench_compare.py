@@ -54,6 +54,8 @@ METRICS = (
     ("scenarios_per_sec_batched", ("scenarios_per_sec_batched",)),
     ("collective_sweep.scenarios_per_sec",
      ("collective_sweep", "scenarios_per_sec")),
+    ("fault_sweep.scenarios_per_sec",
+     ("fault_sweep", "scenarios_per_sec")),
 )
 
 

@@ -29,6 +29,12 @@ python -m benchmarks.run --only headers
 echo "== paper bench smoke: collectives (dep lane + INC canary) =="
 python -m benchmarks.run --only collectives
 
+echo "== fault engine smoke: flap recovery + eviction escape =="
+# A mid-run link flap must be survived (timeouts fire, flows complete
+# after heal) and a permanent mid-run failure of a static path must be
+# escaped via EV eviction (repro.network.faults).
+python -m repro.network.faults
+
 echo "== sharded engine smoke: 4 virtual devices, bitwise parity =="
 # Fresh interpreter so the forced host-device split lands before jax
 # locks the backend; the smoke runs a ragged sharded batch and asserts

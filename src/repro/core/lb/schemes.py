@@ -58,12 +58,17 @@ class LBState:
     """Unified LB state; schemes use the fields they need. SoA over F flows.
 
     rr_ptr:    [F] int32  — round-robin pointer (RR_SLOTS / EVBITMAP)
-    reps_ring: [F, K] int32 — recycled EVs (REPS); -1 = empty slot
+    reps_ring: [F, K] int32 — recycled EVs (REPS); -1 = empty/evicted slot
     reps_head: [F] int32  — pop position
     reps_size: [F] int32  — entries available
     ev_set:    [F, K] int32 — candidate EV per slot (RR_SLOTS / EVBITMAP)
     cong_bits: [F, K] bool  — EVBITMAP congestion marks
     salt:      [F] uint32 — per-flow PRNG salt (OBLIVIOUS / fresh draws)
+    bad_ev:    [F, K] int32 — eviction blacklist ring (-1 = empty); only
+               mutated when the profile enables ``ev_eviction``
+    bad_n:     [F] int32  — evictions so far (ring write pointer + salt)
+    last_ev:   [F] int32  — EV of the flow's last injected packet (-1 =
+               none); the timeout-eviction target
     """
 
     rr_ptr: jax.Array
@@ -73,6 +78,9 @@ class LBState:
     ev_set: jax.Array
     cong_bits: jax.Array
     salt: jax.Array
+    bad_ev: jax.Array
+    bad_n: jax.Array
+    last_ev: jax.Array
 
     @staticmethod
     def create(f: int, k: int, seed: int | jax.Array = 0x5EED) -> "LBState":
@@ -92,6 +100,9 @@ class LBState:
             ev_set=slot_ev.astype(jnp.int32),
             cong_bits=jnp.zeros((f, k), jnp.bool_),
             salt=_mix32(flows + seed * jnp.uint32(2654435761)),
+            bad_ev=jnp.full((f, k), -1, jnp.int32),
+            bad_n=jnp.zeros((f,), jnp.int32),
+            last_ev=jnp.full((f,), -1, jnp.int32),
         )
 
 
@@ -128,7 +139,11 @@ def select_ev(state: LBState, scheme: LBScheme, psn: jax.Array,
         fresh = (_mix32(state.salt ^ _mix32(psn.astype(jnp.uint32) *
                                             jnp.uint32(2246822519)))
                  % EV_SPACE).astype(jnp.int32)
-        ev = jnp.where(has, recycled, fresh)
+        # an evicted ring entry is tombstoned to -1 (see LBPolicy.evict);
+        # consume the slot but substitute a fresh draw. Recycled entries
+        # are always real EVs (>= 0) when eviction is off, so this select
+        # is bitwise the pre-eviction one there.
+        ev = jnp.where(has & (recycled >= 0), recycled, fresh)
         return replace(
             state,
             reps_head=jnp.where(has, (state.reps_head + 1) % K, state.reps_head),
@@ -153,19 +168,30 @@ def _pick_lane(hot: jax.Array, vals: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(hot, vals[None, :], 0), axis=1)
 
 
+def _in_blacklist(st: LBState, ev: jax.Array) -> jax.Array:
+    """[F] bool — is each flow's ``ev`` currently on its blacklist?"""
+    return ((st.bad_ev == ev[:, None]) & (st.bad_ev >= 0)).any(axis=1)
+
+
 @jax.tree_util.register_static
 @dataclass(frozen=True)
 class LBPolicy:
     """One LB scheme as a pluggable policy object for the fabric engine.
 
     The engine composes the tick from `on_ack` (path feedback over the
-    control-event lanes, densified per flow where the scheme allows) and
-    `select` (per-flow EV choice); `static_ev` is the single-path pick
-    used for ROD flows in mixed-delivery profiles. The bodies are the
-    scheme dispatch the engine used to inline — bitwise-parity preserved.
+    control-event lanes, densified per flow where the scheme allows),
+    `select` (per-flow EV choice) and — when the profile enables the
+    recovery loop — `evict` (blacklist an EV implicated by a timeout or
+    trim NACK, purge it from the scheme's circulating state, and steer
+    future draws away from it). `static_ev` is the single-path pick used
+    for ROD flows in mixed-delivery profiles. The bodies are the scheme
+    dispatch the engine used to inline — bitwise-parity preserved; with
+    ``evict=False`` (the default) every eviction lane is statically
+    elided.
     """
 
     scheme: LBScheme
+    evict_enabled: bool = False
 
     def create(self, f: int, k: int, seed) -> LBState:
         return LBState.create(f, k, seed)
@@ -199,11 +225,64 @@ class LBPolicy:
 
     def select(self, st: LBState, psn: jax.Array,
                tick: jax.Array) -> tuple[LBState, jax.Array]:
-        return select_ev(st, self.scheme, psn, tick)
+        st2, ev = select_ev(st, self.scheme, psn, tick)
+        if self.evict_enabled:
+            # steer draws away from the blacklist: a selected EV that is
+            # currently blacklisted is re-mixed once. One round suffices
+            # in practice (K blacklisted values out of EV_SPACE=2**16);
+            # a colliding re-mix just behaves like the pre-eviction draw.
+            bad = _in_blacklist(st, ev)
+            alt = (_mix32(ev.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+                          ^ st.salt) % EV_SPACE).astype(jnp.int32)
+            ev = jnp.where(bad, alt, ev)
+        return st2, ev
 
     def static_ev(self, st: LBState) -> jax.Array:
         """The flow's pinned single-path EV (ROD lanes)."""
         return st.ev_set[:, 0]
+
+    def evict(self, st: LBState, ev: jax.Array,
+              valid: jax.Array) -> LBState:
+        """Blacklist ``ev`` for flows with ``valid`` set and purge it
+        from the scheme's circulating state: matching ``ev_set`` slots
+        are re-rolled to fresh draws (steered off the blacklist) and
+        matching REPS recycle-ring entries are tombstoned to -1 (the
+        select path substitutes a fresh draw when it pops one), so REPS
+        self-clocking composes instead of resurrecting the dead path.
+
+        ev, valid: [F]. Only called by the engine when the profile has
+        ``ev_eviction=True``.
+        """
+        F, K = st.ev_set.shape
+        # push into the blacklist ring (overwrites the oldest entry)
+        pos = st.bad_n % K
+        hot = (jnp.arange(K)[None, :] == pos[:, None]) & valid[:, None]
+        bad_ev = jnp.where(hot, ev[:, None], st.bad_ev)
+        bad_n = st.bad_n + valid.astype(jnp.int32)
+        # re-roll ev_set slots that carry the evicted EV; the fresh value
+        # is salted by the eviction count so repeated evictions of one
+        # slot keep exploring, and re-mixed once if it lands on the
+        # (updated) blacklist
+        slot_match = (st.ev_set == ev[:, None]) & valid[:, None]
+        fresh = (_mix32(st.salt[:, None]
+                        ^ _mix32((bad_n[:, None] * K +
+                                  jnp.arange(K)[None, :]).astype(jnp.uint32)
+                                 * jnp.uint32(0x85EBCA77)))
+                 % EV_SPACE).astype(jnp.int32)
+        fresh_bad = ((bad_ev[:, :, None] == fresh[:, None, :])
+                     & (bad_ev[:, :, None] >= 0)).any(axis=1)
+        fresh = jnp.where(
+            fresh_bad,
+            (_mix32(fresh.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+                    ^ st.salt[:, None]) % EV_SPACE).astype(jnp.int32),
+            fresh)
+        ev_set = jnp.where(slot_match, fresh, st.ev_set)
+        # tombstone matching REPS recycle entries (do NOT touch head/size:
+        # ring arithmetic stays intact; pops skip via the select path)
+        ring_match = (st.reps_ring == ev[:, None]) & valid[:, None]
+        reps_ring = jnp.where(ring_match, -1, st.reps_ring)
+        return replace(st, bad_ev=bad_ev, bad_n=bad_n, ev_set=ev_set,
+                       reps_ring=reps_ring)
 
 
 def commit_selection(old: LBState, new: LBState, injected: jax.Array) -> LBState:

@@ -104,6 +104,12 @@ DEFAULT_MTU = 4096
 EV_BITS = 16
 EV_SPACE = 1 << EV_BITS
 
+#: Sentinel tick meaning "never" in fault-schedule lanes (int32 max, so
+#: `tick < NEVER_TICK` is always true for any reachable simulator tick).
+#: A statically-failed queue is `fail_at=0, heal_at=NEVER_TICK`; a healthy
+#: one is `fail_at=NEVER_TICK` (see repro.network.faults.FaultSchedule).
+NEVER_TICK = 2 ** 31 - 1
+
 #: SACK bitmap width carried in ACK packets (Sec. 3.2.5).
 SACK_BITMAP_BITS = 64
 

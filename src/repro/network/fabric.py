@@ -87,11 +87,12 @@ import numpy as np
 
 from repro.core import inc, pds
 from repro.core.cms.nscc import NSCCParams
-from repro.core.lb.schemes import LBPolicy, LBScheme, LBState
+from repro.core.lb.schemes import LBPolicy, LBScheme, LBState, _mix32
 from repro.core.lb.schemes import _pick_lane as _pick
 from repro.core.types import TransportMode
 from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
+from repro.network.faults import FaultSchedule, as_schedule, loss_threshold
 from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
                                    make_cc_policy)
 from repro.network.topology import QueueGraph, Stage
@@ -249,6 +250,16 @@ class SimState:
     #: (go-back-N rejects; NOT duplicates — counted separately from dups)
     rod_rejects: jax.Array  # [] int32
     retransmits: jax.Array  # [] int32
+    #: per-flow retransmission timeout, in ticks. Constant at
+    #: ``SimParams.timeout_ticks`` unless the profile sets
+    #: ``rto_backoff > 1``: then each timeout multiplies it (capped at
+    #: ``rto_max_scale`` x base) and any ACK resets it.
+    rto: jax.Array          # [F] int32
+    #: recovery-loop counters (streamed: O(1) carry, present in both
+    #: trace tiers via SimResult.timeouts / .ev_evictions / ...)
+    timeouts: jax.Array       # [] int32 RTO expiries (incl. ROD rewinds)
+    ev_evictions: jax.Array   # [] int32 EVs blacklisted by the LB policy
+    ticks_degraded: jax.Array  # [] int32 ticks with >= 1 link dead
 
 
 def _first_set_bit(ring: jax.Array) -> jax.Array:
@@ -324,6 +335,9 @@ def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
         trims=jnp.int32(0), drops=jnp.int32(0), dups=jnp.int32(0),
         inc_reduced=jnp.int32(0), inc_emits=jnp.int32(0),
         rod_rejects=jnp.int32(0), retransmits=jnp.int32(0),
+        rto=jnp.full((F,), p.timeout_ticks, jnp.int32),
+        timeouts=jnp.int32(0), ev_evictions=jnp.int32(0),
+        ticks_degraded=jnp.int32(0),
     )
 
 
@@ -349,7 +363,8 @@ def _rank_within(target: jax.Array, valid: jax.Array,
     return pos, rank
 
 
-def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
+def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
+              lossy: bool = False):
     """Build the per-tick transition function for one transport profile.
 
     The tick is composed from the profile's pluggable policy objects: a
@@ -360,9 +375,14 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
     CACK advance, and their receiver accepts only the next expected PSN;
     RUD/RUDI flows keep spray + selective-retransmit semantics.
 
-    The returned ``step(s, tick, wl, dead)`` takes the workload and the
-    per-queue failure mask as *traced* arguments so one compiled step
+    The returned ``step(s, tick, wl, fault)`` takes the workload and the
+    per-queue fault schedule as *traced* arguments so one compiled step
     serves every scenario of a sweep (and vmaps over a scenario axis).
+    ``lossy`` is the one schedule-derived STATIC: the gray-link loss
+    draw (two hash rounds per enqueue lane per tick) is only compiled
+    in when the dispatching schedule has a nonzero ``loss_p`` lane, so
+    loss-free runs — every pre-fault-engine call site — pay nothing
+    for it.
     """
     rt = RoutingTables(g)
     Q = g.num_queues
@@ -386,12 +406,25 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
     # an all-ROD profile is single-path by definition (spec: ordered
     # delivery forbids spraying); mixed profiles spray the RUD lanes and
     # pin the ROD lanes to their static EV below
-    lb_pol = LBPolicy(LBScheme.STATIC if all_rod else profile.lb)
+    lb_pol = LBPolicy(LBScheme.STATIC if all_rod else profile.lb,
+                      evict_enabled=profile.ev_eviction)
+    # recovery-loop statics: with the defaults (rto_backoff=1.0,
+    # ev_eviction=False) every gated lane below is elided and the
+    # compiled tick is exactly the pre-fault-engine one
+    backoff_on = profile.rto_backoff != 1.0
+    evict_on = profile.ev_eviction
+    rto_cap = int(p.timeout_ticks) * int(profile.rto_max_scale)
+    lane_ids = jnp.arange(Q + F, dtype=jnp.uint32)
 
-    def step(s: SimState, tick: jax.Array, wl: Workload, dead: jax.Array):
+    def step(s: SimState, tick: jax.Array, wl: Workload,
+             fault: FaultSchedule):
         flow_src = wl.src
         flow_dst = wl.dst
         slot = tick % D
+        # fault lanes -> this tick's dead-queue mask. The static failed=
+        # mask degenerates to fail_at=0, heal_at=NEVER_TICK, making this
+        # window test bitwise the old constant mask.
+        dead = (fault.fail_at <= tick) & (tick < fault.heal_at)
 
         # ------------------------------------------------ 1. control events
         evs = s.ev_buf[slot]                                  # [E, 6]
@@ -449,6 +482,23 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
 
         # progress clock: any ACK freshens the flow
         last_progress = jnp.where(has_ack, tick, s.last_progress)
+        # per-flow RTO lane: an ACK resets backed-off timeouts to base.
+        # With rto_backoff == 1.0 the lane is never mutated (constant ==
+        # timeout_ticks), so every predicate on it compiles to the old
+        # fixed-constant comparison.
+        rto = (jnp.where(has_ack, jnp.int32(p.timeout_ticks), s.rto)
+               if backoff_on else s.rto)
+        if evict_on:
+            # trim NACKs implicate the path EV they carry: collect one
+            # per flow for the eviction hook in section 9. OOO NACKs are
+            # receiver gap reports, not path evidence — excluded. ROD
+            # lanes are excluded too (an ordered flow's static path must
+            # not churn on congestion; it evicts on timeout instead).
+            hot_tnack = hot_nack & (et == EV_NACK)[None, :]
+            nack_ev = jnp.max(jnp.where(hot_tnack, ee[None, :], -1), axis=1)
+            nack_evict = hot_tnack.any(axis=1)
+            if any_rod:
+                nack_evict = nack_evict & ~rod_mask
 
         # ACK'd PSNs can't be pending retransmit anymore (rtx was already
         # shifted by the fused op, so offsets are relative to the new base)
@@ -527,13 +577,21 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             has_rtx = jnp.zeros((F,), jnp.bool_)
         elif mixed_rod:
             has_rtx = has_rtx & ~rod_mask
+        # Shared RTO time predicate. Hoisting ONLY the clock comparison is
+        # bitwise-safe for both consumers (ROD rewind here, RUD stall in
+        # section 9): rewind mutates last_progress solely on ROD lanes,
+        # which section 9 masks back out, and `inflight` — which injection
+        # DOES mutate between the two sites — stays site-local.
+        overdue = tick - last_progress > rto
         # ROD go-back-N: on NACK or timeout, rewind next_psn to base
         next_psn = s.next_psn
+        timeout_rod = jnp.zeros((F,), jnp.bool_)
         if any_rod:
-            timeout_rod = (inflight > 0) & (tick - last_progress > p.timeout_ticks)
+            timeout_rod = (inflight > 0) & overdue
             rewind = rod_gbn | timeout_rod
             if mixed_rod:
                 rewind = rewind & rod_mask
+                timeout_rod = timeout_rod & rod_mask
             next_psn = jnp.where(rewind, src_track.base.astype(jnp.int32), next_psn)
             inflight = jnp.where(rewind, 0, inflight)
             last_progress = jnp.where(rewind, tick, last_progress)
@@ -581,6 +639,12 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             lambda a, b: jnp.where(
                 commit.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
             lbs, lbs2)
+        if evict_on:
+            # remember each flow's most recent EV: the path a later RTO
+            # expiry implicates (covers ROD lanes, whose pinned EV never
+            # passes through commit_selection)
+            lbs = replace(lbs, last_ev=jnp.where(
+                injected, ev_sel.astype(jnp.int32), lbs.last_ev))
         inj_q = rt.injection_queue(flow_src, flow_dst, ev_sel)
         inflight = inflight + injected.astype(jnp.int32)
         cc_st = cc_pol.on_inject(cc_st, injected)
@@ -699,9 +763,23 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
         cand_meta = jnp.concatenate([pm, jnp.zeros((F,), jnp.int32)])
         cand_ts = jnp.concatenate([pt, jnp.full((F,), 1, jnp.int32) * tick])
         cvalid = cand_q >= 0
-        # failed links (traced mask): packets routed into them vanish
-        is_dead = dead[jnp.where(cvalid, cand_q, 0)] & cvalid
+        safe_cq = jnp.where(cvalid, cand_q, 0)
+        # failed links (traced window mask): packets routed into them vanish
+        is_dead = dead[safe_cq] & cvalid
         cvalid = cvalid & ~is_dead
+        # gray links: counter-based per-packet loss draw hashed from
+        # (scenario seed, tick, enqueue lane) — stateless, so the stream
+        # is reproducible across batch/shard/chunk boundaries. The draw
+        # is only compiled in when the dispatching schedule has nonzero
+        # loss_p (`lossy` static): loss-free runs pay nothing for it.
+        if lossy:
+            u = _mix32(_mix32(tick.astype(jnp.uint32)
+                              ^ fault.seed * jnp.uint32(0x9E3779B1))
+                       ^ lane_ids * jnp.uint32(0x85EBCA77))
+            is_lost = cvalid & (u < loss_threshold(fault.loss_p)[safe_cq])
+            cvalid = cvalid & ~is_lost
+        else:
+            is_lost = jnp.zeros_like(cvalid)
         pos, _ = _rank_within(cand_q, cvalid, q_len)
         fits = cvalid & (pos < C)
         overflow = cvalid & ~fits
@@ -724,9 +802,11 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             trims = s.trims
             drops = s.drops + overflow.sum(dtype=jnp.int32)
             nack_mask = jnp.zeros_like(overflow)
-        # failed links drop silently: no trim header, no NACK — only
-        # timeout / EV-based inference recovers (Sec. 3.2.4 config drops)
-        drops = drops + is_dead.sum(dtype=jnp.int32)
+        # failed + gray links drop silently: no trim header, no NACK —
+        # only timeout / EV-based inference recovers (Sec. 3.2.4 config
+        # and corruption drops)
+        drops = drops + is_dead.sum(dtype=jnp.int32) \
+            + is_lost.sum(dtype=jnp.int32)
 
         # ------------------------------------------- 8. schedule control TC
         out_slot = (tick + p.ack_return_ticks) % D
@@ -765,9 +845,17 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             axis=-1))
 
         # ------------------------------------------------- 9. timeouts + QA
+        timeout_fire = timeout_rod  # ROD rewinds already counted as expiries
         if not all_rod:
-            stalled = (inflight > 0) & (tick - last_progress > p.timeout_ticks) \
-                & ~done
+            # A flow needs the RTO not only while packets are (believed)
+            # in flight but whenever sent PSNs are unacked with nothing
+            # left to trigger recovery: after a silent loss (dead/gray
+            # link) the last ACK can drain `inflight` to 0 with gaps
+            # still open, no rtx pending and next_psn == size — without
+            # the `unacked` term the flow deadlocks there forever (the
+            # terminal phase of every flap scenario).
+            unacked = src_track.base.astype(jnp.int32) < next_psn
+            stalled = ((inflight > 0) | unacked) & overdue & ~done
             if mixed_rod:
                 stalled = stalled & ~rod_mask  # ROD timeouts rewind instead
             rtx = _set_own_bit(rtx, jnp.zeros((F,), jnp.int32),
@@ -778,7 +866,48 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             inflight = jnp.where(stalled, 0, inflight)
             last_progress = jnp.where(stalled, tick, last_progress)
             cc_st = cc_pol.on_timeout(cc_st, stalled)
+            timeout_fire = timeout_fire | stalled
         cc_st = cc_pol.end_of_tick(cc_st, tick)
+
+        # ---------------------------------------- 10. recovery loop lanes
+        # (both arms statically gated: default profiles compile the exact
+        # pre-fault-engine tick)
+        if backoff_on:
+            # exponential RTO backoff on expiry, capped: under a long
+            # outage repeated timeouts space out instead of hammering the
+            # dead window; any ACK resets to base (section 1).
+            rto = jnp.where(
+                timeout_fire,
+                jnp.minimum(
+                    (rto.astype(jnp.float32)
+                     * jnp.float32(profile.rto_backoff)).astype(jnp.int32),
+                    jnp.int32(rto_cap)),
+                rto)
+        if evict_on:
+            # close the loop: a trim NACK implicates the exact EV it
+            # carries (any scheme); an RTO expiry implicates the flow's
+            # last-used EV — exact ONLY where selection is pinned
+            # (STATIC scheme, incl. the all-ROD pin, and ROD lanes of
+            # mixed profiles). Sprayed lanes take no timeout eviction:
+            # `last_ev` there is just the most recent random draw, so
+            # the guess mostly blacklists healthy EVs and tombstones
+            # REPS's known-good recycle ring (observed strictly worse
+            # than no eviction on a half-dead fabric) — and spraying
+            # escapes dead paths by construction anyway.
+            if lb_pol.scheme == LBScheme.STATIC:
+                timeout_evict = timeout_fire
+            elif mixed_rod:
+                timeout_evict = timeout_fire & rod_mask
+            else:
+                timeout_evict = jnp.zeros((F,), jnp.bool_)
+            evict_ev = jnp.where(nack_evict, nack_ev, lbs.last_ev)
+            evict_valid = (nack_evict | timeout_evict) & (evict_ev >= 0)
+            lbs = lb_pol.evict(lbs, evict_ev, evict_valid)
+            ev_evictions = s.ev_evictions + evict_valid.sum(dtype=jnp.int32)
+        else:
+            ev_evictions = s.ev_evictions
+        timeouts = s.timeouts + timeout_fire.sum(dtype=jnp.int32)
+        ticks_degraded = s.ticks_degraded + dead.any().astype(jnp.int32)
 
         ns = SimState(
             q_pkt=q_pkt, q_head=q_head, q_len=q_len,
@@ -790,6 +919,8 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int):
             delivered=delivered_ctr, trims=trims, drops=drops, dups=dups,
             inc_reduced=inc_reduced, inc_emits=inc_emits,
             rod_rejects=rod_rejects, retransmits=retransmits,
+            rto=rto, timeouts=timeouts, ev_evictions=ev_evictions,
+            ticks_degraded=ticks_degraded,
         )
         out = {
             "delivered": fresh_f.astype(jnp.int32),
@@ -919,6 +1050,28 @@ class SimResult:
         d = self.delivered_per_tick[w0:min(w1, self.horizon)]
         return d.sum(axis=0) / float(w1 - w0)
 
+    # ---- fault / recovery counters (streamed in both trace tiers) -------
+    @property
+    def timeouts(self) -> int:
+        """RTO expiries over the run (RUD stalls + ROD timeout rewinds)."""
+        return int(self.state.timeouts)
+
+    @property
+    def rtx_packets(self) -> int:
+        """Retransmitted packets injected over the run."""
+        return int(self.state.retransmits)
+
+    @property
+    def ev_evictions(self) -> int:
+        """Path (EV) evictions performed by the recovery loop (0 unless
+        ``TransportProfile.ev_eviction`` is on)."""
+        return int(self.state.ev_evictions)
+
+    @property
+    def ticks_degraded(self) -> int:
+        """Executed ticks during which at least one link was dead."""
+        return int(self.state.ticks_degraded)
+
 
 # --------------------------------------------------------------------------
 # scenario engine: chunked while-scan driver + compiled-run cache
@@ -995,17 +1148,19 @@ _RUN_CACHE: dict = {}
 
 
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
-               F: int, batched: bool, trace: str = "stats", shard=None):
+               F: int, batched: bool, trace: str = "stats", shard=None,
+               lossy: bool = False):
     # the horizon (p.ticks) is a traced bound, not a compiled constant:
     # strip it so one executable serves every tick budget. `shard` is
     # None (unsharded) or the device-id tuple a sharded executable was
-    # built for (repro.network.shard).
+    # built for (repro.network.shard). `lossy` selects the executable
+    # with the gray-link loss draw compiled in (see make_step).
     return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace,
-            shard)
+            shard, lossy)
 
 
 def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
-               F: int, batched: bool, trace: str):
+               F: int, batched: bool, trace: str, lossy: bool = False):
     """(init, run) pair for one trace tier — UN-jitted, so the sharded
     engine (repro.network.shard) can wrap the same driver in shard_map
     before compiling. `_get_fns` jits and caches; behavior contract:
@@ -1034,7 +1189,7 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
     are unchanged: a stopped lane is frozen at its own chunk boundary,
     and a partial final chunk cannot overrun the budget.
     """
-    step = make_step(g, profile, p, F)
+    step = make_step(g, profile, p, F, lossy)
     chunk = int(p.chunk_ticks)
     if chunk < 1:
         raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
@@ -1054,7 +1209,7 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
                                         _stats_update)
 
     if trace == "stats":
-        def run(s0, wl, dead, budget, w0, w1):
+        def run(s0, wl, fault, budget, w0, w1):
             bshape = wl.src.shape[:-1]          # () serial, (B,) batched
 
             def chunk_scan(s, st, tick0, stop):
@@ -1069,7 +1224,7 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
                 def tick_body(c, i):
                     s, st = c
                     tick = tick0 + i
-                    ns, _ = stepf(s, tick, wl, dead)
+                    ns, _ = stepf(s, tick, wl, fault)
                     nst = statf(st, s, ns, wl, tick, w0, w1)
                     if stop is None:
                         return (ns, nst), None
@@ -1111,13 +1266,13 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
         return init_fn, run
 
     if trace == "full":
-        def run_chunk(s0, stopped, tick0, wl, dead, budget):
+        def run_chunk(s0, stopped, tick0, wl, fault, budget):
             def chunk_scan(s0, stop):
                 # stop=None -> the select-free fast body (see the stats
                 # tier: one tick body keeps the bitwise contract)
                 def tick_body(s, i):
                     tick = tick0 + i
-                    ns, out = stepf(s, tick, wl, dead)
+                    ns, out = stepf(s, tick, wl, fault)
                     if stop is None:
                         return ns, out
                     live = (tick < budget) & ~stop
@@ -1138,19 +1293,19 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
 
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
-             F: int, batched: bool, trace: str):
+             F: int, batched: bool, trace: str, lossy: bool = False):
     """Jitted + cached (init, run) pair — see `_build_fns` for the
     driver contract. Both runs donate the carry."""
-    key = _cache_key(g, profile, p, F, batched, trace)
+    key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy)
     fns = _RUN_CACHE.get(key)
     if fns is None:
-        init_fn, run = _build_fns(g, profile, p, F, batched, trace)
+        init_fn, run = _build_fns(g, profile, p, F, batched, trace, lossy)
         fns = (jax.jit(init_fn), jax.jit(run, donate_argnums=(0,)))
         _RUN_CACHE[key] = fns
     return fns
 
 
-def _run_full_host(run_chunk, s0, wl, dead, budget: int, chunk: int,
+def _run_full_host(run_chunk, s0, wl, fault, budget: int, chunk: int,
                    batch: "int | None"):
     """Drive the trace="full" chunk executable from the host: run chunks
     until every scenario is quiescent or the budget is spent, buffering
@@ -1170,7 +1325,7 @@ def _run_full_host(run_chunk, s0, wl, dead, budget: int, chunk: int,
     chunks: list = []
     tick0 = 0
     while True:
-        s, stopped, outs = run_chunk(s, stopped, jnp.int32(tick0), wl, dead,
+        s, stopped, outs = run_chunk(s, stopped, jnp.int32(tick0), wl, fault,
                                      jnp.int32(budget))
         chunks.append(jax.device_get(outs))
         tick0 += chunk
@@ -1318,7 +1473,7 @@ def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
 def simulate(g: QueueGraph, wl: Workload,
              profile: "TransportProfile | SimParams | None" = None,
              p: "SimParams | None" = None, *,
-             seed: int = DEFAULT_SEED, failed=None,
+             seed: int = DEFAULT_SEED, failed=None, faults=None,
              trace: str = "stats", max_ticks: "int | None" = None,
              goodput_window: "tuple[int, int] | None" = None) -> SimResult:
     """Run one scenario for at most ``max_ticks`` (default p.ticks),
@@ -1328,6 +1483,11 @@ def simulate(g: QueueGraph, wl: Workload,
     profile: the transport composition (defaults to ai_full()). Passing a
              SimParams here takes the deprecated pre-profile path.
     failed:  queue ids (tuple) or [Q] bool mask of dead links.
+    faults:  a [Q] :class:`~repro.network.faults.FaultSchedule` — link
+             flaps and gray (lossy) links with per-queue timing. Mutually
+             exclusive with ``failed`` (which is sugar for the static
+             ``from_mask`` schedule). Traced: sweeping schedules reuses
+             the executable.
     trace:   "stats" (default — streaming stat lanes only, one device
              program) or "full" (dense per-tick lanes, chunk-buffered).
     max_ticks: plain tick-budget bound; traced, so sweeping it reuses
@@ -1340,16 +1500,20 @@ def simulate(g: QueueGraph, wl: Workload,
     budget = int(p.ticks if max_ticks is None else max_ticks)
     F = int(wl.src.shape[0])
     profile.delivery_modes(F)  # validate per-flow tuples early
-    init, run = _get_fns(g, profile, p, F, batched=False, trace=trace)
+    fault = as_schedule(g.num_queues, failed, faults)
+    if fault is None:
+        fault = FaultSchedule.from_mask(_failed_to_mask(g, failed))
+    lossy = bool(np.asarray(fault.loss_p).any())
+    init, run = _get_fns(g, profile, p, F, batched=False, trace=trace,
+                         lossy=lossy)
     s0 = init(wl, jnp.uint32(seed))
-    dead = jnp.asarray(_failed_to_mask(g, failed))
     if trace == "stats":
         w0, w1 = _window_bounds(goodput_window, budget)
-        final, st, horizon = run(s0, wl, dead, jnp.int32(budget),
+        final, st, horizon = run(s0, wl, fault, jnp.int32(budget),
                                  jnp.int32(w0), jnp.int32(w1))
         return _stats_result(jax.device_get(final), jax.device_get(st),
                              wl.size, int(horizon), budget, goodput_window)
-    final, outs, horizon = _run_full_host(run, s0, wl, dead, budget,
+    final, outs, horizon = _run_full_host(run, s0, wl, fault, budget,
                                           p.chunk_ticks, batch=None)
     return _full_result(jax.device_get(final), outs, wl.size,
                         int(horizon[0]), budget)
@@ -1381,27 +1545,29 @@ def _split_full_results(final, outs, sizes, horizon, budget,
     ]
 
 
-def _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
+def _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
                goodput_window, devices=None) -> "list[SimResult]":
     if devices is not None:
         from repro.network import shard
-        return shard.run_sharded(g, wls, profile, p, dead, seeds, trace,
+        return shard.run_sharded(g, wls, profile, p, fault, seeds, trace,
                                  budget, goodput_window, devices)
     B, F = wls.src.shape
     profile.delivery_modes(F)
-    init, run = _get_fns(g, profile, p, F, batched=True, trace=trace)
+    lossy = bool(np.asarray(fault.loss_p).any())
+    init, run = _get_fns(g, profile, p, F, batched=True, trace=trace,
+                         lossy=lossy)
     s0 = init(wls, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
         w0, w1 = _window_bounds(goodput_window, budget)
-        final, st, horizon = run(s0, wls, dead, jnp.int32(budget),
+        final, st, horizon = run(s0, wls, fault, jnp.int32(budget),
                                  jnp.int32(w0), jnp.int32(w1))
         final = jax.device_get(final)
         st = jax.device_get(st)
         horizon = np.asarray(horizon)
         return _split_stats_results(final, st, sizes, horizon, budget,
                                     goodput_window, B)
-    final, outs, horizon = _run_full_host(run, s0, wls, dead, budget,
+    final, outs, horizon = _run_full_host(run, s0, wls, fault, budget,
                                           p.chunk_ticks, batch=B)
     final = jax.device_get(final)
     return _split_full_results(final, outs, sizes, horizon, budget, B)
@@ -1409,7 +1575,7 @@ def _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
 
 def simulate_batch(g: QueueGraph, wls: Workload,
                    profile=None, p: "SimParams | None" = None, *,
-                   failed=None, seeds=None,
+                   failed=None, faults=None, seeds=None,
                    trace: str = "stats", max_ticks: "int | None" = None,
                    goodput_window: "tuple[int, int] | None" = None,
                    shard: bool = False, devices=None
@@ -1425,6 +1591,10 @@ def simulate_batch(g: QueueGraph, wls: Workload,
              is one call here and one compile per profile).
     failed:  optional per-scenario failed-queue spec: [B, Q] bool, one
              [Q] mask, or a queue-id tuple (broadcast to every scenario).
+    faults:  optional [B, Q] (or [Q], broadcast) FaultSchedule — dynamic
+             flap windows + gray-link loss per scenario. Mutually
+             exclusive with ``failed``; rides the scenario axis like
+             workloads and seeds (traced, shard-compatible).
     seeds:   optional [B] — per-scenario LB/EV seeds (default: the same
              DEFAULT_SEED every ``simulate`` call uses).
     trace / max_ticks / goodput_window: as in :func:`simulate`. The tick
@@ -1467,24 +1637,26 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     if seeds is None:
         seeds = np.full((B,), DEFAULT_SEED, np.uint32)
     seeds = jnp.asarray(seeds, jnp.uint32)
-    if failed is None:
-        dead = np.zeros((B, g.num_queues), bool)
-    else:
-        arr = np.asarray(failed)
-        if arr.ndim == 2:
-            # any 2-D array is a per-scenario mask (0/1 ints included —
-            # the pre-profile API accepted those)
-            dead = arr.astype(bool)
+    fault = as_schedule(g.num_queues, failed, faults, batch=B)
+    if fault is None:
+        if failed is None:
+            dead = np.zeros((B, g.num_queues), bool)
         else:
-            dead = np.broadcast_to(_failed_to_mask(g, failed),
-                                   (B, g.num_queues))
-    if dead.shape != (B, g.num_queues):
-        raise ValueError(f"failed mask must be [B={B}, Q={g.num_queues}], "
-                         f"got {dead.shape}")
-    dead = jnp.asarray(dead, bool)
+            arr = np.asarray(failed)
+            if arr.ndim == 2:
+                # any 2-D array is a per-scenario mask (0/1 ints included
+                # — the pre-profile API accepted those)
+                dead = arr.astype(bool)
+            else:
+                dead = np.broadcast_to(_failed_to_mask(g, failed),
+                                       (B, g.num_queues))
+        if dead.shape != (B, g.num_queues):
+            raise ValueError(f"failed mask must be [B={B}, "
+                             f"Q={g.num_queues}], got {dead.shape}")
+        fault = FaultSchedule.from_mask(jnp.asarray(dead, bool))
 
     if profiles is None:
-        return _run_batch(g, wls, profile, p, dead, seeds, trace, budget,
+        return _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
                           goodput_window, devices=devices)
 
     # per-scenario profiles: group scenarios by (static) profile and run
@@ -1503,11 +1675,12 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     for prof, idxs in groups.items():
         sel = np.asarray(idxs)
         sub_wls = jax.tree_util.tree_map(lambda a, s=sel: a[s], wls)
-        items.append((prof, idxs, sub_wls, dead[sel], seeds[sel]))
+        sub_fault = jax.tree_util.tree_map(lambda a, s=sel: a[s], fault)
+        items.append((prof, idxs, sub_wls, sub_fault, seeds[sel]))
 
     def _run_group(item):
-        prof, idxs, sub_wls, sub_dead, sub_seeds = item
-        return idxs, _run_batch(g, sub_wls, prof, p, sub_dead, sub_seeds,
+        prof, idxs, sub_wls, sub_fault, sub_seeds = item
+        return idxs, _run_batch(g, sub_wls, prof, p, sub_fault, sub_seeds,
                                 trace, budget, goodput_window,
                                 devices=devices)
 

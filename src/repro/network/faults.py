@@ -1,0 +1,229 @@
+"""Dynamic fault schedules: link flaps, gray (lossy) links, mid-run death.
+
+The engine's original failure model was a static per-scenario ``failed=``
+queue mask — links dead from tick 0 to the horizon, drops silent. At
+hyperscale the interesting regime is links that FLAP and GRAY-FAIL while
+traffic is in flight ("Datacenter Ethernet and RDMA: Issues at
+Hyperscale"), so the mask generalizes to a :class:`FaultSchedule`:
+
+* ``fail_at`` / ``heal_at`` — per-queue tick lanes bounding one outage
+  window per queue: the queue is dead exactly while
+  ``fail_at <= tick < heal_at``. ``fail_at = NEVER_TICK`` means always
+  healthy; ``heal_at = NEVER_TICK`` means the failure is permanent. The
+  static mask is the degenerate schedule ``fail_at=0, heal_at=NEVER``
+  (:meth:`FaultSchedule.from_mask`) and reproduces the old ``failed=``
+  semantics bit for bit.
+* ``loss_p`` — per-queue independent packet-loss probability (gray
+  links / corruption drops, Sec. 3.2.4's second "C"). Losses are drawn
+  from a counter-based hash of ``(seed, tick, enqueue lane)`` — no RNG
+  state in the carry — so the draw stream is reproducible across
+  batch/shard/chunk boundaries and identical between ``simulate`` and
+  ``simulate_batch`` lanes.
+
+All lanes are TRACED inputs (like workloads and seeds): sweeping fault
+schedules never recompiles, and a ``[B, ...]``-stacked schedule rides the
+scenario axis of ``simulate_batch`` / ``shard=True`` like any other
+per-scenario input. Both kinds of fault drop packets silently (no trim
+header, no NACK); recovery is the transport's job — RTO (+ optional
+exponential backoff), OOO/EV loss inference, and LB path eviction (see
+``TransportProfile.ev_eviction`` and DESIGN.md "Fault model & recovery
+contract").
+
+``python -m repro.network.faults`` runs the recovery smoke used by
+``scripts/check.sh``: a mid-run flap must be survived (timeouts fire,
+the flow completes after heal) and a permanent mid-run failure must be
+escaped via path eviction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import NEVER_TICK
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Per-queue fault lanes for one scenario ([Q]) or a stacked
+    scenario batch ([B, Q]; ``seed`` is [] / [B]).
+
+    Build with :meth:`healthy` / :meth:`from_mask`, then layer faults
+    with :meth:`flap` / :meth:`lossy`; stack scenarios with
+    :meth:`stack`. Dead window: ``fail_at <= tick < heal_at``.
+    """
+
+    fail_at: jax.Array   # [.., Q] int32 first dead tick (NEVER = healthy)
+    heal_at: jax.Array   # [.., Q] int32 first live-again tick (NEVER = forever)
+    loss_p: jax.Array    # [.., Q] float32 per-packet loss probability
+    seed: jax.Array      # [..] uint32 loss-draw stream seed
+
+    # -- builders ---------------------------------------------------------
+    @staticmethod
+    def healthy(num_queues: int, batch: "int | None" = None,
+                seed: int = 0) -> "FaultSchedule":
+        """All-healthy lanes ([Q], or [batch, Q] when batch is given)."""
+        shape = (num_queues,) if batch is None else (batch, num_queues)
+        return FaultSchedule(
+            fail_at=jnp.full(shape, NEVER_TICK, jnp.int32),
+            heal_at=jnp.full(shape, NEVER_TICK, jnp.int32),
+            loss_p=jnp.zeros(shape, jnp.float32),
+            seed=jnp.full(shape[:-1], seed, jnp.uint32),
+        )
+
+    @staticmethod
+    def from_mask(mask, seed: int = 0) -> "FaultSchedule":
+        """The degenerate static schedule: queues set in ``mask`` (bool,
+        [Q] or [B, Q]) are dead from tick 0 forever — bitwise the old
+        ``failed=`` semantics."""
+        mask = jnp.asarray(mask, bool)
+        return FaultSchedule(
+            fail_at=jnp.where(mask, 0, NEVER_TICK).astype(jnp.int32),
+            heal_at=jnp.full(mask.shape, NEVER_TICK, jnp.int32),
+            loss_p=jnp.zeros(mask.shape, jnp.float32),
+            seed=jnp.full(mask.shape[:-1], seed, jnp.uint32),
+        )
+
+    # -- combinators (return a new schedule; queues are ids into [Q]) -----
+    def flap(self, queues, fail_at: int,
+             heal_at: int = NEVER_TICK) -> "FaultSchedule":
+        """Give ``queues`` the outage window [fail_at, heal_at). One
+        window per queue (a later flap overwrites an earlier one)."""
+        qs = np.atleast_1d(np.asarray(queues, np.int64))
+        hot = np.zeros(self.fail_at.shape[-1:], bool)
+        hot[qs] = True
+        hot = jnp.broadcast_to(jnp.asarray(hot), self.fail_at.shape)
+        return replace(
+            self,
+            fail_at=jnp.where(hot, jnp.int32(fail_at), self.fail_at),
+            heal_at=jnp.where(hot, jnp.int32(heal_at), self.heal_at),
+        )
+
+    def lossy(self, queues, p: float) -> "FaultSchedule":
+        """Make ``queues`` gray links dropping each packet w.p. ``p``."""
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"loss probability must be in [0, 1], got {p}")
+        qs = np.atleast_1d(np.asarray(queues, np.int64))
+        hot = np.zeros(self.loss_p.shape[-1:], bool)
+        hot[qs] = True
+        hot = jnp.broadcast_to(jnp.asarray(hot), self.loss_p.shape)
+        return replace(self, loss_p=jnp.where(hot, jnp.float32(p),
+                                              self.loss_p))
+
+    def with_seed(self, seed) -> "FaultSchedule":
+        return replace(self, seed=jnp.broadcast_to(
+            jnp.asarray(seed, jnp.uint32), self.seed.shape))
+
+    @staticmethod
+    def stack(scheds: "list[FaultSchedule]") -> "FaultSchedule":
+        """Stack per-scenario [Q] schedules into a [B, Q] batch."""
+        return jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *scheds)
+
+    # -- views ------------------------------------------------------------
+    @property
+    def num_queues(self) -> int:
+        return int(self.fail_at.shape[-1])
+
+    def dead_at(self, tick) -> jax.Array:
+        """[.., Q] bool — queues dead at ``tick`` (the engine's per-tick
+        derivation; exposed for tests/diagnostics)."""
+        t = jnp.asarray(tick, jnp.int32)
+        return (self.fail_at <= t) & (t < self.heal_at)
+
+
+def loss_threshold(loss_p: jax.Array) -> jax.Array:
+    """[.., Q] uint32 compare threshold for the counter-based loss draw:
+    a packet is lost iff its uniform hash u32 < threshold. p=0 maps to
+    threshold 0 (never — bitwise inert); p=1 maps to the largest float32
+    below 2**32 (loses all but ~1 in 2**24 draws; use a dead window for
+    hard cuts)."""
+    return (jnp.clip(loss_p, 0.0, 1.0) * jnp.float32(4294967040.0)
+            ).astype(jnp.uint32)
+
+
+def as_schedule(g_num_queues: int, failed, faults, batch: "int | None" = None,
+                ) -> FaultSchedule:
+    """Normalize the public (failed=, faults=) pair to one FaultSchedule
+    with [Q] (serial) or [batch, Q] leaves. Exactly one of the two may
+    be given; neither means all-healthy."""
+    if faults is not None:
+        if failed is not None:
+            raise ValueError("pass either failed= (static mask) or "
+                             "faults= (FaultSchedule), not both")
+        if not isinstance(faults, FaultSchedule):
+            raise TypeError(f"faults= must be a FaultSchedule, got "
+                            f"{type(faults).__name__}")
+        if faults.num_queues != g_num_queues:
+            raise ValueError(
+                f"fault schedule is over {faults.num_queues} queues but "
+                f"the topology has {g_num_queues}")
+        if batch is None:
+            if faults.fail_at.ndim != 1:
+                raise ValueError("serial simulate() takes a [Q] fault "
+                                 f"schedule, got {faults.fail_at.shape}")
+            return faults
+        if faults.fail_at.ndim == 1:
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (batch,) + a.shape), faults)
+        if faults.fail_at.shape[0] != batch:
+            raise ValueError(f"fault schedule batch axis is "
+                             f"{faults.fail_at.shape[0]}, expected {batch}")
+        return faults
+    return None  # caller falls back to the failed= mask path
+
+
+def _smoke() -> int:  # pragma: no cover — CLI smoke for scripts/check.sh
+    """Recovery canary: (1) a mid-run uplink flap is survived — timeouts
+    fire while the link is down, the flow completes after heal, and the
+    degraded-tick counter brackets the outage; (2) a PERMANENT mid-run
+    failure of a pinned static path is escaped via EV eviction (the
+    eviction-off twin stays stuck)."""
+    from dataclasses import replace as _rep
+
+    from repro.core.lb.schemes import LBScheme
+    # canonical class, NOT the __main__ copy this file becomes under -m
+    from repro.network.faults import FaultSchedule as FS
+    from repro.network.fabric import (SimParams, TransportProfile, Workload,
+                                      simulate)
+    from repro.network.topology import leaf_spine
+
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2, 3], [4, 5, 6, 7], 150)
+    p = SimParams(ticks=4000, timeout_ticks=64)
+    up = [int(g.up1_table[0, i]) for i in range(2)]
+
+    # 1) flap: both uplinks down over [120, 420) — no surviving path
+    #    during the window, full recovery after heal
+    flap = FS.healthy(g.num_queues).flap(up, 120, 420)
+    r = simulate(g, wl, TransportProfile.ai_full(), p, faults=flap)
+    ct = r.completion_tick()
+    assert ct > 420, f"flap scenario should finish after heal, got {ct}"
+    assert r.timeouts > 0, "outage must trigger RTO timeouts"
+    assert r.ticks_degraded == 300, r.ticks_degraded
+
+    # 2) permanent failure of a static path: eviction-on escapes,
+    #    eviction-off is stuck at the budget
+    dead = FS.healthy(g.num_queues).flap(up[0], 120)
+    off = TransportProfile.ai_full(lb=LBScheme.STATIC, name="static")
+    on = _rep(off, ev_eviction=True, name="static+evict")
+    r_off = simulate(g, wl, off, p, faults=dead)
+    r_on = simulate(g, wl, on, p, faults=dead)
+    ct_on = r_on.completion_tick()
+    assert ct_on != -1, "eviction must migrate flows off the dead path"
+    assert r_on.ev_evictions > 0
+    ct_off = r_off.completion_tick()
+    assert ct_off == -1 or ct_on < ct_off, (ct_on, ct_off)
+    print(f"fault smoke ok: flap survived (completion {ct}, "
+          f"{r.timeouts} timeouts, {r.ticks_degraded} degraded ticks); "
+          f"permanent failure escaped via {r_on.ev_evictions} evictions "
+          f"(completion {ct_on} vs eviction-off "
+          f"{'stuck' if ct_off == -1 else ct_off})")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(_smoke())

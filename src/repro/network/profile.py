@@ -95,6 +95,21 @@ class TransportProfile:
     #: with a ``Workload.red`` group id (see repro.core.inc). Static —
     #: INC-off profiles compile the exact pre-INC tick.
     inc: bool = False
+    #: retransmission-timeout backoff: each RTO that fires multiplies the
+    #: flow's timeout by this factor (capped at ``rto_max_scale`` x the
+    #: base ``SimParams.timeout_ticks``); any ACK resets it. 1.0 = fixed
+    #: RTO, bitwise the pre-fault-engine behavior (and compiled as such:
+    #: the backoff lanes are statically elided).
+    rto_backoff: float = 1.0
+    #: cap on the backoff, as a multiple of the base timeout.
+    rto_max_scale: int = 8
+    #: closed recovery loop: on RTO expiry (and on trim NACKs for sprayed
+    #: flows) the LB policy EVICTS the offending Entropy Value — it is
+    #: blacklisted, purged from the EV set / REPS recycle ring, and fresh
+    #: draws re-roll away from it — so flows migrate off dead paths
+    #: instead of re-rolling into them (SMaRTT-style path penalization).
+    #: Static: eviction-off profiles compile the exact pre-eviction tick.
+    ev_eviction: bool = False
     name: str = field(default="custom", compare=False)
 
     def __post_init__(self):
@@ -104,6 +119,12 @@ class TransportProfile:
                 tuple(DeliveryMode(m) for m in self.delivery))
         else:
             object.__setattr__(self, "delivery", DeliveryMode(self.delivery))
+        if self.rto_backoff < 1.0:
+            raise ValueError(f"rto_backoff must be >= 1.0 (got "
+                             f"{self.rto_backoff}); 1.0 disables backoff")
+        if self.rto_max_scale < 1:
+            raise ValueError(f"rto_max_scale must be >= 1, got "
+                             f"{self.rto_max_scale}")
 
     # -- named constructors (paper Sec. 2.2 profile table) ----------------
     @classmethod
@@ -139,8 +160,14 @@ class TransportProfile:
         d = (self.delivery.name if isinstance(self.delivery, DeliveryMode)
              else "per-flow[" + ",".join(m.name for m in self.delivery) + "]")
         inc = ", inc=on" if self.inc else ""
+        rec = ""
+        if self.rto_backoff != 1.0:
+            rec += (f", rto_backoff={self.rto_backoff:g}x"
+                    f"(cap {self.rto_max_scale}x)")
+        if self.ev_eviction:
+            rec += ", ev_eviction=on"
         return (f"{self.name}(cc={self.cc.name}, lb={self.lb.name}, "
-                f"delivery={d}{inc})")
+                f"delivery={d}{inc}{rec})")
 
 
 # ---------------------------------------------------------------------------

@@ -65,24 +65,25 @@ def resolve_devices(devices, shard: bool):
     return devs if len(devs) > 1 else None
 
 
-def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple):
+def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
+                 lossy: bool = False):
     """Jitted + cached (init, run) pair whose scenario axis is sharded
     over `devs`. Same driver as the unsharded batched engine, wrapped in
     shard_map before jit; cached beside it under the device-id tuple."""
     key = fabric._cache_key(g, profile, p, F, True, trace,
-                            shard=tuple(d.id for d in devs))
+                            shard=tuple(d.id for d in devs), lossy=lossy)
     fns = fabric._RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = fabric._build_fns(g, profile, p, F, batched=True,
-                                         trace=trace)
+                                         trace=trace, lossy=lossy)
         mesh = Mesh(np.array(devs), (_AXIS,))
         sc, rep = P(_AXIS), P()
         if trace == "stats":
-            # (s0, wl, dead, budget, w0, w1) -> (state, stats, horizon)
+            # (s0, wl, fault, budget, w0, w1) -> (state, stats, horizon)
             in_specs = (sc, sc, sc, rep, rep, rep)
             out_specs = (sc, sc, sc)
         else:
-            # (s0, stopped, tick0, wl, dead, budget)
+            # (s0, stopped, tick0, wl, fault, budget)
             #   -> (state, stopped, time-major out lanes [T, B, ...])
             in_specs = (sc, sc, rep, sc, sc, rep)
             out_specs = (sc, sc, P(None, _AXIS))
@@ -95,28 +96,33 @@ def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple):
     return fns
 
 
-def run_sharded(g, wls, profile, p, dead, seeds, trace: str, budget: int,
+def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
                 goodput_window, devs: tuple) -> "list[fabric.SimResult]":
     """One profile group's batch, sharded over `devs`. Called by
     ``fabric._run_batch`` — same inputs/outputs, bitwise-identical
-    per-scenario results."""
+    per-scenario results. ``fault`` is a [B, Q]-leaved FaultSchedule;
+    padding lanes get all-healthy schedules (inert, like their no-op
+    workloads)."""
+    from repro.network.faults import FaultSchedule
     from repro.network.workloads import pad_scenarios
 
     n = len(devs)
     B, F = wls.src.shape
     profile.delivery_modes(F)
+    lossy = bool(np.asarray(fault.loss_p).any())
     wls_p, pad = pad_scenarios(wls, n)
     if pad:
-        dead = jnp.concatenate(
-            [dead, jnp.zeros((pad, dead.shape[1]), bool)])
+        fault = jax.tree_util.tree_map(
+            lambda a, e: jnp.concatenate([a, e.astype(a.dtype)]),
+            fault, FaultSchedule.healthy(g.num_queues, batch=pad))
         seeds = jnp.concatenate(
             [seeds, jnp.full((pad,), fabric.DEFAULT_SEED, jnp.uint32)])
-    init, run = _sharded_fns(g, profile, p, F, trace, devs)
+    init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy)
     s0 = init(wls_p, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
         w0, w1 = fabric._window_bounds(goodput_window, budget)
-        final, st, horizon = run(s0, wls_p, dead, jnp.int32(budget),
+        final, st, horizon = run(s0, wls_p, fault, jnp.int32(budget),
                                  jnp.int32(w0), jnp.int32(w1))
         final = jax.device_get(final)
         st = jax.device_get(st)
@@ -124,7 +130,7 @@ def run_sharded(g, wls, profile, p, dead, seeds, trace: str, budget: int,
         return fabric._split_stats_results(final, st, sizes, horizon,
                                            budget, goodput_window, B)
     final, outs, horizon = fabric._run_full_host(
-        run, s0, wls_p, dead, budget, p.chunk_ticks, batch=B + pad)
+        run, s0, wls_p, fault, budget, p.chunk_ticks, batch=B + pad)
     final = jax.device_get(final)
     return fabric._split_full_results(final, outs, sizes, horizon, budget, B)
 

@@ -173,6 +173,51 @@ def failure_sweep(spines: int = 4, hosts_per_leaf: int = 8,
     }
 
 
+def fault_sweep(spines: int = 4, hosts_per_leaf: int = 8, size: int = 600,
+                flap_at: int = 150, heal_at: int = 1200, gray_p: float = 0.05):
+    """The dynamic-fault grid as one batch: per-scenario FaultSchedules
+    riding the scenario axis (flaps + gray links, repro.network.faults).
+
+    Six scenarios over cross-leaf pairs sharing leaf-0's uplinks:
+
+    0. healthy baseline
+    1. one uplink flaps over [flap_at, heal_at)
+    2. two uplinks flap, staggered (second offset by half the window)
+    3. one gray uplink losing ``gray_p`` of packets for the whole run
+    4. one gray uplink losing ``4 * gray_p`` (a badly corrupting link)
+    5. one uplink dies at ``flap_at`` and never heals
+
+    Every scenario keeps >= 1 healthy uplink at all times, so with a
+    sane transport ALL flows must complete (the liveness invariant
+    tests/check.sh lock). Returns (g, wls [6, F], faults [6, Q],
+    expectations).
+    """
+    from repro.network.faults import FaultSchedule
+
+    g = leaf_spine(leaves=2, spines=spines, hosts_per_leaf=hosts_per_leaf)
+    f = hosts_per_leaf
+    wl = Workload.of(list(range(f)), [f + i for i in range(f)], size)
+    ups = [int(g.up1_table[0, i]) for i in range(spines)]
+    mid = flap_at + (heal_at - flap_at) // 2
+    healthy = FaultSchedule.healthy(g.num_queues)
+    scheds = [
+        healthy,
+        healthy.flap(ups[0], flap_at, heal_at),
+        healthy.flap(ups[0], flap_at, heal_at).flap(ups[1], mid,
+                                                    mid + (heal_at - flap_at)),
+        healthy.lossy(ups[0], gray_p),
+        healthy.lossy(ups[0], min(1.0, 4 * gray_p)),
+        healthy.flap(ups[0], flap_at),
+    ]
+    names = ["healthy", "flap_1", "flap_2_staggered", f"gray_{gray_p:g}",
+             f"gray_{min(1.0, 4 * gray_p):g}", "dead_mid"]
+    wls = Workload.stack([wl] * len(scheds))
+    return g, wls, FaultSchedule.stack(scheds), {
+        "names": names,
+        "surviving_uplinks_min": spines - 2,  # scenario 2's worst moment
+    }
+
+
 def size_sweep(sizes, fan_in: int = 4):
     """Incast message-size sweep: same flow set, per-scenario sizes.
 

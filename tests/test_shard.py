@@ -183,6 +183,42 @@ def test_sharded_per_profile_groups_parity():
 
 
 @multi_device
+def test_sharded_fault_schedule_parity():
+    """Per-scenario FaultSchedules (flap / gray / permanent + recovery
+    knobs) ride the sharded scenario axis bitwise; the padding lanes the
+    ragged B=5 run adds are healthy and inert."""
+    from repro.network.faults import FaultSchedule
+
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    wls = Workload.stack(
+        [Workload.of([0, 1, 2, 3], [4, 5, 6, 7], s)
+         for s in (150, 90, 150, 150, 60)])
+    ups = [int(g.up1_table[0, i]) for i in range(2)]
+    scheds = FaultSchedule.stack([
+        FaultSchedule.healthy(g.num_queues),
+        FaultSchedule.healthy(g.num_queues).flap(ups, 120, 420),
+        FaultSchedule.healthy(g.num_queues).lossy(ups, 0.05).with_seed(3),
+        FaultSchedule.healthy(g.num_queues).flap(ups[0], 120),  # permanent
+        FaultSchedule.healthy(g.num_queues).lossy(ups[1], 0.2),
+    ])
+    from dataclasses import replace as _rep
+    prof = _rep(TransportProfile.ai_full(lb=LBScheme.REPS),
+                ev_eviction=True, rto_backoff=2.0, name="sweep")
+    p = SimParams(ticks=3000, timeout_ticks=64, ooo_threshold=24)
+    base = simulate_batch(g, wls, prof, p, faults=scheds)
+    shd = simulate_batch(g, wls, prof, p, faults=scheds, shard=True)
+    assert len(shd) == len(base) == 5
+    assert shd[1].ticks_degraded == 300
+    assert shd[3].ev_evictions > 0
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        np.testing.assert_array_equal(a.completion_ticks(),
+                                      b.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(a.state, b.state), f"scenario {i} state"
+
+
+@multi_device
 @pytest.mark.slow
 def test_sharded_wide_sweep_parity_four_devices():
     """The multi-device sweep: a 16-scenario heterogeneous-horizon batch
