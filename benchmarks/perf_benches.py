@@ -67,6 +67,18 @@ cost ticks and fire timeouts), and the recovery-loop separation
 (``ev_eviction=True`` beats eviction-off under a permanent mid-run
 failure of a static path).
 
+api_version 7 additions (the model-driven traffic engine):
+``model_sweep`` — the co-design grid (model x sharding layout x
+topology x transport profile), every operating point's per-step
+collective schedule derived from the REAL sharding rules
+(``repro.distributed.plan``), compiled to one dep-chained fabric
+workload (``repro.network.traffic``) and priced end-to-end (step time,
+tokens/sec) from ONE ``simulate_batch`` call over per-scenario graphs
+AND profiles. In-bench gates assert the axes actually separate: the
+fsdp_tp decode penalty vs the tp_only serving layout, the hpc-vs-ai
+transport separation on the oversubscribed fabric, and topology
+monotonicity.
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
 accumulates across PRs.
 
@@ -251,7 +263,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 6,
+        "api_version": 7,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -338,6 +350,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     results["profile_ablation"] = _profile_ablation(ticks)
     results["collective_sweep"] = _collective_sweep()
     results["fault_sweep"] = _fault_sweep()
+    results["model_sweep"] = _model_sweep()
     results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
     results["calibration"] = _calibration()
     return results
@@ -592,6 +605,68 @@ def _fault_sweep(ticks: int = 4000) -> dict:
     }
 
 
+def _model_sweep() -> dict:
+    """The model-driven co-design grid: 2 models x 2 sharding layouts x
+    2 topologies x 3 transport profiles at decode, every operating
+    point's collective schedule derived from the real sharding rules
+    and priced end-to-end from ONE ``simulate_batch`` call (scenarios
+    carry per-scenario graphs AND profiles; the engine groups them into
+    one executable per (topology, profile) pair).
+
+    In-bench separation gates (a co-design sweep whose axes don't move
+    the step time is measuring nothing):
+
+    * layout: at decode the fsdp_tp layout pays the ZeRO-3 param-gather
+      penalty — strictly slower than the tp_only serving layout at
+      EVERY (model, topology, profile) point;
+    * profile: on the oversubscribed fabric under fsdp_tp, the hpc
+      composition (packet-spray + in-order ROD delivery) prices the DP
+      gather stream strictly slower than the ai composition (RUD) —
+      the documented transport-driven step-time separation;
+    * topology: 2:1 oversubscription can only slow an fsdp_tp point
+      down (DP traffic crosses the spine; TP stays intra-leaf).
+    """
+    from repro.network import traffic
+
+    t0 = time.perf_counter()
+    pts = traffic.run_model_sweep()
+    elapsed = time.perf_counter() - t0
+
+    by = {(p["arch"], p["layout"], p["topology"], p["profile"]): p
+          for p in pts}
+    archs = sorted({p["arch"] for p in pts})
+    seps = {}
+    for a in archs:
+        for topo in ("full", "oversub2"):
+            for prof in ("ai_base", "ai_full", "hpc"):
+                assert (by[(a, "fsdp_tp", topo, prof)]["step_s"]
+                        > by[(a, "tp_only", topo, prof)]["step_s"]), \
+                    (a, topo, prof)
+        hpc = by[(a, "fsdp_tp", "oversub2", "hpc")]["step_s"]
+        ai = by[(a, "fsdp_tp", "oversub2", "ai_full")]["step_s"]
+        assert hpc > 1.05 * ai, (a, hpc, ai)
+        full = by[(a, "fsdp_tp", "full", "ai_full")]["step_s"]
+        over = by[(a, "fsdp_tp", "oversub2", "ai_full")]["step_s"]
+        assert over >= full, (a, over, full)
+        seps[a] = {
+            "layout_tp_only_speedup": round(
+                by[(a, "fsdp_tp", "oversub2", "ai_full")]["step_s"]
+                / by[(a, "tp_only", "oversub2", "ai_full")]["step_s"], 2),
+            "profile_hpc_over_ai_oversub2": round(hpc / ai, 3),
+            "topology_oversub2_over_full": round(over / full, 3),
+        }
+
+    return {
+        "scenarios": len(pts),
+        "shape": "decode_32k",
+        "dp": 16, "tp": 16,
+        "sweep_s": elapsed,
+        "scenarios_per_sec": len(pts) / elapsed,
+        "separations": seps,
+        "points": pts,
+    }
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -628,6 +703,7 @@ def main() -> None:
     print(json.dumps(results, indent=2, sort_keys=True))
     cs = results["collective_sweep"]
     fs = results["fault_sweep"]
+    ms = results["model_sweep"]
     sh = results["sharded_sweep"]
     sh_line = (f"sharded sweep skipped ({sh['skipped']})" if "skipped" in sh
                else f"sharded sweep {sh['shard_speedup']:.2f}x on "
@@ -649,6 +725,8 @@ def main() -> None:
           f"eviction separation "
           f"{fs['eviction_separation']['completion_evict_on']} vs "
           f"{fs['eviction_separation']['completion_evict_off']}; "
+          f"model sweep {ms['scenarios']} operating points at "
+          f"{ms['scenarios_per_sec']:.2f}/s, separations {ms['separations']}; "
           f"wrote {out}")
 
 

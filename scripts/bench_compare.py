@@ -7,6 +7,9 @@ Guarded metrics (throughput — higher is better):
 * ``ticks_per_sec_batched``
 * ``scenarios_per_sec_batched``
 * ``collective_sweep.scenarios_per_sec``
+* ``fault_sweep.scenarios_per_sec``
+* ``model_sweep.scenarios_per_sec`` (api_version >= 7; skipped when the
+  committed baseline predates it)
 
 A metric that drops more than ``--threshold`` (default 20%) below the
 committed value is a regression: the script prints the table and exits
@@ -56,6 +59,8 @@ METRICS = (
      ("collective_sweep", "scenarios_per_sec")),
     ("fault_sweep.scenarios_per_sec",
      ("fault_sweep", "scenarios_per_sec")),
+    ("model_sweep.scenarios_per_sec",
+     ("model_sweep", "scenarios_per_sec")),
 )
 
 

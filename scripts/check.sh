@@ -35,6 +35,12 @@ echo "== fault engine smoke: flap recovery + eviction escape =="
 # escaped via EV eviction (repro.network.faults).
 python -m repro.network.faults
 
+echo "== traffic engine canary: plan -> schedule -> simulated step time =="
+# One small config priced end-to-end: the simulated network term must
+# land within [1, 10]x of the plan's alpha-beta lower bound
+# (repro.network.traffic).
+python -m repro.network.traffic
+
 echo "== sharded engine smoke: 4 virtual devices, bitwise parity =="
 # Fresh interpreter so the forced host-device split lands before jax
 # locks the backend; the smoke runs a ragged sharded batch and asserts

@@ -129,6 +129,66 @@ class ArchConfig:
             * 3 * D * F
         return self.param_count() - inactive
 
+    def param_leaves(self) -> "list[tuple[tuple, tuple]]":
+        """Analytic parameter leaves as (path, shape) pairs, in the layer
+        vocabulary the sharding rules pattern-match (wq/wk/wv/wo, w_gate/
+        w_up/w_down, embed/head/router, ...). Block leaves carry the
+        stacked leading repeats dim, path-prefixed ``blocks/`` exactly
+        like the real params pytree, so ``sharding.param_pspec`` applies
+        unchanged — the parallelism planner (`repro.distributed.plan`)
+        classifies each leaf with the REAL rules rather than re-deriving
+        a parallel set. Head/vocab counts use the TP-padded values (the
+        sharded, communicated tensors); tiny vectors (norms, biases,
+        mix gates) are omitted — they are noise at collective scale.
+        """
+        D, F, R = self.d_model, self.d_ff, self.repeats
+        hd = self.head_dim
+        leaves: list[tuple[tuple, tuple]] = [
+            (("embed",), (self.vocab, D)),
+            (("head",), (D, self.vocab)),
+        ]
+        for u, (mixer, ffn) in enumerate(self.pattern):
+            blk = ("blocks", f"u{u}")
+            if mixer == MIXER_ATTN:
+                leaves += [
+                    (blk + ("wq",), (R, D, self.n_q * hd)),
+                    (blk + ("wk",), (R, D, self.n_kv * hd)),
+                    (blk + ("wv",), (R, D, self.n_kv * hd)),
+                    (blk + ("wo",), (R, self.n_q * hd, D)),
+                ]
+            elif mixer == MIXER_MAMBA:
+                di = self.mamba_expand * D
+                leaves += [
+                    (blk + ("w_in",), (R, D, 2 * di)),
+                    (blk + ("w_out",), (R, di, D)),
+                    (blk + ("w_bcdt",), (R, di, 2 * self.ssm_state + 1)),
+                ]
+            elif mixer == MIXER_RWKV:
+                leaves += [(blk + (n,), (R, D, D))
+                           for n in ("w_r", "w_k", "w_v", "w_g",
+                                     "w_decay", "w_o")]
+            if ffn == FFN_MLP:
+                leaves += [
+                    (blk + ("w_gate",), (R, D, F)),
+                    (blk + ("w_up",), (R, D, F)),
+                    (blk + ("w_down",), (R, F, D)),
+                ]
+            elif ffn == FFN_MOE:
+                E = self.num_experts
+                leaves += [
+                    (blk + ("router",), (R, D, E)),
+                    (blk + ("w_gate",), (R, E, D, F)),
+                    (blk + ("w_up",), (R, E, D, F)),
+                    (blk + ("w_down",), (R, E, F, D)),
+                ]
+            elif ffn == FFN_RWKV:
+                leaves += [
+                    (blk + ("w_k",), (R, D, F // 2)),
+                    (blk + ("w_v",), (R, F // 2, D)),
+                    (blk + ("w_o",), (R, D, D)),
+                ]
+        return leaves
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

@@ -13,10 +13,11 @@ fabric two ways:
    `repro.network.collectives`) through the packet-level UET fabric
    simulator under a chosen transport profile, optionally with
    in-network reduction (INC), and price the collective term from the
-   actual simulated completion tick. This replaces the seed's
-   single-phase steady-state proxy (`_pattern_workload`, now a
-   deprecated alias): phase dependencies, stragglers, algorithm choice
-   and switch-resident reduction all show up in the number.
+   actual simulated completion tick. This replaced the seed's
+   single-phase steady-state proxy (now removed): phase dependencies,
+   stragglers, algorithm choice and switch-resident reduction all show
+   up in the number. Full multi-collective *step* pricing — plan ->
+   schedule -> simulated step time — lives in `repro.network.traffic`.
 
 `simulated_efficiency` = analytic / simulated time for the same spec —
 the derate factor the roofline and the sharding planner consume
@@ -24,11 +25,10 @@ the derate factor the roofline and the sharding planner consume
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, replace
 
 from repro.core.lb.schemes import LBScheme
-from repro.network.fabric import SimParams, Workload, simulate
+from repro.network.fabric import SimParams, simulate
 from repro.network.topology import leaf_spine
 
 
@@ -93,9 +93,6 @@ def analytic_time_for_spec(kind: str, size_pkts: int, chips: int,
 # ---------------------------------------------------------------------------
 # packet-level collective time from the UET simulator
 # ---------------------------------------------------------------------------
-
-_SIM_KINDS = ("all-reduce", "reduce-scatter", "all-gather", "all-to-all")
-
 
 def _collective_fabric(chips: int, hosts_per_leaf: int, oversub: int):
     leaves = max(1, -(-chips // hosts_per_leaf))
@@ -195,22 +192,3 @@ def simulated_efficiency(kind: str = "all-reduce", hosts: int = 8,
         ticks=ticks)
     t_ana = analytic_time_for_spec(kind, size_pkts, hosts, fabric)
     return float(min(1.0, t_ana / max(t_sim, 1e-12)))
-
-
-def _pattern_workload(kind: str, hosts: int, size_pkts: int) -> Workload:
-    """DEPRECATED single-phase proxy, kept for one PR as a thin alias.
-
-    The seed faked a collective as one steady-state phase (ring neighbor
-    exchange / half-shift permutation). It now lowers through the real
-    dependency-scheduled builders in `repro.network.collectives`; call
-    those directly.
-    """
-    warnings.warn(
-        "_pattern_workload is deprecated: collectives are now "
-        "dependency-scheduled — use repro.network.collectives."
-        "build_workload(CollectiveSpec(kind, hosts, size_pkts), algo)",
-        DeprecationWarning, stacklevel=2)
-    from repro.network import collectives as coll
-    kind = kind if kind in _SIM_KINDS else "all-reduce"
-    spec = coll.CollectiveSpec(kind, tuple(range(hosts)), size_pkts)
-    return coll.build_workload(spec, "ring")

@@ -57,14 +57,35 @@ def ring_time(kind: str, bytes_per_dev: float, chips: int) -> float:
     return bytes_per_dev * factor / LINK_BW
 
 
-def uet_efficiencies(kinds, hosts: int = 8, size_pkts: int = 64) -> dict:
+def kind_sizes_from_reports(reps, mtu: int = 4096, max_pkts: int = 128,
+                            min_pkts: int = 4) -> dict:
+    """Representative per-kind payloads (per-rank packets) from the
+    dry-run reports' OWN per-device collective byte volumes, clamped to
+    the simulator's tractable size band. This replaces a fixed
+    one-size-fits-all probe: small-message kinds (permutes, decode-time
+    reductions) and bulk kinds (grad all-reduces) now derate at their
+    own operating size regime."""
+    import math
+    best: dict = {}
+    for rep in reps:
+        for k, b in rep["collectives"]["bytes"].items():
+            if k == "total":
+                continue
+            best[k] = max(best.get(k, 0.0), float(b))
+    return {k: max(min_pkts, min(max_pkts, math.ceil(b / mtu)))
+            for k, b in best.items()}
+
+
+def uet_efficiencies(kinds, hosts: int = 8, size_pkts: int = 64,
+                     sizes: "dict | None" = None) -> dict:
     """Per-kind achieved-efficiency derates from the packet-level UET
     collective simulator: analytic alpha-beta time / simulated
     dependency-scheduled completion on a representative leaf-spine,
     applied as a divisor to the collective term — the paper's transport
     mechanics priced into the roofline. All kinds run as ONE
     ``simulate_batch`` call (heterogeneous flow counts padded, one
-    executable) rather than one compile per kind."""
+    executable) rather than one compile per kind. ``sizes`` overrides
+    the probe payload per kind (see `kind_sizes_from_reports`)."""
     from repro.distributed.netmodel import (FabricSpec,
                                             _collective_fabric,
                                             analytic_time_for_spec)
@@ -76,7 +97,8 @@ def uet_efficiencies(kinds, hosts: int = 8, size_pkts: int = 64) -> dict:
     if not ks:
         return {}
     fs = FabricSpec()
-    specs = [coll.CollectiveSpec(k, tuple(range(hosts)), size_pkts)
+    sz = {k: int((sizes or {}).get(k, size_pkts)) for k in ks}
+    specs = [coll.CollectiveSpec(k, tuple(range(hosts)), sz[k])
              for k in ks]
     budget = max(6 * coll.analytic_ticks(s, "ring") + 800 for s in specs)
     # budget is a traced bound on the adaptive-horizon engine: every
@@ -95,7 +117,7 @@ def uet_efficiencies(kinds, hosts: int = 8, size_pkts: int = 64) -> dict:
             print(f"uet_efficiencies: {k} did not complete within "
                   f"{budget} ticks — no derate applied")
             continue
-        out[k] = min(1.0, analytic_time_for_spec(k, size_pkts, hosts, fs)
+        out[k] = min(1.0, analytic_time_for_spec(k, sz[k], hosts, fs)
                      / (ct * fs.tick_seconds))
     return out
 
@@ -151,7 +173,9 @@ def main():
     if args.uet and reps:
         kinds = {k for rep in reps
                  for k in rep["collectives"]["bytes"]}
-        coll_eff = uet_efficiencies(sorted(kinds))
+        sizes = kind_sizes_from_reports(reps)
+        coll_eff = uet_efficiencies(sorted(kinds), sizes=sizes)
+        print("UET probe sizes (pkts/rank):", sizes)
         print("UET simulated collective efficiencies:",
               {k: round(v, 3) for k, v in coll_eff.items()})
     rows = []

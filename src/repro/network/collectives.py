@@ -4,9 +4,8 @@ A collective (all-reduce, reduce-scatter, all-gather, all-to-all) is a
 multi-phase exchange with data dependencies between phases: a ring
 all-reduce host may forward a chunk only after it received (and reduced)
 the previous phase's chunk from its left neighbor. The seed repo modeled
-this as ONE steady-state neighbor-exchange phase (`netmodel.
-_pattern_workload`) — blind to phase structure, stragglers, and
-algorithm choice.
+this as ONE steady-state neighbor-exchange phase (a netmodel proxy, now
+removed) — blind to phase structure, stragglers, and algorithm choice.
 
 This module lowers a :class:`CollectiveSpec` to a fabric
 :class:`~repro.network.fabric.Workload` whose ``dep`` lane encodes the
@@ -43,6 +42,7 @@ Algorithms
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -83,9 +83,13 @@ class CollectiveSpec:
     def from_bytes(cls, kind: str, hosts, bytes_per_rank: float,
                    mtu: int = 4096) -> "CollectiveSpec":
         """Byte-denominated constructor (per-rank payload -> MTU packets;
-        one simulator tick is one MTU serialization)."""
+        one simulator tick is one MTU serialization). True float ceiling
+        with a >= 1 packet floor: any positive payload — including the
+        sub-packet per-rank messages of decode-time TP all-reduces —
+        occupies at least one packet, and fractional bytes are never
+        truncated before rounding (4096.5 bytes is 2 packets, not 1)."""
         return cls(kind, tuple(hosts),
-                   max(1, -(-int(bytes_per_rank) // mtu)))
+                   max(1, math.ceil(bytes_per_rank / mtu)))
 
 
 @dataclass(frozen=True)

@@ -89,11 +89,10 @@ from repro.core import inc, pds
 from repro.core.cms.nscc import NSCCParams
 from repro.core.lb.schemes import LBPolicy, LBScheme, LBState, _mix32
 from repro.core.lb.schemes import _pick_lane as _pick
-from repro.core.types import TransportMode
 from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
 from repro.network.faults import FaultSchedule, as_schedule, loss_threshold
-from repro.network.profile import (CCAlgo, DeliveryMode, TransportProfile,
+from repro.network.profile import (DeliveryMode, TransportProfile,
                                    make_cc_policy)
 from repro.network.topology import QueueGraph, Stage
 
@@ -119,10 +118,11 @@ class SimParams:
     """Numeric simulation knobs (hashable; closed over by jit).
 
     Transport *composition* — CC algorithm, LB scheme, delivery modes —
-    lives in :class:`TransportProfile`, not here. The trailing fields
-    (``mode``/``lb``/``nscc``/``rccc``/``failed_queues``) are deprecated
-    remnants of the pre-profile API kept so old call sites keep working
-    through the compat shim; new code must leave them unset.
+    lives in :class:`TransportProfile`, not here. (The pre-profile
+    transport fields — ``mode``/``lb``/``nscc``/``rccc``/
+    ``failed_queues`` — are gone; constructing with them is a TypeError.
+    The positional-SimParams call form still warns for one release, see
+    ``_normalize_call``.)
     """
 
     ticks: int = 2000
@@ -142,12 +142,6 @@ class SimParams:
     max_cwnd: float = 48.0        # ~BDP in packets (optimistic start)
     base_rtt: float = 10.0        # unloaded RTT in ticks, for NSCC
     inc_slots: int = 64           # INC accumulator slots per reduction group
-    # ---- deprecated (legacy signature only; see _normalize_call) --------
-    mode: "TransportMode | None" = None
-    lb: "LBScheme | None" = None
-    nscc: "bool | None" = None
-    rccc: "bool | None" = None
-    failed_queues: tuple = ()
 
 
 @jax.tree_util.register_dataclass
@@ -1353,67 +1347,33 @@ def _check_trace(trace: str):
                          f"{TRACE_MODES}")
 
 
-def _profile_from_legacy(p: SimParams) -> TransportProfile:
-    """Map the pre-profile SimParams knobs onto a TransportProfile."""
-    mode = TransportMode.RUD if p.mode is None else p.mode
-    delivery = {
-        TransportMode.RUD: DeliveryMode.RUD,
-        TransportMode.ROD: DeliveryMode.ROD,
-        TransportMode.RUDI: DeliveryMode.RUDI,
-        TransportMode.UUD: DeliveryMode.RUD,  # UUD loss model not split out
-    }[TransportMode(mode)]
-    nscc = True if p.nscc is None else bool(p.nscc)
-    rccc = False if p.rccc is None else bool(p.rccc)
-    cc = (CCAlgo.NSCC_AND_RCCC if nscc and rccc
-          else CCAlgo.NSCC if nscc
-          else CCAlgo.RCCC if rccc
-          else CCAlgo.NONE)
-    lb = LBScheme.OBLIVIOUS if p.lb is None else LBScheme(p.lb)
-    return TransportProfile(cc=cc, lb=lb, delivery=delivery, name="legacy")
-
-
-_LEGACY_FIELDS = ("mode", "lb", "nscc", "rccc")
-
-
 def _normalize_call(profile, p, failed):
-    """The single conversion point from the public signatures (new or
-    legacy) to the engine's (profile, numeric-only params, failure spec).
+    """The single conversion point from the public signatures to the
+    engine's (profile, numeric-only params, failure spec).
 
-    Returns (profile, p, failed) with p's deprecated fields stripped, so
-    the compile cache keys on the canonical form only.
+    The pre-profile positional form — ``simulate(g, wl, SimParams(...))``
+    — is accepted for one more release: it warns and runs the default
+    ai_full() composition, which is exactly what the removed legacy
+    transport knobs composed to when left unset. The knobs themselves
+    (``mode``/``lb``/``nscc``/``rccc``/``failed_queues``) are gone from
+    SimParams: call sites that set them now fail at construction.
     """
     if isinstance(profile, SimParams):
         if p is not None:
             raise TypeError("got SimParams in the profile position AND a "
                             "params argument — pass (profile, params)")
         warnings.warn(
-            "simulate(g, wl, SimParams(...)) is deprecated: transport "
-            "composition moved to TransportProfile — call "
-            "simulate(g, wl, TransportProfile(...), SimParams(...))",
+            "simulate(g, wl, SimParams(...)) is deprecated: pass the "
+            "transport composition explicitly — "
+            "simulate(g, wl, TransportProfile.ai_full(), SimParams(...))",
             DeprecationWarning, stacklevel=3)
         p = profile
-        profile = _profile_from_legacy(p)
+        profile = TransportProfile.ai_full()
     else:
         if profile is None:
             profile = TransportProfile.ai_full()
         if p is None:
             p = SimParams()
-        set_legacy = [f for f in _LEGACY_FIELDS if getattr(p, f) is not None]
-        if set_legacy:
-            raise ValueError(
-                f"SimParams.{'/'.join(set_legacy)} are deprecated and "
-                f"ignored when a TransportProfile is given — encode the "
-                f"transport composition in the profile instead")
-    if p.failed_queues:
-        warnings.warn(
-            "SimParams.failed_queues is deprecated: pass failed= to "
-            "simulate()/simulate_batch() (a queue-id tuple or a bool mask)",
-            DeprecationWarning, stacklevel=3)
-        if failed is not None:
-            raise ValueError("both SimParams.failed_queues and failed= "
-                             "were given; use failed= only")
-        failed = tuple(p.failed_queues)
-    p = replace(p, mode=None, lb=None, nscc=None, rccc=None, failed_queues=())
     return profile, p, failed
 
 
@@ -1582,6 +1542,14 @@ def simulate_batch(g: QueueGraph, wls: Workload,
                    ) -> "list[SimResult]":
     """Run B scenarios as compiled, batched chunked while-scans.
 
+    g:       one QueueGraph for every scenario, or a length-B list of
+             per-scenario graphs. Topologies, like profiles, are static
+             (the compiled step bakes in a graph's wiring tables), so a
+             per-scenario list groups the batch by (graph, profile) —
+             one executable per distinct pair, with groups running on
+             worker threads and results reassembled by scenario index.
+             This is what makes a co-design sweep (topology x profile x
+             workload, see `repro.network.traffic`) ONE call.
     wls:     Workload with a leading scenario axis ([B, F]); build with
              ``Workload.stack`` or pass a list of same-F Workloads.
     profile: one TransportProfile for every scenario, or a length-B list
@@ -1623,6 +1591,17 @@ def simulate_batch(g: QueueGraph, wls: Workload,
         devices = resolve_devices(devices, shard)
     else:
         devices = None
+    graphs = None
+    if isinstance(g, (list, tuple)):
+        graphs = list(g)
+        if not graphs:
+            raise ValueError("per-scenario topology list is empty")
+        if not all(isinstance(gr, QueueGraph) for gr in graphs):
+            raise TypeError("per-scenario topologies must all be "
+                            "QueueGraph instances")
+        g = graphs[0]
+        if all(gr is graphs[0] for gr in graphs):
+            graphs = None               # degenerate list: one graph
     profiles = None
     if isinstance(profile, (list, tuple)):
         profiles = list(profile)
@@ -1634,53 +1613,76 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     _check_trace(trace)
     budget = int(p.ticks if max_ticks is None else max_ticks)
     B, F = wls.src.shape
+    if graphs is not None and len(graphs) != B:
+        raise ValueError(f"got {len(graphs)} topologies for B={B} scenarios")
     if seeds is None:
         seeds = np.full((B,), DEFAULT_SEED, np.uint32)
     seeds = jnp.asarray(seeds, jnp.uint32)
-    fault = as_schedule(g.num_queues, failed, faults, batch=B)
-    if fault is None:
-        if failed is None:
-            dead = np.zeros((B, g.num_queues), bool)
-        else:
-            arr = np.asarray(failed)
-            if arr.ndim == 2:
-                # any 2-D array is a per-scenario mask (0/1 ints included
-                # — the pre-profile API accepted those)
-                dead = arr.astype(bool)
+    # fault lanes are [B, Q]: with per-scenario topologies of DIFFERING
+    # queue counts there is no uniform Q to normalize against, so the
+    # failure spec must stay empty (per-group healthy schedules are
+    # built below); equal-Q graph lists compose with faults normally.
+    mixed_q = (graphs is not None
+               and len({gr.num_queues for gr in graphs}) > 1)
+    if mixed_q and (failed is not None or faults is not None):
+        raise ValueError(
+            "failed=/faults= with per-scenario topologies requires all "
+            "graphs to share num_queues — run unequal groups separately")
+    fault = None
+    if not mixed_q:
+        fault = as_schedule(g.num_queues, failed, faults, batch=B)
+        if fault is None:
+            if failed is None:
+                dead = np.zeros((B, g.num_queues), bool)
             else:
-                dead = np.broadcast_to(_failed_to_mask(g, failed),
-                                       (B, g.num_queues))
-        if dead.shape != (B, g.num_queues):
-            raise ValueError(f"failed mask must be [B={B}, "
-                             f"Q={g.num_queues}], got {dead.shape}")
-        fault = FaultSchedule.from_mask(jnp.asarray(dead, bool))
+                arr = np.asarray(failed)
+                if arr.ndim == 2:
+                    # any 2-D array is a per-scenario mask (0/1 ints
+                    # included — the pre-profile API accepted those)
+                    dead = arr.astype(bool)
+                else:
+                    dead = np.broadcast_to(_failed_to_mask(g, failed),
+                                           (B, g.num_queues))
+            if dead.shape != (B, g.num_queues):
+                raise ValueError(f"failed mask must be [B={B}, "
+                                 f"Q={g.num_queues}], got {dead.shape}")
+            fault = FaultSchedule.from_mask(jnp.asarray(dead, bool))
 
-    if profiles is None:
+    if profiles is None and graphs is None:
         return _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
                           goodput_window, devices=devices)
 
-    # per-scenario profiles: group scenarios by (static) profile and run
-    # each group as one vmapped scan — one executable per distinct profile.
-    # Groups are independent device programs, so they run on worker
-    # threads: their compiles (the dominant cold cost of a profile
-    # ablation) and executions overlap instead of serializing. Results
-    # are reassembled by scenario index — ordering, and every lane's
-    # bits, are unaffected.
-    if len(profiles) != B:
+    # per-scenario profiles and/or topologies: group scenarios by the
+    # (static) pair and run each group as one vmapped scan — one
+    # executable per distinct (graph, profile). Groups are independent
+    # device programs, so they run on worker threads: their compiles
+    # (the dominant cold cost of an ablation) and executions overlap
+    # instead of serializing. Results are reassembled by scenario index
+    # — ordering, and every lane's bits, are unaffected.
+    if profiles is not None and len(profiles) != B:
         raise ValueError(f"got {len(profiles)} profiles for B={B} scenarios")
-    groups: "dict[TransportProfile, list[int]]" = {}
-    for i, q in enumerate(profiles):
-        groups.setdefault(q, []).append(i)
+    per_g = graphs if graphs is not None else [g] * B
+    per_q = profiles if profiles is not None else [profile] * B
+    groups: "dict[tuple, tuple]" = {}
+    for i, (gr, q) in enumerate(zip(per_g, per_q)):
+        key = (id(gr), q)
+        if key not in groups:
+            groups[key] = (gr, q, [])
+        groups[key][2].append(i)
     items = []
-    for prof, idxs in groups.items():
+    for gr, prof, idxs in groups.values():
         sel = np.asarray(idxs)
         sub_wls = jax.tree_util.tree_map(lambda a, s=sel: a[s], wls)
-        sub_fault = jax.tree_util.tree_map(lambda a, s=sel: a[s], fault)
-        items.append((prof, idxs, sub_wls, sub_fault, seeds[sel]))
+        if fault is None:
+            sub_fault = FaultSchedule.from_mask(
+                np.zeros((len(idxs), gr.num_queues), bool))
+        else:
+            sub_fault = jax.tree_util.tree_map(lambda a, s=sel: a[s], fault)
+        items.append((gr, prof, idxs, sub_wls, sub_fault, seeds[sel]))
 
     def _run_group(item):
-        prof, idxs, sub_wls, sub_fault, sub_seeds = item
-        return idxs, _run_batch(g, sub_wls, prof, p, sub_fault, sub_seeds,
+        gr, prof, idxs, sub_wls, sub_fault, sub_seeds = item
+        return idxs, _run_batch(gr, sub_wls, prof, p, sub_fault, sub_seeds,
                                 trace, budget, goodput_window,
                                 devices=devices)
 

@@ -57,3 +57,32 @@ def make_prefill(cfg: ArchConfig, mesh=None, dp_axes=("data",),
 
 def sample_greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def serving_rate(cfg: ArchConfig, *, dp: int = 4, tp: int = 4,
+                 layout: str = "tp_only", shape: str = "decode_32k",
+                 g=None, profile=None, **step_kw) -> dict:
+    """Decode-time serving economics on a simulated UET fabric.
+
+    Derives the parallelism plan for ``cfg`` on a (dp, tp) serving mesh,
+    compiles its per-step collective schedule (TP activation all-reduces
+    plus the frontend request incast; the fsdp_tp layout additionally
+    pays the ZeRO-3 param gather decode penalty), runs it through the
+    packet-level simulator and prices tokens/sec served. The network
+    term is SIMULATED: topology and transport profile move the number.
+
+    Returns {tokens_per_sec_served, step_s, net_s, eff, ...}.
+    """
+    from repro.distributed.plan import derive_plan
+    from repro.network import traffic
+
+    plan = derive_plan(cfg, shape, dp=dp, tp=tp, layout=layout)
+    t = traffic.step_time(plan, g, profile, **step_kw)
+    return {
+        "arch": cfg.name, "shape": shape, "layout": layout,
+        "dp": dp, "tp": tp,
+        "tokens_per_sec_served": t.tokens_per_sec,
+        "step_s": t.step_s, "net_s": t.net_s,
+        "compute_s": t.compute_s, "memory_s": t.memory_s,
+        "eff": t.eff, "sim_ticks": t.sim_ticks,
+    }

@@ -286,13 +286,26 @@ def test_simulated_efficiency_in_unit_interval():
     assert 0.0 < eff <= 1.0
 
 
-def test_pattern_workload_deprecated_alias():
-    import warnings
-
+def test_pattern_workload_proxy_removed():
+    """The seed's single-phase steady-state proxy is gone: collective
+    workloads only come from the real dep-scheduled builders."""
     from repro.distributed import netmodel
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        wl = netmodel._pattern_workload("all-reduce", 4, 8)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    # routed through the real builder: full dep-scheduled ring
-    assert int(wl.src.shape[0]) == 2 * 3 * 4
+    assert not hasattr(netmodel, "_pattern_workload")
+
+
+def test_from_bytes_rounds_up_to_whole_packets():
+    """Sub-packet and fractional byte counts must round UP and floor at
+    one packet — the old int() truncation priced 4096.5 bytes as 1 pkt
+    and 0.5 bytes as... also 1, but only by accident of the max()."""
+    mtu = 4096
+    spec = coll.CollectiveSpec.from_bytes("all_reduce", range(4), 4096.5, mtu)
+    assert spec.size_pkts == 2
+    assert coll.CollectiveSpec.from_bytes("all_reduce", range(4), 0.5,
+                                     mtu).size_pkts == 1
+    assert coll.CollectiveSpec.from_bytes("all_gather", range(4), 3 * mtu,
+                                     mtu).size_pkts == 3
+    # a sub-packet spec still lowers to a valid flow table: every flow
+    # moves at least one packet
+    t = coll.flow_table(coll.CollectiveSpec.from_bytes("all_gather", range(4), 10.0,
+                                             mtu), "ring")
+    assert (t.size >= 1).all()

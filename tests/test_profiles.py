@@ -193,35 +193,31 @@ def test_profile_hash_ignores_name():
 # ------------------------------------------------------------------------
 
 def test_legacy_simparams_signature_warns_and_matches():
+    """The one remaining shim: positional SimParams in the profile slot
+    warns for one release and runs as the explicit ai_full composition."""
     g, wl, p = _config_a()
     r_new = simulate(g, wl, TransportProfile.ai_full(), p, trace="full")
     with pytest.warns(DeprecationWarning, match="TransportProfile"):
-        r_old = simulate(g, wl, SimParams(ticks=300, nscc=True,
-                                          lb=LBScheme.OBLIVIOUS),
-                         trace="full")
+        r_old = simulate(g, wl, SimParams(ticks=300), trace="full")
     np.testing.assert_array_equal(r_old.delivered_per_tick,
                                   r_new.delivered_per_tick)
     np.testing.assert_array_equal(r_old.cwnd_per_tick, r_new.cwnd_per_tick)
 
 
-def test_failed_queues_field_deprecated_single_conversion():
+def test_simparams_legacy_fields_removed():
+    """The deprecated composition/failure fields are gone from SimParams:
+    constructing with them is a TypeError, and failed= is the only way to
+    express static failures."""
+    for kw in ({"nscc": True}, {"rccc": False}, {"mode": "flexible"},
+               {"lb": LBScheme.OBLIVIOUS}, {"failed_queues": (3,)}):
+        with pytest.raises(TypeError):
+            SimParams(ticks=100, **kw)
     g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
     wl = Workload.of([0, 1], [2, 3], 120)
     dead = (int(g.up1_table[0, 0]),)
-    prof = TransportProfile.ai_full()
-    p = SimParams(ticks=200, timeout_ticks=64)
-    r_new = simulate(g, wl, prof, p, failed=dead, trace="full")
-    with pytest.warns(DeprecationWarning, match="failed_queues"):
-        r_old = simulate(g, wl, prof, replace(p, failed_queues=dead),
-                         trace="full")
-    np.testing.assert_array_equal(r_old.delivered_per_tick,
-                                  r_new.delivered_per_tick)
-    assert int(r_old.state.drops) > 0
-    # both ways at once is ambiguous -> error
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="failed"):
-            simulate(g, wl, prof, replace(p, failed_queues=dead),
-                     failed=dead)
+    r = simulate(g, wl, TransportProfile.ai_full(),
+                 SimParams(ticks=200, timeout_ticks=64), failed=dead)
+    assert int(r.state.drops) > 0
 
 
 def test_batch_accepts_int01_failure_masks():
@@ -257,10 +253,8 @@ def test_rod_rejects_counted_separately_from_dups():
 
 
 def test_new_api_rejects_legacy_composition_fields():
-    g, wl, _ = _config_a()
-    with pytest.raises(ValueError, match="deprecated"):
-        simulate(g, wl, TransportProfile.ai_full(),
-                 SimParams(ticks=100, nscc=False))
+    with pytest.raises(TypeError):
+        SimParams(ticks=100, nscc=False)
 
 
 # ------------------------------------------------------------------------

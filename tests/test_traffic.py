@@ -1,0 +1,238 @@
+"""Model-driven traffic engine: plan derivation, schedule compilation,
+dep-chained phase ordering, batch parity and fault sensitivity.
+
+* plan derivation is deterministic and classifies leaves via the REAL
+  sharding rules (fsdp_tp emits DP param/grad collectives; tp_only
+  collapses them into one full-size grad all-reduce);
+* the compiled step is bitwise-deterministic and its phases are strictly
+  dep-chained: a DP-phase root flow cannot start before the last TP
+  phase source-completes at its host;
+* the co-design sweep prices scenarios through ONE simulate_batch call,
+  bitwise-identical to serial simulate calls — including per-scenario
+  topologies;
+* injected link faults can only slow the step down (monotonicity).
+"""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.distributed.plan import collective_seconds, derive_plan
+from repro.network import collectives as coll
+from repro.network import traffic
+from repro.network.fabric import SimParams, simulate, simulate_batch
+from repro.network.faults import FaultSchedule
+from repro.network.profile import TransportProfile
+from repro.network.topology import leaf_spine
+
+CFG = configs.get("deepseek-coder-33b")
+
+
+# ------------------------------------------------------------------ plans
+
+def test_plan_derivation_deterministic():
+    a = derive_plan(CFG, "train_4k", dp=16, tp=16, layout="fsdp_tp")
+    b = derive_plan(CFG, "train_4k", dp=16, tp=16, layout="fsdp_tp")
+    assert a == b                      # frozen dataclasses, bitwise fields
+    assert a.devices == 256
+    assert a.param_bytes > 0 and a.tokens_per_step == a.global_batch * 4096
+
+
+def test_plan_layouts_follow_sharding_rules():
+    fsdp = derive_plan(CFG, "train_4k", dp=8, tp=8, layout="fsdp_tp")
+    tponly = derive_plan(CFG, "train_4k", dp=8, tp=8, layout="tp_only")
+    fsdp_phases = {d.phase for d in fsdp.demands}
+    assert {"tp_stream", "dp_param", "dp_grad"} <= fsdp_phases
+    # fsdp grad traffic is split reduce-scatter (sharded) + all-reduce
+    # (replicated leaves); tp_only has NO param gathers and one full-size
+    # grad all-reduce
+    assert {d.kind for d in fsdp.demands if d.phase == "dp_grad"} \
+        == {"reduce_scatter", "all_reduce"}
+    tponly_phases = {d.phase for d in tponly.demands}
+    assert "dp_param" not in tponly_phases
+    (gar,) = [d for d in tponly.demands if d.phase == "dp_grad"]
+    assert gar.kind == "all_reduce"
+    # same total grad bytes either way, but all-reduce moves 2(n-1)/n of
+    # them vs reduce-scatter's (n-1)/n — the grad phase alone is pricier
+    # in tp_only (fsdp_tp pays it back in param gathers)
+    def grad_s(p):
+        return sum(collective_seconds(d.kind, d.n, d.bytes_per_rank, 50e9)
+                   for d in p.demands if d.phase == "dp_grad")
+    assert grad_s(tponly) > grad_s(fsdp)
+
+
+def test_plan_decode_emits_serving_incast():
+    p = derive_plan(CFG, "decode_32k", dp=4, tp=4, layout="fsdp_tp")
+    kinds = {d.phase: d for d in p.demands}
+    assert "serve_incast" in kinds and kinds["serve_incast"].kind == "incast"
+    assert "dp_grad" not in kinds      # no gradients at inference
+    # tokens_per_step collapses to the batch (one token per sequence)
+    assert p.tokens_per_step == p.global_batch
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="layout"):
+        derive_plan(CFG, "train_4k", dp=2, tp=2, layout="nope")
+    with pytest.raises(ValueError, match="divide"):
+        derive_plan(CFG, "train_4k", dp=2, tp=2, pp=7)
+    with pytest.raises(ValueError, match=">= 1"):
+        derive_plan(CFG, "train_4k", dp=0, tp=2)
+    with pytest.raises(ValueError, match="unknown collective"):
+        collective_seconds("bogus", 4, 1e6, 50e9)
+
+
+def test_alpha_beta_formulas():
+    bw = 50e9
+    m = 1e9 / bw
+    assert collective_seconds("all_reduce", 4, 1e9, bw) \
+        == pytest.approx(2 * 3 / 4 * m)
+    assert collective_seconds("all_gather", 4, 1e9, bw) == pytest.approx(3 * m)
+    assert collective_seconds("p2p", 2, 1e9, bw) == pytest.approx(m)
+    assert collective_seconds("incast", 4, 1e9, bw) == pytest.approx(4 * m)
+    assert collective_seconds("all_reduce", 1, 1e9, bw) == 0.0
+
+
+# ------------------------------------------------------------ compilation
+
+def test_compiled_step_bitwise_deterministic():
+    p = derive_plan(CFG, "train_4k", dp=16, tp=16, layout="fsdp_tp")
+    g = leaf_spine(4, 2, 4)
+    c1 = traffic.compile_step(p, g)
+    c2 = traffic.compile_step(p, g)
+    assert c1.phases == c2.phases
+    for lane in ("src", "dst", "size", "start", "dep"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c1.workload, lane)),
+            np.asarray(getattr(c2.workload, lane)), err_msg=lane)
+
+
+def test_compiled_phases_are_dep_chained():
+    """Structural ordering: every root flow of phase k (dep not internal
+    to k) points at a flow of an EARLIER phase — the schedule is one
+    chain, so no phase can race ahead of its predecessor."""
+    p = derive_plan(CFG, "train_4k", dp=16, tp=16, layout="fsdp_tp")
+    c = traffic.compile_step(p, leaf_spine(4, 2, 4))
+    dep = np.asarray(c.workload.dep)
+    names = [ph.name for ph in c.phases]
+    assert names[0] == "dp_param"
+    assert [n for n in names if n.startswith("tp_layer")]
+    # sharded grads reduce-scatter + re-gather; replicated leaves all-reduce
+    assert names[-3:] == ["dp_grad_rs", "dp_grad_ag", "dp_grad_ar"]
+    for k, ph in enumerate(c.phases):
+        roots = [f for f in range(ph.lo, ph.hi) if dep[f] < ph.lo]
+        assert roots, ph.name
+        if k == 0:
+            assert all(dep[f] == -1 for f in roots)
+        else:
+            prev = c.phases[k - 1]
+            assert all(prev.lo <= dep[f] < prev.hi for f in roots), ph.name
+
+
+def test_dp_cannot_start_before_last_tp_completes():
+    """Behavioral: run the compiled step with a full trace and check every
+    DP-grad root flow's FIRST delivery lands strictly after its gating TP
+    flow source-completed (the per-host chain the builder documents: DP
+    at host h waits for the last TP phase flow sourced at h)."""
+    p = derive_plan(CFG, "train_4k", dp=4, tp=4, layout="fsdp_tp")
+    g = leaf_spine(4, 2, 4)
+    c = traffic.compile_step(p, g, max_pkts=8)
+    r = simulate(g, c.workload, TransportProfile.ai_full(), SimParams(),
+                 trace="full", max_ticks=c.default_budget())
+    src_comp = r.source_completion_ticks()
+    dep = np.asarray(c.workload.dep)
+    src = np.asarray(c.workload.src)
+    last_tp = max((ph for ph in c.phases if ph.name.startswith("tp_layer")),
+                  key=lambda ph: ph.lo)
+    (dp_rs,) = [ph for ph in c.phases if ph.name == "dp_grad_rs"]
+    delivered = np.asarray(r.delivered_per_tick)
+    checked = 0
+    for f in range(dp_rs.lo, dp_rs.hi):
+        if dep[f] < dp_rs.lo:              # root flow: gated on prior phase
+            gate = int(dep[f])
+            assert last_tp.lo <= gate < last_tp.hi
+            assert src[gate] == src[f]     # same-host chaining
+            first = int(np.argmax(delivered[:, f] > 0))
+            assert delivered[:, f].sum() > 0
+            assert first > int(src_comp[gate]) > 0
+            checked += 1
+    assert checked > 0
+
+
+def test_compile_rejects_too_small_graphs():
+    p = derive_plan(CFG, "train_4k", dp=4, tp=4)
+    with pytest.raises(ValueError, match="hosts/leaf"):
+        traffic.compile_step(p, leaf_spine(4, 2, hosts_per_leaf=1))
+    with pytest.raises(ValueError, match="leaves"):
+        traffic.compile_step(p, leaf_spine(1, 2, hosts_per_leaf=8))
+    nothing = derive_plan(CFG, "train_4k", dp=1, tp=1)
+    with pytest.raises(ValueError, match="no network phases"):
+        traffic.compile_step(nothing, leaf_spine(4, 2, 4))
+
+
+def test_price_step_raises_on_budget_exhaustion():
+    p = derive_plan(CFG, "decode_32k", dp=4, tp=4)
+    g = leaf_spine(4, 2, 4)
+    c = traffic.compile_step(p, g, max_pkts=8)
+    r = simulate(g, c.workload, TransportProfile.ai_full(), SimParams(),
+                 max_ticks=4)
+    with pytest.raises(RuntimeError, match="max_ticks"):
+        traffic.price_step(c, r)
+
+
+# ------------------------------------------------------- batch parity
+
+def test_sweep_batch_matches_serial_including_incast():
+    """The decode sweep (serving incast included) batched through ONE
+    simulate_batch call is bitwise-identical to serial simulate calls —
+    across two topologies with DIFFERENT queue counts."""
+    graphs, wls, profs, points = traffic.model_sweep_scenarios(
+        arch_names=("deepseek-coder-33b",), dp=4, tp=4,
+        layouts=("fsdp_tp",),
+        profiles=[TransportProfile.ai_full(), TransportProfile.hpc()],
+        max_pkts=8)
+    assert len({g.num_queues for g in graphs}) == 2   # mixed-Q batch
+    budget = max(pt["compiled"].default_budget() for pt in points)
+    rs = simulate_batch(graphs, coll.stack_padded(wls), profs, SimParams(),
+                        max_ticks=budget)
+    for g, wl, prof, r in zip(graphs, wls, profs, rs):
+        r_serial = simulate(g, wl, prof, SimParams(), max_ticks=budget)
+        np.testing.assert_array_equal(
+            r.source_completion_ticks()[:wl.src.shape[0]],
+            r_serial.source_completion_ticks())
+
+
+def test_mixed_topology_batch_rejects_faults():
+    graphs, wls, profs, points = traffic.model_sweep_scenarios(
+        arch_names=("deepseek-coder-33b",), dp=4, tp=4,
+        layouts=("fsdp_tp",), profiles=[TransportProfile.ai_full()],
+        max_pkts=8)
+    with pytest.raises(ValueError, match="num_queues"):
+        simulate_batch(graphs, coll.stack_padded(wls), profs, SimParams(),
+                       failed=(0,), max_ticks=100)
+
+
+def test_step_time_monotone_under_link_flap():
+    """Flapping a leaf uplink during the step can only slow it down."""
+    p = derive_plan(CFG, "decode_32k", dp=4, tp=4, layout="fsdp_tp")
+    g = leaf_spine(4, 2, 4)
+    healthy = traffic.step_time(p, g, TransportProfile.ai_full(),
+                                max_pkts=8)
+    flap = FaultSchedule.healthy(g.num_queues).flap(
+        [int(g.up1_table[h, 0]) for h in range(4)], fail_at=5, heal_at=120)
+    faulty = traffic.step_time(p, g, TransportProfile.ai_full(),
+                               faults=flap, max_pkts=8)
+    assert faulty.sim_ticks >= healthy.sim_ticks
+    assert faulty.step_s >= healthy.step_s
+
+
+# ------------------------------------------------------------- pricing
+
+def test_priced_net_term_at_least_analytic():
+    """eff is clipped to (0, 1], so the simulated network term can never
+    beat the alpha-beta bound."""
+    p = derive_plan(CFG, "decode_32k", dp=4, tp=4, layout="fsdp_tp")
+    t = traffic.step_time(p, leaf_spine(4, 2, 4),
+                          TransportProfile.ai_full(), max_pkts=8)
+    assert t.net_s >= t.analytic_net_s > 0
+    assert all(0 < v <= 1 for v in t.eff.values())
+    assert t.step_s == pytest.approx(max(t.compute_s, t.memory_s) + t.net_s)
+    assert t.time_to_train(1e9) == pytest.approx(1e9 / t.tokens_per_sec)
