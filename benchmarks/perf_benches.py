@@ -79,8 +79,20 @@ fsdp_tp decode penalty vs the tp_only serving layout, the hpc-vs-ai
 transport separation on the oversubscribed fabric, and topology
 monotonicity.
 
+api_version 8 additions (the telemetry plane): ``fabric_health`` — the
+flap scenario on the shared victim-share fabric
+(``workloads.victim_sweep``) with ``TelemetrySpec.on()`` probes, gated
+on outage VISIBILITY (silent-drop rate confined to the fault window,
+goodput dip + recovery, the NSCC mark-rate throttle response, the
+heal-boundary trim burst) and on non-perturbation (telemetry-on final
+state bitwise equals telemetry-off). Prices the plane itself as the
+``telemetry_overhead`` warm-time ratio. Telemetry-off runs compile the
+identical pre-telemetry program, so every existing guarded metric
+doubles as the telemetry-off regression gate.
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
-accumulates across PRs.
+accumulates across PRs; append each run's headline numbers to
+``BENCH_history.jsonl`` with ``python scripts/bench_history.py``.
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_benches [--scenarios 8]
        [--ticks 600] [--devices 4] [--out BENCH_fabric.json]
@@ -263,7 +275,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 7,
+        "api_version": 8,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -350,6 +362,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     results["profile_ablation"] = _profile_ablation(ticks)
     results["collective_sweep"] = _collective_sweep()
     results["fault_sweep"] = _fault_sweep()
+    results["fabric_health"] = _fabric_health()
     results["model_sweep"] = _model_sweep()
     results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
     results["calibration"] = _calibration()
@@ -605,6 +618,85 @@ def _fault_sweep(ticks: int = 4000) -> dict:
     }
 
 
+def _fabric_health(ticks: int = 3000) -> dict:
+    """The telemetry plane on the PR-6-style flap scenario: the shared
+    victim-share fabric (``workloads.victim_sweep``) with 3 of 4 leaf-0
+    uplinks flapping over [1000, 1800), probes on.
+
+    In-bench visibility gates (an observability plane that can't see an
+    outage is measuring nothing) — the four-signature check shared with
+    the ``python -m repro.network.telemetry`` canary:
+
+    * silent-drop rate is confined to [fail_at, heal_at) bit-exactly
+      (zero before and after, spiking inside);
+    * goodput dips inside the window and climbs back after;
+    * the CC response registers: NSCC backs off on the vanishing ACK
+      stream, so the in-window ECN-mark rate falls below baseline
+      (the naive "trims spike in-window" expectation is exactly what a
+      real closed-loop transport does NOT do — the trim spike lands at
+      the heal boundary, when the retransmit backlog floods back);
+    * probes never perturb: the telemetry-on final state is bitwise the
+      telemetry-off state.
+
+    Also prices the plane itself: warm telemetry-on vs telemetry-off
+    wall time on the same scenario (``telemetry_overhead`` ratio).
+    """
+    from dataclasses import replace as _replace
+
+    import jax
+
+    from repro.network.fabric import simulate
+    from repro.network.telemetry import (assert_outage_visible,
+                                         flap_victim_scenario,
+                                         outage_visibility)
+
+    g, wl, prof, p, sched, spec, (fail_at, heal_at) = flap_victim_scenario()
+    p = _replace(p, ticks=ticks)
+    run_on = lambda: simulate(g, wl, prof, p, faults=sched,  # noqa: E731
+                              telemetry=spec)
+    run_off = lambda: simulate(g, wl, prof, p, faults=sched)  # noqa: E731
+    t0 = time.perf_counter()
+    r_on = run_on()
+    cold = time.perf_counter() - t0
+    r_off = run_off()
+    warm_on = min(_timed(run_on) for _ in range(3))
+    warm_off = min(_timed(run_off) for _ in range(3))
+
+    eq = jax.tree_util.tree_map(
+        lambda a, c: bool(np.array_equal(np.asarray(a), np.asarray(c))),
+        r_on.state, r_off.state)
+    assert all(jax.tree_util.tree_leaves(eq)), \
+        "telemetry must not perturb the simulation"
+    tr = r_on.telemetry
+    vis = outage_visibility(tr, fail_at, heal_at, ticks)
+    assert_outage_visible(vis)
+
+    s = tr.summary()
+    rnd = lambda x: round(float(x), 4)  # noqa: E731
+    return {
+        "ticks": ticks,
+        "fault_window": [fail_at, heal_at],
+        "probe_every": spec.probe_every,
+        "slots": spec.slots,
+        "samples": tr.num_samples,
+        "sample_spacing_ticks": tr.sample_spacing,
+        "telemetry_cold_s": cold,
+        "telemetry_on_warm_s": warm_on,
+        "telemetry_off_warm_s": warm_off,
+        "telemetry_overhead": warm_on / warm_off,
+        "drop_rate": [rnd(vis["drop_pre"]), rnd(vis["drop_during"]),
+                      rnd(vis["drop_post"])],
+        "mark_rate_pre_during": [rnd(vis["mark_pre"]),
+                                 rnd(vis["mark_during"])],
+        "goodput_pre_during_post": [rnd(vis["goodput_pre"]),
+                                    rnd(vis["goodput_during"]),
+                                    rnd(vis["goodput_post"])],
+        "heal_trim_burst": rnd(vis["trim_burst"]),
+        "occ_p99": rnd(s["occ_p99"]),
+        "rtt_p99": rnd(s.get("rtt_p99", 0.0)),
+    }
+
+
 def _model_sweep() -> dict:
     """The model-driven co-design grid: 2 models x 2 sharding layouts x
     2 topologies x 3 transport profiles at decode, every operating
@@ -703,6 +795,7 @@ def main() -> None:
     print(json.dumps(results, indent=2, sort_keys=True))
     cs = results["collective_sweep"]
     fs = results["fault_sweep"]
+    fh = results["fabric_health"]
     ms = results["model_sweep"]
     sh = results["sharded_sweep"]
     sh_line = (f"sharded sweep skipped ({sh['skipped']})" if "skipped" in sh
@@ -727,6 +820,11 @@ def main() -> None:
           f"{fs['eviction_separation']['completion_evict_off']}; "
           f"model sweep {ms['scenarios']} operating points at "
           f"{ms['scenarios_per_sec']:.2f}/s, separations {ms['separations']}; "
+          f"fabric health: outage visible (drops "
+          f"{fh['drop_rate'][0]} -> {fh['drop_rate'][1]} -> "
+          f"{fh['drop_rate'][2]}/tick, heal trim burst "
+          f"{fh['heal_trim_burst']}/tick) at "
+          f"{fh['telemetry_overhead']:.2f}x telemetry overhead; "
           f"wrote {out}")
 
 

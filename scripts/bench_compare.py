@@ -11,6 +11,14 @@ Guarded metrics (throughput — higher is better):
 * ``model_sweep.scenarios_per_sec`` (api_version >= 7; skipped when the
   committed baseline predates it)
 
+All guarded throughput blocks run with telemetry OFF — the off spec is
+normalized to the pre-telemetry compile key, so these numbers also gate
+the telemetry plane's zero-cost-when-off contract (api_version >= 8; a
+regression here means the off-gating broke). The telemetry-ON price is
+reported separately as ``fabric_health.telemetry_overhead`` in the
+snapshot and tracked in ``BENCH_history.jsonl`` via
+``scripts/bench_history.py``, not gated here.
+
 A metric that drops more than ``--threshold`` (default 20%) below the
 committed value is a regression: the script prints the table and exits
 2. ``scripts/check.sh`` wires this in as a SOFT gate — it warns and

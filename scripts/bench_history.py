@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Append one run's headline bench metrics to ``BENCH_history.jsonl``.
+
+``BENCH_fabric.json`` is a snapshot — it is overwritten by every
+``python -m benchmarks.perf_benches`` run, so until now the perf
+TRAJECTORY across PRs lived only in prose (ROADMAP/CHANGES). This
+script distills the snapshot into one compact JSONL record and appends
+it, so regressions and wins are greppable across the whole history:
+
+    PYTHONPATH=src python -m benchmarks.perf_benches   # writes snapshot
+    python scripts/bench_history.py                    # appends record
+    python scripts/bench_history.py --dry-run          # print, no write
+
+Each record carries the run timestamp, api_version, backend, the
+headline throughput metrics (ticks/sec single + batched, scenarios/sec,
+the sweep blocks' scenarios/sec), the calibration reference that makes
+cross-machine numbers comparable, and — api_version >= 8 — the
+``fabric_health`` telemetry overhead ratio. Missing blocks are simply
+omitted, so records from any bench version coexist in one file.
+"""
+import argparse
+import datetime
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: (record key, path into BENCH_fabric.json)
+HEADLINE = (
+    ("api_version", ("api_version",)),
+    ("backend", ("backend",)),
+    ("ticks_per_sec_single", ("ticks_per_sec_single",)),
+    ("ticks_per_sec_batched", ("ticks_per_sec_batched",)),
+    ("ticks_per_sec_batched_fastpath", ("ticks_per_sec_batched_fastpath",)),
+    ("scenarios_per_sec_batched", ("scenarios_per_sec_batched",)),
+    ("calibration_ticks_per_sec", ("calibration", "ticks_per_sec")),
+    ("fastpath_vs_fixed_scan", ("fastpath_vs_fixed_scan",)),
+    ("collective_scenarios_per_sec",
+     ("collective_sweep", "scenarios_per_sec")),
+    ("fault_scenarios_per_sec", ("fault_sweep", "scenarios_per_sec")),
+    ("model_scenarios_per_sec", ("model_sweep", "scenarios_per_sec")),
+    ("profile_scenarios_per_sec",
+     ("profile_ablation", "scenarios_per_sec")),
+    ("shard_speedup", ("sharded_sweep", "shard_speedup")),
+    ("shard_devices", ("sharded_sweep", "devices")),
+    ("telemetry_overhead", ("fabric_health", "telemetry_overhead")),
+    ("fabric_health_warm_s", ("fabric_health", "telemetry_on_warm_s")),
+)
+
+
+def distill(bench: dict, timestamp: "str | None" = None) -> dict:
+    rec = {"timestamp": timestamp
+           or datetime.datetime.now(datetime.timezone.utc).isoformat(
+               timespec="seconds")}
+    for key, path in HEADLINE:
+        node = bench
+        for p in path:
+            if not isinstance(node, dict) or p not in node:
+                node = None
+                break
+            node = node[p]
+        if node is not None:
+            rec[key] = round(node, 4) if isinstance(node, float) else node
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=str(REPO / "BENCH_fabric.json"),
+                    help="snapshot to distill (default: BENCH_fabric.json)")
+    ap.add_argument("--history", default=str(REPO / "BENCH_history.jsonl"),
+                    help="JSONL file to append to "
+                         "(default: BENCH_history.jsonl)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the record without appending")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    rec = distill(bench)
+    line = json.dumps(rec, sort_keys=True)
+    if args.dry_run:
+        print(line)
+        return 0
+    with open(args.history, "a") as f:
+        f.write(line + "\n")
+    n = sum(1 for _ in open(args.history))
+    print(f"appended record #{n} to {args.history} "
+          f"(api {rec.get('api_version')}, "
+          f"{rec.get('ticks_per_sec_batched', 0):.0f} ticks/sec batched)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

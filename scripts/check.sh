@@ -35,6 +35,13 @@ echo "== fault engine smoke: flap recovery + eviction escape =="
 # escaped via EV eviction (repro.network.faults).
 python -m repro.network.faults
 
+echo "== telemetry canary: the flap must be visible in the probe lanes =="
+# The flap-victim scenario with telemetry on: silent drops confined to
+# the fault window, goodput dip + recovery, NSCC mark back-off, heal
+# trim burst — and the probes must not perturb a single bit
+# (repro.network.telemetry).
+python -m repro.network.telemetry
+
 echo "== traffic engine canary: plan -> schedule -> simulated step time =="
 # One small config priced end-to-end: the simulated network term must
 # land within [1, 10]x of the plan's alpha-beta lower bound

@@ -91,9 +91,11 @@ from repro.core.lb.schemes import LBPolicy, LBScheme, LBState, _mix32
 from repro.core.lb.schemes import _pick_lane as _pick
 from repro.kernels import ops as kops
 from repro.network.ecmp import DELIVERED, RoutingTables
+from repro.network import telemetry as telem
 from repro.network.faults import FaultSchedule, as_schedule, loss_threshold
 from repro.network.profile import (DeliveryMode, TransportProfile,
                                    make_cc_policy)
+from repro.network.telemetry import TelemetrySpec
 from repro.network.topology import QueueGraph, Stage
 
 # packet meta bits
@@ -358,7 +360,7 @@ def _rank_within(target: jax.Array, valid: jax.Array,
 
 
 def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
-              lossy: bool = False):
+              lossy: bool = False, tel: "TelemetrySpec | None" = None):
     """Build the per-tick transition function for one transport profile.
 
     The tick is composed from the profile's pluggable policy objects: a
@@ -377,7 +379,16 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
     in when the dispatching schedule has a nonzero ``loss_p`` lane, so
     loss-free runs — every pre-fault-engine call site — pay nothing
     for it.
+
+    ``tel`` (a :class:`~repro.network.telemetry.TelemetrySpec`) is the
+    same kind of static: when enabled, the step additionally emits a
+    ``probe`` dict in its out lanes — per-queue egress-mark / trim /
+    silent-drop increments and per-flow RTT-sample and cwnd views, all
+    signals the tick already computed — for the telemetry lanes riding
+    the stats carry. Disabled (the default), no probe is built and the
+    compiled step is bitwise the pre-telemetry one.
     """
+    tel_on = tel is not None and tel.enabled
     rt = RoutingTables(g)
     Q = g.num_queues
     C = p.queue_capacity
@@ -923,6 +934,27 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             "rx_base": dst_track.base,
             "src_base": src_track.base,
         }
+        if tel_on:
+            # telemetry probe: per-queue event increments off signals
+            # the tick already computed. Trim vs silent-drop follows the
+            # transport's own split (no-trim profiles drop overflow);
+            # dead/gray losses are silent drops by definition. safe_cq
+            # holds each event lane's target queue (events are subsets
+            # of the pre-filter candidate set).
+            if p.trimming:
+                trim_ev, drop_ev = overflow, is_dead | is_lost
+            else:
+                trim_ev = jnp.zeros_like(overflow)
+                drop_ev = is_dead | is_lost | overflow
+            hot_cand = safe_cq[None, :] == qidx[:, None]       # [Q, Q+F]
+            out["probe"] = {
+                "mark": mark.astype(jnp.int32),
+                "trim": (hot_cand & trim_ev[None, :]).sum(
+                    axis=1, dtype=jnp.int32),
+                "drop": (hot_cand & drop_ev[None, :]).sum(
+                    axis=1, dtype=jnp.int32),
+                "rtt": rtt, "has_rtt": has_ack, "cwnd": out["cwnd"],
+            }
         return ns, out
 
     return step
@@ -949,6 +981,26 @@ class SimResult:
     Every tick past the horizon is provably a protocol no-op, so
     windowed statistics treat missing ticks as zero-delivery — the
     values equal a fixed-``max_ticks`` run bit for bit.
+
+    ``telemetry`` is a :class:`~repro.network.telemetry.FabricTrace`
+    when the run was dispatched with ``telemetry=TelemetrySpec.on(...)``
+    (``trace="stats"`` only), else ``None``.
+
+    Scalar stat counters (streamed in both trace tiers; each also a
+    property here):
+
+    ==================  ====================================================
+    property            counts
+    ==================  ====================================================
+    ``trims``           packets trimmed on queue overflow (fast NACK sent)
+    ``drops``           silent drops: dead-link, gray-link, and no-trim
+                        overflow losses (no NACK — timeout/OOO recovery)
+    ``dups``            duplicate deliveries discarded at the receiver
+    ``timeouts``        RTO expiries (RUD stalls + ROD timeout rewinds)
+    ``rtx_packets``     retransmitted packets injected
+    ``ev_evictions``    path (EV) evictions by the recovery loop
+    ``ticks_degraded``  executed ticks with at least one dead link
+    ==================  ====================================================
     """
 
     state: SimState
@@ -970,6 +1022,8 @@ class SimResult:
     stat_win_delivered: "np.ndarray | None" = None   # [F] packets in window
     goodput_window: "tuple[int, int] | None" = None
     qlen_peak: "int | None" = None
+    #: reconstructed probe-lane time series (telemetry=TelemetrySpec.on())
+    telemetry: "telem.FabricTrace | None" = None
 
     def completion_ticks(self) -> np.ndarray:
         """Per-flow first tick by which the full message was delivered
@@ -1044,7 +1098,24 @@ class SimResult:
         d = self.delivered_per_tick[w0:min(w1, self.horizon)]
         return d.sum(axis=0) / float(w1 - w0)
 
-    # ---- fault / recovery counters (streamed in both trace tiers) -------
+    # ---- scalar stat counters (streamed in both trace tiers; see the
+    # ---- class docstring table) -----------------------------------------
+    @property
+    def trims(self) -> int:
+        """Packets trimmed on queue overflow (each sent a fast NACK)."""
+        return int(self.state.trims)
+
+    @property
+    def drops(self) -> int:
+        """Silent drops — dead-link, gray-link, and (no-trim profiles)
+        overflow losses. No NACK: only timeout/OOO inference recovers."""
+        return int(self.state.drops)
+
+    @property
+    def dups(self) -> int:
+        """Duplicate deliveries discarded at the receiver."""
+        return int(self.state.dups)
+
     @property
     def timeouts(self) -> int:
         """RTO expiries over the run (RUD stalls + ROD timeout rewinds)."""
@@ -1143,18 +1214,24 @@ _RUN_CACHE: dict = {}
 
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
                F: int, batched: bool, trace: str = "stats", shard=None,
-               lossy: bool = False):
+               lossy: bool = False, tel: "TelemetrySpec | None" = None):
     # the horizon (p.ticks) is a traced bound, not a compiled constant:
     # strip it so one executable serves every tick budget. `shard` is
     # None (unsharded) or the device-id tuple a sharded executable was
     # built for (repro.network.shard). `lossy` selects the executable
-    # with the gray-link loss draw compiled in (see make_step).
+    # with the gray-link loss draw compiled in (see make_step). `tel`
+    # (a TelemetrySpec, static like the profile) selects the executable
+    # with the probe lanes compiled in; None and the off spec share the
+    # pre-telemetry entry.
+    if tel is not None and not tel.enabled:
+        tel = None
     return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace,
-            shard, lossy)
+            shard, lossy, tel)
 
 
 def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
-               F: int, batched: bool, trace: str, lossy: bool = False):
+               F: int, batched: bool, trace: str, lossy: bool = False,
+               tel: "TelemetrySpec | None" = None):
     """(init, run) pair for one trace tier — UN-jitted, so the sharded
     engine (repro.network.shard) can wrap the same driver in shard_map
     before compiling. `_get_fns` jits and caches; behavior contract:
@@ -1183,7 +1260,13 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
     are unchanged: a stopped lane is frozen at its own chunk boundary,
     and a partial final chunk cannot overrun the budget.
     """
-    step = make_step(g, profile, p, F, lossy)
+    tel_on = tel is not None and tel.enabled
+    if tel_on and trace != "stats":
+        raise ValueError(
+            "telemetry lanes ride the streaming stats carry — enabled "
+            "TelemetrySpec requires trace='stats' (the full tier already "
+            "records dense per-tick lanes)")
+    step = make_step(g, profile, p, F, lossy, tel if tel_on else None)
     chunk = int(p.chunk_ticks)
     if chunk < 1:
         raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
@@ -1192,15 +1275,38 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
     def init_one(wl, seed):
         return init_state(g, wl, profile, p, seed)
 
+    # the stat transition with the telemetry lanes riding inside it:
+    # st["tel"] carries the probe rings (see repro.network.telemetry).
+    # Off (the default), the wrapper ignores the step's out dict and the
+    # carry/stat tree — and therefore the compiled program — is exactly
+    # the pre-telemetry one.
+    if tel_on:
+        tel_up = telem.make_update(tel, g.num_queues, F)
+
+        def stat_one(st, prev, s, wl, tick, w0, w1, out):
+            nst = _stats_update(st, prev, s, wl, tick, w0, w1)
+            nst["tel"] = tel_up(st["tel"], s, out["probe"], tick)
+            return nst
+    else:
+        def stat_one(st, prev, s, wl, tick, w0, w1, out):
+            del out
+            return _stats_update(st, prev, s, wl, tick, w0, w1)
+
+    def stats_init():
+        st = _stats_init(F)
+        if tel_on:
+            st["tel"] = telem.create(tel, g.num_queues, F)
+        return st
+
     if batched:
         init_fn = jax.vmap(init_one)
         stepf = jax.vmap(step, in_axes=(0, None, 0, 0))
         quiet = jax.vmap(_quiescent)
-        statf = jax.vmap(_stats_update,
-                         in_axes=(0, 0, 0, 0, None, None, None))
+        statf = jax.vmap(stat_one,
+                         in_axes=(0, 0, 0, 0, None, None, None, 0))
     else:
         init_fn, stepf, quiet, statf = (init_one, step, _quiescent,
-                                        _stats_update)
+                                        stat_one)
 
     if trace == "stats":
         def run(s0, wl, fault, budget, w0, w1):
@@ -1218,8 +1324,8 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
                 def tick_body(c, i):
                     s, st = c
                     tick = tick0 + i
-                    ns, _ = stepf(s, tick, wl, fault)
-                    nst = statf(st, s, ns, wl, tick, w0, w1)
+                    ns, out = stepf(s, tick, wl, fault)
+                    nst = statf(st, s, ns, wl, tick, w0, w1, out)
                     if stop is None:
                         return (ns, nst), None
                     live = (tick < budget) & ~stop
@@ -1251,7 +1357,7 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
             hz0 = jnp.where(stop0, jnp.minimum(jnp.int32(0), budget), -1)
             st0 = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, bshape + a.shape),
-                _stats_init(F))
+                stats_init())
             s, st, _, _, hz = jax.lax.while_loop(
                 lambda c: ~c[3].all(), body,
                 (s0, st0, jnp.int32(0), stop0, hz0))
@@ -1287,13 +1393,15 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
 
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
-             F: int, batched: bool, trace: str, lossy: bool = False):
+             F: int, batched: bool, trace: str, lossy: bool = False,
+             tel: "TelemetrySpec | None" = None):
     """Jitted + cached (init, run) pair — see `_build_fns` for the
     driver contract. Both runs donate the carry."""
-    key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy)
+    key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy, tel=tel)
     fns = _RUN_CACHE.get(key)
     if fns is None:
-        init_fn, run = _build_fns(g, profile, p, F, batched, trace, lossy)
+        init_fn, run = _build_fns(g, profile, p, F, batched, trace, lossy,
+                                  tel)
         fns = (jax.jit(init_fn), jax.jit(run, donate_argnums=(0,)))
         _RUN_CACHE[key] = fns
     return fns
@@ -1409,7 +1517,12 @@ def _full_result(final: SimState, outs: dict, msg_size, horizon: int,
 
 
 def _stats_result(final: SimState, st: dict, msg_size, horizon: int,
-                  budget: int, goodput_window) -> SimResult:
+                  budget: int, goodput_window,
+                  tel: "TelemetrySpec | None" = None) -> SimResult:
+    trace_obj = None
+    if tel is not None and tel.enabled:
+        trace_obj = telem.FabricTrace.from_lanes(tel, st["tel"],
+                                                 int(horizon))
     return SimResult(
         state=final, msg_size=np.asarray(msg_size),
         horizon=int(horizon), max_ticks=int(budget), trace="stats",
@@ -1419,6 +1532,7 @@ def _stats_result(final: SimState, st: dict, msg_size, horizon: int,
         goodput_window=(None if goodput_window is None
                         else tuple(int(w) for w in goodput_window)),
         qlen_peak=int(st["qlen_peak"]),
+        telemetry=trace_obj,
     )
 
 
@@ -1430,12 +1544,30 @@ def _to_result(final: SimState, outs: dict, msg_size) -> SimResult:
     return _full_result(jax.device_get(final), outs, msg_size, t, t)
 
 
+def _check_telemetry(telemetry, trace: str) -> "TelemetrySpec | None":
+    """Normalize/validate the telemetry= kwarg: None or an off spec is
+    the free pre-telemetry path; enabled specs need trace='stats'."""
+    if telemetry is None:
+        return None
+    if not isinstance(telemetry, TelemetrySpec):
+        raise TypeError(f"telemetry= takes a TelemetrySpec, got "
+                        f"{type(telemetry).__name__}")
+    if not telemetry.enabled:
+        return None
+    if trace != "stats":
+        raise ValueError(
+            "telemetry lanes ride the streaming stats carry — enabled "
+            "TelemetrySpec requires trace='stats'")
+    return telemetry
+
+
 def simulate(g: QueueGraph, wl: Workload,
              profile: "TransportProfile | SimParams | None" = None,
              p: "SimParams | None" = None, *,
              seed: int = DEFAULT_SEED, failed=None, faults=None,
              trace: str = "stats", max_ticks: "int | None" = None,
-             goodput_window: "tuple[int, int] | None" = None) -> SimResult:
+             goodput_window: "tuple[int, int] | None" = None,
+             telemetry: "TelemetrySpec | None" = None) -> SimResult:
     """Run one scenario for at most ``max_ticks`` (default p.ticks),
     exiting early at the first chunk boundary where the scenario is
     quiescent.
@@ -1454,9 +1586,17 @@ def simulate(g: QueueGraph, wl: Workload,
              the compiled executable.
     goodput_window: (w0, w1) to record in-scan for trace="stats" so
              ``result.goodput((w0, w1))`` works without a dense trace.
+    telemetry: a :class:`~repro.network.telemetry.TelemetrySpec`. The
+             spec is STATIC (it picks the executable, like the profile);
+             enabled specs stream the selected probe channels into
+             fixed-size decimated ring lanes riding the stats carry and
+             attach the reconstructed :class:`~repro.network.telemetry.
+             FabricTrace` as ``result.telemetry``. ``None`` / the off
+             spec compile the identical pre-telemetry program.
     """
     profile, p, failed = _normalize_call(profile, p, failed)
     _check_trace(trace)
+    tel = _check_telemetry(telemetry, trace)
     budget = int(p.ticks if max_ticks is None else max_ticks)
     F = int(wl.src.shape[0])
     profile.delivery_modes(F)  # validate per-flow tuples early
@@ -1465,14 +1605,15 @@ def simulate(g: QueueGraph, wl: Workload,
         fault = FaultSchedule.from_mask(_failed_to_mask(g, failed))
     lossy = bool(np.asarray(fault.loss_p).any())
     init, run = _get_fns(g, profile, p, F, batched=False, trace=trace,
-                         lossy=lossy)
+                         lossy=lossy, tel=tel)
     s0 = init(wl, jnp.uint32(seed))
     if trace == "stats":
         w0, w1 = _window_bounds(goodput_window, budget)
         final, st, horizon = run(s0, wl, fault, jnp.int32(budget),
                                  jnp.int32(w0), jnp.int32(w1))
         return _stats_result(jax.device_get(final), jax.device_get(st),
-                             wl.size, int(horizon), budget, goodput_window)
+                             wl.size, int(horizon), budget, goodput_window,
+                             tel=tel)
     final, outs, horizon = _run_full_host(run, s0, wl, fault, budget,
                                           p.chunk_ticks, batch=None)
     return _full_result(jax.device_get(final), outs, wl.size,
@@ -1480,14 +1621,16 @@ def simulate(g: QueueGraph, wl: Workload,
 
 
 def _split_stats_results(final, st, sizes, horizon, budget, goodput_window,
-                         B: int) -> "list[SimResult]":
+                         B: int,
+                         tel: "TelemetrySpec | None" = None
+                         ) -> "list[SimResult]":
     """Per-scenario SimResults from host-side batched stats lanes (lanes
     past B — shard padding — are dropped)."""
     return [
         _stats_result(
             jax.tree_util.tree_map(lambda a: a[b], final),
             jax.tree_util.tree_map(lambda a: a[b], st),
-            sizes[b], int(horizon[b]), budget, goodput_window)
+            sizes[b], int(horizon[b]), budget, goodput_window, tel=tel)
         for b in range(B)
     ]
 
@@ -1506,16 +1649,16 @@ def _split_full_results(final, outs, sizes, horizon, budget,
 
 
 def _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
-               goodput_window, devices=None) -> "list[SimResult]":
+               goodput_window, devices=None, tel=None) -> "list[SimResult]":
     if devices is not None:
         from repro.network import shard
         return shard.run_sharded(g, wls, profile, p, fault, seeds, trace,
-                                 budget, goodput_window, devices)
+                                 budget, goodput_window, devices, tel=tel)
     B, F = wls.src.shape
     profile.delivery_modes(F)
     lossy = bool(np.asarray(fault.loss_p).any())
     init, run = _get_fns(g, profile, p, F, batched=True, trace=trace,
-                         lossy=lossy)
+                         lossy=lossy, tel=tel)
     s0 = init(wls, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
@@ -1526,7 +1669,7 @@ def _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
         st = jax.device_get(st)
         horizon = np.asarray(horizon)
         return _split_stats_results(final, st, sizes, horizon, budget,
-                                    goodput_window, B)
+                                    goodput_window, B, tel=tel)
     final, outs, horizon = _run_full_host(run, s0, wls, fault, budget,
                                           p.chunk_ticks, batch=B)
     final = jax.device_get(final)
@@ -1538,7 +1681,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
                    failed=None, faults=None, seeds=None,
                    trace: str = "stats", max_ticks: "int | None" = None,
                    goodput_window: "tuple[int, int] | None" = None,
-                   shard: bool = False, devices=None
+                   shard: bool = False, devices=None,
+                   telemetry: "TelemetrySpec | None" = None
                    ) -> "list[SimResult]":
     """Run B scenarios as compiled, batched chunked while-scans.
 
@@ -1577,6 +1721,13 @@ def simulate_batch(g: QueueGraph, wls: Workload,
              ragged scenario counts are padded with inert no-op lanes
              and the padding is dropped from the results. Per-lane
              results stay bitwise identical to the unsharded path.
+    telemetry: one :class:`~repro.network.telemetry.TelemetrySpec` for
+             the whole batch (static: the spec picks the executable,
+             like the profile). Enabled specs stream each scenario's
+             probe channels into its own ring lanes — vmapped on the
+             scenario axis, sharded with it, inert on padding lanes —
+             and attach per-scenario ``result.telemetry`` traces,
+             bitwise identical to the serial ``simulate`` call's.
 
     Returns one SimResult per scenario, bitwise identical to the
     corresponding serial ``simulate`` call: the tick function is the same
@@ -1611,6 +1762,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
                             "TransportProfile instances")
     profile, p, failed = _normalize_call(profile, p, failed)
     _check_trace(trace)
+    tel = _check_telemetry(telemetry, trace)
     budget = int(p.ticks if max_ticks is None else max_ticks)
     B, F = wls.src.shape
     if graphs is not None and len(graphs) != B:
@@ -1650,7 +1802,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
 
     if profiles is None and graphs is None:
         return _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
-                          goodput_window, devices=devices)
+                          goodput_window, devices=devices, tel=tel)
 
     # per-scenario profiles and/or topologies: group scenarios by the
     # (static) pair and run each group as one vmapped scan — one
@@ -1684,7 +1836,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
         gr, prof, idxs, sub_wls, sub_fault, sub_seeds = item
         return idxs, _run_batch(gr, sub_wls, prof, p, sub_fault, sub_seeds,
                                 trace, budget, goodput_window,
-                                devices=devices)
+                                devices=devices, tel=tel)
 
     if len(items) > 1:
         from concurrent.futures import ThreadPoolExecutor

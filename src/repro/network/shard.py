@@ -66,16 +66,20 @@ def resolve_devices(devices, shard: bool):
 
 
 def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
-                 lossy: bool = False):
+                 lossy: bool = False, tel=None):
     """Jitted + cached (init, run) pair whose scenario axis is sharded
     over `devs`. Same driver as the unsharded batched engine, wrapped in
-    shard_map before jit; cached beside it under the device-id tuple."""
+    shard_map before jit; cached beside it under the device-id tuple.
+    Telemetry lanes (``tel``: a TelemetrySpec) ride inside the stats
+    carry, so the partition specs are untouched — every probe-ring leaf
+    is sharded on its leading scenario axis like the other stat lanes."""
     key = fabric._cache_key(g, profile, p, F, True, trace,
-                            shard=tuple(d.id for d in devs), lossy=lossy)
+                            shard=tuple(d.id for d in devs), lossy=lossy,
+                            tel=tel)
     fns = fabric._RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = fabric._build_fns(g, profile, p, F, batched=True,
-                                         trace=trace, lossy=lossy)
+                                         trace=trace, lossy=lossy, tel=tel)
         mesh = Mesh(np.array(devs), (_AXIS,))
         sc, rep = P(_AXIS), P()
         if trace == "stats":
@@ -97,7 +101,8 @@ def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
 
 
 def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
-                goodput_window, devs: tuple) -> "list[fabric.SimResult]":
+                goodput_window, devs: tuple,
+                tel=None) -> "list[fabric.SimResult]":
     """One profile group's batch, sharded over `devs`. Called by
     ``fabric._run_batch`` — same inputs/outputs, bitwise-identical
     per-scenario results. ``fault`` is a [B, Q]-leaved FaultSchedule;
@@ -117,7 +122,7 @@ def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
             fault, FaultSchedule.healthy(g.num_queues, batch=pad))
         seeds = jnp.concatenate(
             [seeds, jnp.full((pad,), fabric.DEFAULT_SEED, jnp.uint32)])
-    init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy)
+    init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy, tel=tel)
     s0 = init(wls_p, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
@@ -128,7 +133,8 @@ def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
         st = jax.device_get(st)
         horizon = np.asarray(horizon)
         return fabric._split_stats_results(final, st, sizes, horizon,
-                                           budget, goodput_window, B)
+                                           budget, goodput_window, B,
+                                           tel=tel)
     final, outs, horizon = fabric._run_full_host(
         run, s0, wls_p, fault, budget, p.chunk_ticks, batch=B + pad)
     final = jax.device_get(final)

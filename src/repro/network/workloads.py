@@ -63,6 +63,26 @@ def pad_scenarios(wls: Workload, multiple: int) -> "tuple[Workload, int]":
 # scenario sweeps (batched: feed to fabric.simulate_batch)
 # ------------------------------------------------------------------------
 
+def victim_sweep(pairs: int = 12, uplinks: int = 4, size: int = 100000):
+    """The canonical victim-share scenario: the Fig. 7 in-network
+    oversubscription pattern (:func:`in_network`) at bench scale —
+    `pairs` cross-leaf flows squeezed through `uplinks` spine links
+    while one same-leaf "victim" flow shares one of the receivers.
+
+    ONE definition shared by the profile-ablation bench, the
+    ``fabric_health`` telemetry bench, the telemetry canary
+    (``python -m repro.network.telemetry``) and the tests, so they all
+    observe the same fabric. Returns ``(g, wl, exp)`` with
+    ``exp["victim_flow"]`` the index of the discriminating same-leaf
+    flow and ``exp["uplinks"]`` the leaf-0 uplink queue ids (the
+    contended links — the natural fault-injection targets).
+    """
+    g, wl, exp = in_network(pairs, uplinks, size=size)
+    return g, wl, dict(
+        exp, victim_flow=pairs,
+        uplinks=tuple(int(g.up1_table[0, i]) for i in range(uplinks)))
+
+
 def profile_ablation_sweep(pairs: int = 12, uplinks: int = 4,
                            size: int = 100000):
     """The paper's operating-point grid as ONE ``simulate_batch`` call:
@@ -88,13 +108,12 @@ def profile_ablation_sweep(pairs: int = 12, uplinks: int = 4,
     profiles, p)``; the engine groups scenarios by profile (one
     executable each, run concurrently).
     """
-    g, wl, exp = in_network(pairs, uplinks, size=size)
+    g, wl, exp = victim_sweep(pairs, uplinks, size=size)
     profiles = [TransportProfile.ai_base(), TransportProfile.ai_full(),
                 TransportProfile.hpc(), *cc_ablation(),
                 replace(TransportProfile.ai_full(), cc=CCAlgo.NONE,
                         name="open_loop")]
     wls = Workload.stack([wl] * len(profiles))
-    exp = dict(exp, victim_flow=pairs)
     return g, wls, profiles, [p.name for p in profiles], exp
 
 def collective_sweep(n: int = 8, size: int = 40, hosts_per_leaf: int = 2):

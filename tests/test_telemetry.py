@@ -1,0 +1,349 @@
+"""Fabric telemetry plane (repro.network.telemetry): contracts.
+
+Locked here (see DESIGN.md "Telemetry contract"):
+
+* telemetry OFF is FREE — ``telemetry=None`` and an off spec normalize
+  to the same compile-cache key as the pre-telemetry engine, and an
+  off-run's ``trace="full"`` lanes stay bitwise equal to the PR-2
+  golden anchors;
+* probes OBSERVE, never perturb — a telemetry-on run's final SimState
+  is bitwise the off-run's;
+* probe lanes are bitwise deterministic across serial / batched /
+  device-sharded execution, and invariant to ``chunk_ticks`` and to
+  freeze boundaries (a completed lane's ring stops, the live lanes
+  keep sampling);
+* adaptive decimation keeps ONE fixed-size ring tick-uniform at any
+  horizon, and a finer ``probe_every`` agrees with a coarser one at
+  every common sample tick (cumulative channels are lossless);
+* idle (zero-size) scenario lanes are telemetry-inert — all-zero rings,
+  the padding-lane story for sharding;
+* ``workloads.victim_sweep`` is the ONE victim-share definition shared
+  with ``profile_ablation_sweep`` and the flap canary;
+* the SimResult convenience counters (trims / drops / dups) mirror the
+  final-state scalars.
+
+conftest.py forces 4 virtual CPU devices; sharded tests skip (not
+fail) with fewer than 2.
+"""
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lb.schemes import LBScheme
+from repro.network import workloads
+from repro.network.fabric import (SimParams, Workload, _cache_key, simulate,
+                                  simulate_batch)
+from repro.network.faults import FaultSchedule
+from repro.network.profile import TransportProfile
+from repro.network.telemetry import (FabricTrace, TelemetrySpec,
+                                     flap_victim_scenario)
+from repro.network.topology import leaf_spine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fabric_golden.npz")
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4; set by tests/conftest.py unless overridden)")
+
+_TRACE_FIELDS = ("ticks", "occ", "ecn", "trim", "drop", "peak_q", "rtt",
+                 "cwnd", "inflight", "degraded", "delivered")
+
+
+def _state_equal(a, b) -> bool:
+    return all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)))
+
+
+def _assert_traces_equal(a: FabricTrace, b: FabricTrace, label=""):
+    assert a.stride == b.stride, label
+    for f in _TRACE_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None or y is None:
+            assert x is None and y is None, f"{label} {f}"
+            continue
+        np.testing.assert_array_equal(x, y, err_msg=f"{label} {f}")
+
+
+def _small_flap(fail_at=200, heal_at=700):
+    """A compile-cheap victim-share flap: 4 cross-leaf pairs through 2
+    uplinks, one uplink flapping mid-run, non-completing budget."""
+    g, wl, exp = workloads.victim_sweep(pairs=4, uplinks=2, size=2500)
+    sched = FaultSchedule.healthy(g.num_queues).flap(
+        exp["uplinks"][0], fail_at, heal_at)
+    prof = TransportProfile.ai_full(lb=LBScheme.REPS)
+    p = SimParams(ticks=1200, timeout_ticks=64, ooo_threshold=24)
+    return g, wl, prof, p, sched
+
+
+# ------------------------------------------------------------------------
+# spec validation + off-gating
+# ------------------------------------------------------------------------
+
+def test_spec_validation():
+    assert not TelemetrySpec.off().enabled
+    assert TelemetrySpec.on(probe_every=8, slots=32).enabled
+    with pytest.raises(ValueError, match="probe_every"):
+        TelemetrySpec(probe_every=0)
+    with pytest.raises(ValueError, match="slots"):
+        TelemetrySpec(slots=7)
+    with pytest.raises(ValueError, match="slots"):
+        TelemetrySpec(slots=0)
+    with pytest.raises(ValueError, match="ewma_shift"):
+        TelemetrySpec(ewma_shift=17)
+
+
+def test_off_spec_shares_the_pre_telemetry_cache_key():
+    """None and TelemetrySpec.off() must hit the SAME executable as the
+    pre-telemetry engine; an enabled spec must not."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    prof = TransportProfile.ai_full()
+    p = SimParams()
+    base = _cache_key(g, prof, p, 2, True, "stats")
+    assert base == _cache_key(g, prof, p, 2, True, "stats", tel=None)
+    assert base == _cache_key(g, prof, p, 2, True, "stats",
+                              tel=TelemetrySpec.off())
+    on = _cache_key(g, prof, p, 2, True, "stats", tel=TelemetrySpec.on())
+    assert on != base
+    # the spec's knobs pick the program: a different cadence recompiles
+    assert on != _cache_key(g, prof, p, 2, True, "stats",
+                            tel=TelemetrySpec.on(probe_every=8))
+
+
+def test_telemetry_off_keeps_golden_full_trace_bitwise():
+    """An explicit off spec through the public API reproduces the PR-2
+    golden lanes bitwise — telemetry-off IS the pre-telemetry engine."""
+    gold = np.load(GOLDEN)
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300),
+                 trace="full", telemetry=TelemetrySpec.off())
+    assert r.telemetry is None
+    h = r.horizon
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:h])
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"][:h])
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  gold["a_state_delivered"])
+
+
+def test_enabled_spec_rejects_full_trace_and_wrong_types():
+    g, wl, prof, p, sched = _small_flap()
+    with pytest.raises(ValueError, match="stats"):
+        simulate(g, wl, prof, p, trace="full",
+                 telemetry=TelemetrySpec.on())
+    with pytest.raises(TypeError, match="TelemetrySpec"):
+        simulate(g, wl, prof, p, telemetry=True)
+
+
+# ------------------------------------------------------------------------
+# probes observe, never perturb
+# ------------------------------------------------------------------------
+
+def test_probes_do_not_perturb_and_counters_mirror_state():
+    g, wl, prof, p, sched = _small_flap()
+    r_on = simulate(g, wl, prof, p, faults=sched,
+                    telemetry=TelemetrySpec.on())
+    r_off = simulate(g, wl, prof, p, faults=sched)
+    assert r_on.horizon == r_off.horizon
+    assert _state_equal(r_on.state, r_off.state)
+    assert r_off.telemetry is None
+    tr = r_on.telemetry
+    assert isinstance(tr, FabricTrace) and tr.spec.enabled
+    assert tr.num_samples > 0 and tr.horizon == r_on.horizon
+    # satellite: the SimResult counter properties mirror the state
+    for r in (r_on, r_off):
+        assert r.trims == int(np.asarray(r.state.trims))
+        assert r.drops == int(np.asarray(r.state.drops))
+        assert r.dups == int(np.asarray(r.state.dups))
+    assert r_on.drops > 0, "the flap must actually drop packets"
+    # the cumulative drop ring agrees with the scoreboard at the end
+    assert int(tr.drop[-1].sum()) == int(tr.final["drop_q"].sum())
+
+
+# ------------------------------------------------------------------------
+# serial == batched == sharded, with freeze boundaries in play
+# ------------------------------------------------------------------------
+
+def _flap_batch():
+    """Ragged 3-lane flap batch: one lane completes mid-run (freeze
+    boundary), two run to budget; per-lane fault windows + seeds."""
+    g, wl, prof, p, _ = _small_flap()
+    sizes = (300, 2500, 900)
+    wls = Workload.stack([replace(wl, size=jnp.full_like(wl.size, s))
+                          for s in sizes])
+    q = int(g.up1_table[0, 0])
+    scheds = FaultSchedule.stack([
+        FaultSchedule.healthy(g.num_queues).flap(q, 200, 500),
+        FaultSchedule.healthy(g.num_queues).flap(q, 300, 800),
+        FaultSchedule.healthy(g.num_queues).flap(q, 100, 1100),
+    ])
+    seeds = np.arange(3, dtype=np.uint32) + 0x5EED
+    return g, wls, prof, p, scheds, seeds
+
+
+def test_batched_traces_match_serial_bitwise():
+    g, wls, prof, p, scheds, seeds = _flap_batch()
+    spec = TelemetrySpec.on()
+    rs = simulate_batch(g, wls, prof, p, faults=scheds, seeds=seeds,
+                        telemetry=spec)
+    assert len({r.horizon for r in rs}) > 1, "batch must be ragged"
+    for i, r in enumerate(rs):
+        solo = simulate(
+            g, jax.tree_util.tree_map(lambda a: a[i], wls), prof, p,
+            faults=jax.tree_util.tree_map(lambda a: a[i], scheds),
+            seed=int(seeds[i]), telemetry=spec)
+        assert solo.horizon == r.horizon, f"lane {i}"
+        assert _state_equal(solo.state, r.state), f"lane {i}"
+        _assert_traces_equal(solo.telemetry, r.telemetry, f"lane {i}")
+
+
+@multi_device
+def test_sharded_traces_match_batched_bitwise():
+    """B=3 on all devices (ragged -> one padding lane) with per-lane
+    FaultSchedules: the sharded probe rings equal the unsharded ones."""
+    g, wls, prof, p, scheds, seeds = _flap_batch()
+    spec = TelemetrySpec.on()
+    base = simulate_batch(g, wls, prof, p, faults=scheds, seeds=seeds,
+                          telemetry=spec)
+    shd = simulate_batch(g, wls, prof, p, faults=scheds, seeds=seeds,
+                         telemetry=spec, shard=True)
+    assert len(shd) == len(base) == 3
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"lane {i}"
+        assert _state_equal(a.state, b.state), f"lane {i}"
+        _assert_traces_equal(a.telemetry, b.telemetry, f"lane {i}")
+
+
+def test_chunk_size_is_invisible_in_the_probe_lanes():
+    """chunk_ticks only tiles the while-scan; the sample decision
+    depends on (tick, count, stride) alone, so 64/96/128-tick chunks
+    (the 128 case takes a masked remainder chunk) must produce the
+    identical FabricTrace."""
+    g, wl, prof, p, sched = _small_flap()
+    spec = TelemetrySpec.on()
+    p = replace(p, ticks=960)
+    traces = []
+    for ck in (64, 96, 128):
+        r = simulate(g, wl, prof, replace(p, chunk_ticks=ck),
+                     faults=sched, telemetry=spec)
+        assert r.horizon == 960, f"chunk {ck}: scenario must not complete"
+        traces.append(r.telemetry)
+    _assert_traces_equal(traces[0], traces[1], "chunk 64 vs 96")
+    _assert_traces_equal(traces[0], traces[2], "chunk 64 vs 128")
+
+
+# ------------------------------------------------------------------------
+# adaptive decimation
+# ------------------------------------------------------------------------
+
+def test_decimation_keeps_the_ring_uniform_at_any_horizon():
+    """slots=8 over a 1200-tick run forces several decimations: the
+    surviving grid must stay tick-uniform at stride * probe_every
+    spacing, within capacity, starting at tick 0."""
+    g, wl, prof, p, sched = _small_flap()
+    spec = TelemetrySpec.on(probe_every=16, slots=8)
+    tr = simulate(g, wl, prof, p, faults=sched, telemetry=spec).telemetry
+    assert tr.stride > 1, "the ring must have decimated"
+    assert 0 < tr.num_samples <= 8
+    assert tr.ticks[0] == 0
+    assert (np.diff(tr.ticks) == tr.sample_spacing).all()
+    assert tr.sample_spacing == tr.stride * 16
+
+
+def test_finer_probe_every_agrees_at_common_sample_ticks():
+    """probe_every=8 vs 16 on the same run: every channel is equal at
+    the sample ticks both grids retain — the EWMA and the cumulative
+    counters advance every tick, so WHEN you sample never changes WHAT
+    you sample."""
+    g, wl, prof, p, sched = _small_flap()
+    fine = simulate(g, wl, prof, p, faults=sched,
+                    telemetry=TelemetrySpec.on(probe_every=8)).telemetry
+    coarse = simulate(g, wl, prof, p, faults=sched,
+                      telemetry=TelemetrySpec.on(probe_every=16)).telemetry
+    common, fi, ci = np.intersect1d(fine.ticks, coarse.ticks,
+                                    return_indices=True)
+    assert common.size >= 16, "grids must overlap substantially"
+    for f in ("occ", "ecn", "trim", "drop", "rtt", "cwnd"):
+        np.testing.assert_array_equal(getattr(fine, f)[fi],
+                                      getattr(coarse, f)[ci], err_msg=f)
+    for f in ("inflight", "degraded", "delivered"):
+        np.testing.assert_array_equal(getattr(fine, f)[fi],
+                                      getattr(coarse, f)[ci], err_msg=f)
+    np.testing.assert_array_equal(fine.peak_q, coarse.peak_q)
+
+
+def test_window_rates_are_exact_across_decimation():
+    """Cumulative channels survive decimation losslessly: the drop count
+    over the whole run recovered from window_rates equals the final
+    accumulator, even after the ring decimated."""
+    g, wl, prof, p, sched = _small_flap()
+    tr = simulate(g, wl, prof, p, faults=sched,
+                  telemetry=TelemetrySpec.on(slots=16)).telemetry
+    assert tr.stride > 1
+    last = int(tr.ticks[-1])
+    r = tr.window_rates(0, last + 1)
+    assert float(r["drop"].sum()) * (last + 1) == pytest.approx(
+        float(tr.drop[-1].sum()))
+
+
+# ------------------------------------------------------------------------
+# channel gating + idle lanes
+# ------------------------------------------------------------------------
+
+def test_disabled_channel_groups_carry_no_lanes():
+    g, wl, prof, p, sched = _small_flap()
+    spec = TelemetrySpec.on(queues=False, gauges=False)
+    tr = simulate(g, wl, prof, p, faults=sched, telemetry=spec).telemetry
+    assert tr.occ.shape[1] == 0 and tr.ecn.shape[1] == 0
+    assert tr.inflight is None and tr.delivered is None
+    assert tr.rtt.shape[1] > 0, "flow channels stay on"
+    with pytest.raises(ValueError, match="queue channels"):
+        tr.window_rates(0, 100)
+
+
+def test_idle_lane_rings_are_all_zero():
+    """A zero-size lane (the sharding padding story) never injects:
+    its probe rings must be identically zero."""
+    g, wl, prof, p, _ = _small_flap()
+    idle = jax.tree_util.tree_map(lambda a: a[0],
+                                  workloads.noop_scenarios(wl.src.shape[0], 1))
+    rs = simulate_batch(g, Workload.stack([wl, idle]), prof, p,
+                        telemetry=TelemetrySpec.on())
+    tr = rs[1].telemetry
+    for f in ("occ", "ecn", "trim", "drop", "rtt"):
+        assert (np.asarray(getattr(tr, f)) == 0).all(), f
+    assert (tr.inflight == 0).all() and (tr.delivered == 0).all()
+    assert int(np.asarray(rs[1].state.delivered).sum()) == 0
+    # the busy lane next door is unaffected by sharing the batch
+    assert (np.asarray(rs[0].telemetry.ecn) != 0).any()
+
+
+# ------------------------------------------------------------------------
+# the shared victim-share definition
+# ------------------------------------------------------------------------
+
+def test_victim_sweep_is_the_shared_definition():
+    g, wl, exp = workloads.victim_sweep(pairs=6, uplinks=2, size=500)
+    assert exp["victim_flow"] == 6
+    assert len(exp["uplinks"]) == 2
+    assert wl.src.shape[0] == 7           # pairs cross-leaf + 1 victim
+    ga, wls, profiles, names, exp_a = workloads.profile_ablation_sweep(
+        pairs=6, uplinks=2, size=500)
+    assert exp_a["victim_flow"] == exp["victim_flow"]
+    assert exp_a["uplinks"] == exp["uplinks"]
+    for i in range(len(profiles)):        # every ablation lane IS wl
+        np.testing.assert_array_equal(np.asarray(wls.src[i]),
+                                      np.asarray(wl.src))
+        np.testing.assert_array_equal(np.asarray(wls.size[i]),
+                                      np.asarray(wl.size))
+    g2, wl2, prof, p, sched, spec, (fail_at, heal_at) = \
+        flap_victim_scenario()
+    assert spec.enabled and fail_at < heal_at <= p.ticks
+    assert sched.num_queues == g2.num_queues
