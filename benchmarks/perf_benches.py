@@ -90,6 +90,21 @@ state bitwise equals telemetry-off). Prices the plane itself as the
 identical pre-telemetry program, so every existing guarded metric
 doubles as the telemetry-off regression gate.
 
+api_version 9 additions (endpoint-failure resilience):
+``resilience_sweep`` — the endpoint-fault grid
+(``workloads.host_fault_sweep``: host death, the same death with PDC
+liveness off, a healing NIC stall, healthy) as one batch with
+per-scenario host-fault lanes, gated on the teardown contract (the
+dead-host lane quiesces EARLY with its victim flows abandoned; the
+pdc-off twin burns the full budget; the NIC stall completes with
+nothing abandoned), plus the priced checkpoint-restart recovery loop:
+``traffic.price_recovery`` measures detection (fault ->
+``abandon_tick``), sharded-restore and replan-onto-survivors costs for
+a train plan, and the Young/Daly closed forms price effective
+tokens/sec over an MTBF x checkpoint-interval grid — asserting
+in-bench that the Young/Daly interval beats naive fixed intervals at
+every MTBF and that availability is monotone in MTBF.
+
 Writes ``BENCH_fabric.json`` at the repo root so the perf trajectory
 accumulates across PRs; append each run's headline numbers to
 ``BENCH_history.jsonl`` with ``python scripts/bench_history.py``.
@@ -275,7 +290,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 8,
+        "api_version": 9,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -362,6 +377,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     results["profile_ablation"] = _profile_ablation(ticks)
     results["collective_sweep"] = _collective_sweep()
     results["fault_sweep"] = _fault_sweep()
+    results["resilience_sweep"] = _resilience_sweep()
     results["fabric_health"] = _fabric_health()
     results["model_sweep"] = _model_sweep()
     results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
@@ -618,6 +634,126 @@ def _fault_sweep(ticks: int = 4000) -> dict:
     }
 
 
+def _resilience_sweep() -> dict:
+    """Endpoint-failure resilience: the host-fault grid plus the priced
+    checkpoint-restart recovery loop.
+
+    In-bench teardown gates (a resilience bench whose dead host changes
+    nothing is measuring nothing):
+
+    * the dead-host lane must quiesce EARLY (horizon < budget) with
+      exactly its victim flows abandoned and its survivors complete —
+      PDC liveness teardown turns a permanent endpoint death from a
+      budget burn into an early exit;
+    * the pdc-off twin of the SAME scenario must burn the full budget
+      with nothing abandoned (the separation the feature buys);
+    * the healing NIC stall must complete with nothing abandoned (a
+      wedged-but-ACK-live endpoint is not dead);
+    * the healthy lane abandons nothing.
+
+    Economics gates (guaranteed by the closed forms, asserted against
+    the MEASURED recovery costs): the Young/Daly interval beats naive
+    fixed checkpoint intervals at every MTBF, and availability at the
+    per-MTBF optimum is monotone non-decreasing in MTBF.
+    """
+    from repro import configs
+    from repro.ckpt.checkpointing import (availability, effective_rate,
+                                          young_daly_interval)
+    from repro.distributed.plan import derive_plan
+    from repro.network import workloads
+    from repro.network.fabric import SimParams, simulate_batch
+    from repro.network.traffic import checkpoint_seconds, price_recovery
+
+    # --- the endpoint-fault grid: one batched call, host lanes riding ---
+    g, wls, scheds, exp = workloads.host_fault_sweep()
+    budget = exp["budget"]
+    p = SimParams(ticks=budget, timeout_ticks=64)
+    run = lambda: simulate_batch(g, wls, exp["profile"], p,  # noqa: E731
+                                 faults=scheds)
+    t0 = time.perf_counter()
+    rs = run()
+    cold = time.perf_counter() - t0
+    warm = min(_timed(run) for _ in range(2))
+    by = dict(zip(exp["names"], rs))
+
+    dead, off = by["host_dead"], by["host_dead_pdc_off"]
+    assert dead.flows_abandoned == len(exp["dead_flows"]), \
+        int(dead.flows_abandoned)
+    assert dead.horizon < budget, (dead.horizon, budget)
+    assert int(dead.abandon_tick) > 0 and dead.ticks_unreachable > 0
+    cts = dead.completion_ticks()
+    assert all(int(cts[i]) == -1 for i in exp["dead_flows"])
+    assert all(int(ct) > 0 for i, ct in enumerate(cts)
+               if i not in exp["dead_flows"]), cts.tolist()
+    assert off.flows_abandoned == 0 and off.horizon == budget, \
+        (int(off.flows_abandoned), off.horizon)
+    stall = by["nic_stall"]
+    assert stall.flows_abandoned == 0 and stall.completion_tick() > 0
+    assert by["healthy"].flows_abandoned == 0
+
+    # --- the priced recovery loop: one train plan, one host loss ---
+    plan = derive_plan(configs.get("deepseek-coder-33b"), "train_4k",
+                       dp=4, tp=4, layout="fsdp_tp")
+    t0 = time.perf_counter()
+    rc = price_recovery(plan)
+    recovery_s = time.perf_counter() - t0
+    assert rc.horizon < rc.budget, (rc.horizon, rc.budget)
+    write_s = checkpoint_seconds(plan)
+    kw = dict(write_s=write_s, detect_s=rc.detect_s,
+              restore_s=rc.restore_s, replan_s=rc.replan_s)
+
+    naive = (30.0, 900.0)
+    grid = []
+    prev_av = 0.0
+    for mtbf in (1800.0, 3600.0, 7200.0, 14400.0):
+        tau = young_daly_interval(mtbf, write_s)
+        av = availability(tau, mtbf, **kw)
+        eff = effective_rate(rc.healthy_tokens_per_sec, tau, mtbf, **kw)
+        for iv in naive:
+            eff_iv = effective_rate(rc.healthy_tokens_per_sec, iv, mtbf,
+                                    **kw)
+            assert eff > eff_iv, (mtbf, iv, eff, eff_iv)
+        assert av >= prev_av, (mtbf, av, prev_av)
+        prev_av = av
+        grid.append({
+            "mtbf_s": mtbf,
+            "daly_interval_s": round(tau, 2),
+            "availability": round(av, 5),
+            "effective_tokens_per_sec": round(eff, 1),
+            "naive_effective_tokens_per_sec": {
+                str(int(iv)): round(effective_rate(
+                    rc.healthy_tokens_per_sec, iv, mtbf, **kw), 1)
+                for iv in naive},
+        })
+
+    return {
+        "scenarios": len(exp["names"]),
+        "budget": budget,
+        "sweep_cold_s": cold,
+        "sweep_warm_s": warm,
+        "scenarios_per_sec": len(exp["names"]) / warm,
+        "abandon_tick": int(dead.abandon_tick),
+        "horizon_pdc_on": int(dead.horizon),
+        "horizon_pdc_off": int(off.horizon),
+        "ticks_unreachable": int(dead.ticks_unreachable),
+        "recovery": {
+            "plan": f"{plan.arch} x {plan.shape} dp={plan.dp} tp={plan.tp}",
+            "wall_s": recovery_s,
+            "detect_ticks": rc.detect_ticks,
+            "detect_s": rc.detect_s,
+            "restore_s": rc.restore_s,
+            "replan_s": rc.replan_s,
+            "flows_abandoned": rc.flows_abandoned,
+            "healthy_tokens_per_sec": rc.healthy_tokens_per_sec,
+            "degraded_tokens_per_sec": rc.degraded_tokens_per_sec,
+        },
+        "checkpoint_write_s": write_s,
+        "availability_grid": grid,
+        # headline: availability at the 1h-MTBF Young/Daly optimum
+        "availability_mtbf_3600": grid[1]["availability"],
+    }
+
+
 def _fabric_health(ticks: int = 3000) -> dict:
     """The telemetry plane on the PR-6-style flap scenario: the shared
     victim-share fabric (``workloads.victim_sweep``) with 3 of 4 leaf-0
@@ -795,6 +931,7 @@ def main() -> None:
     print(json.dumps(results, indent=2, sort_keys=True))
     cs = results["collective_sweep"]
     fs = results["fault_sweep"]
+    rz = results["resilience_sweep"]
     fh = results["fabric_health"]
     ms = results["model_sweep"]
     sh = results["sharded_sweep"]
@@ -818,6 +955,11 @@ def main() -> None:
           f"eviction separation "
           f"{fs['eviction_separation']['completion_evict_on']} vs "
           f"{fs['eviction_separation']['completion_evict_off']}; "
+          f"resilience grid {rz['scenarios']} scenarios at "
+          f"{rz['scenarios_per_sec']:.2f}/s, dead host detected at tick "
+          f"{rz['abandon_tick']} and quiesced at {rz['horizon_pdc_on']} vs "
+          f"pdc-off stuck at {rz['horizon_pdc_off']}, 1h-MTBF Young/Daly "
+          f"availability {rz['availability_mtbf_3600']:.4f}; "
           f"model sweep {ms['scenarios']} operating points at "
           f"{ms['scenarios_per_sec']:.2f}/s, separations {ms['separations']}; "
           f"fabric health: outage visible (drops "

@@ -10,6 +10,8 @@ Guarded metrics (throughput — higher is better):
 * ``fault_sweep.scenarios_per_sec``
 * ``model_sweep.scenarios_per_sec`` (api_version >= 7; skipped when the
   committed baseline predates it)
+* ``resilience_sweep.scenarios_per_sec`` (api_version >= 9; the
+  endpoint-fault grid, host-fault lanes riding the scenario axis)
 
 All guarded throughput blocks run with telemetry OFF — the off spec is
 normalized to the pre-telemetry compile key, so these numbers also gate
@@ -69,6 +71,8 @@ METRICS = (
      ("fault_sweep", "scenarios_per_sec")),
     ("model_sweep.scenarios_per_sec",
      ("model_sweep", "scenarios_per_sec")),
+    ("resilience_sweep.scenarios_per_sec",
+     ("resilience_sweep", "scenarios_per_sec")),
 )
 
 

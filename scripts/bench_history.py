@@ -15,8 +15,10 @@ Each record carries the run timestamp, api_version, backend, the
 headline throughput metrics (ticks/sec single + batched, scenarios/sec,
 the sweep blocks' scenarios/sec), the calibration reference that makes
 cross-machine numbers comparable, and — api_version >= 8 — the
-``fabric_health`` telemetry overhead ratio. Missing blocks are simply
-omitted, so records from any bench version coexist in one file.
+``fabric_health`` telemetry overhead ratio, and — api_version >= 9 —
+the resilience grid's scenarios/sec plus its 1h-MTBF Young/Daly
+availability headline. Missing blocks are simply omitted, so records
+from any bench version coexist in one file.
 """
 import argparse
 import datetime
@@ -39,6 +41,10 @@ HEADLINE = (
      ("collective_sweep", "scenarios_per_sec")),
     ("fault_scenarios_per_sec", ("fault_sweep", "scenarios_per_sec")),
     ("model_scenarios_per_sec", ("model_sweep", "scenarios_per_sec")),
+    ("resilience_scenarios_per_sec",
+     ("resilience_sweep", "scenarios_per_sec")),
+    ("availability_mtbf_3600", ("resilience_sweep",
+                                "availability_mtbf_3600")),
     ("profile_scenarios_per_sec",
      ("profile_ablation", "scenarios_per_sec")),
     ("shard_speedup", ("sharded_sweep", "shard_speedup")),

@@ -35,6 +35,13 @@ echo "== fault engine smoke: flap recovery + eviction escape =="
 # escaped via EV eviction (repro.network.faults).
 python -m repro.network.faults
 
+echo "== endpoint canary: dead host -> early quiescence + abandonment =="
+# A mid-run host death under a liveness-enabled profile must be torn
+# down by the PDC (victim flows abandoned, run quiesces early) while
+# the pdc-off twin burns the full budget; a healing NIC stall must
+# complete with nothing abandoned (repro.network.faults --endpoint).
+python -m repro.network.faults --endpoint
+
 echo "== telemetry canary: the flap must be visible in the probe lanes =="
 # The flap-victim scenario with telemetry on: silent drops confined to
 # the fault window, goodput dip + recovery, NSCC mark back-off, heal

@@ -16,19 +16,100 @@ Design for 1000+ node fleets:
 
 On this single-process container "per-host" degenerates to one file, but
 the format and code paths are the multi-host ones.
+
+The module also carries the checkpoint-restart ECONOMICS used by the
+endpoint-failure recovery loop (:func:`young_daly_interval`,
+:func:`availability`, :func:`effective_rate`): the
+`repro.network.traffic` recovery-pricing path measures detection /
+restore / replan costs and these closed forms price effective
+throughput over an MTBF x checkpoint-interval grid.
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 import threading
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard
+
+try:  # IO deps gated: the economics functions above need neither
+    import msgpack
+    import zstandard
+except ImportError:  # pragma: no cover — slim containers
+    msgpack = None
+    zstandard = None
+
+
+def _require_io():
+    if msgpack is None or zstandard is None:
+        raise ImportError("checkpoint IO needs msgpack + zstandard; only "
+                          "the Young/Daly economics work without them")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-restart economics (Young/Daly)
+#
+# The pricing side of the endpoint-failure recovery loop (DESIGN.md
+# "Endpoint failure & recovery contract"): given a failure rate (MTBF), a
+# checkpoint write cost, and the measured recovery costs — detection time
+# from the fabric's PDC-teardown signal, elastic restore, replan — what
+# fraction of wall time is NEW forward progress, and what checkpoint
+# interval maximizes it?
+# ---------------------------------------------------------------------------
+
+def young_daly_interval(mtbf_s: float, write_s: float) -> float:
+    """Young/Daly first-order optimal checkpoint interval:
+    ``tau* = sqrt(2 * write_s * mtbf_s)``.
+
+    Within :func:`availability`'s overhead model this tau is EXACTLY the
+    argmax (d/dtau of ``write/tau + tau/(2*MTBF)`` vanishes there), so
+    any fixed interval != tau* prices strictly worse — the inequality
+    the resilience bench asserts."""
+    if mtbf_s <= 0:
+        raise ValueError(f"mtbf_s must be > 0, got {mtbf_s}")
+    if write_s < 0:
+        raise ValueError(f"write_s must be >= 0, got {write_s}")
+    return math.sqrt(2.0 * write_s * mtbf_s)
+
+
+def availability(interval_s: float, mtbf_s: float, *, write_s: float,
+                 detect_s: float = 0.0, restore_s: float = 0.0,
+                 replan_s: float = 0.0) -> float:
+    """Fraction of wall time spent on new forward progress under
+    periodic checkpointing with exponential failures of rate 1/MTBF:
+
+    * every interval pays one checkpoint write (``write_s / interval_s``
+      of the time);
+    * every failure pays detection (the fabric's fault -> PDC-teardown
+      latency), checkpoint restore, collective replan, and on average
+      half an interval of lost work (``interval_s / 2``).
+
+    ``availability = 1 / (1 + write/tau + (tau/2 + D + R + P) / MTBF)``
+
+    Strictly increasing in MTBF and strictly unimodal in ``interval_s``
+    with its maximum at :func:`young_daly_interval`."""
+    if interval_s <= 0:
+        raise ValueError(f"interval_s must be > 0, got {interval_s}")
+    if mtbf_s <= 0:
+        raise ValueError(f"mtbf_s must be > 0, got {mtbf_s}")
+    for name, v in (("write_s", write_s), ("detect_s", detect_s),
+                    ("restore_s", restore_s), ("replan_s", replan_s)):
+        if v < 0:
+            raise ValueError(f"{name} must be >= 0, got {v}")
+    per_failure = detect_s + restore_s + replan_s + interval_s / 2.0
+    overhead = write_s / interval_s + per_failure / mtbf_s
+    return 1.0 / (1.0 + overhead)
+
+
+def effective_rate(healthy_rate: float, interval_s: float, mtbf_s: float,
+                   **costs) -> float:
+    """Throughput after the checkpoint-restart tax: e.g. effective
+    tokens/sec = healthy tokens/sec x :func:`availability`."""
+    return healthy_rate * availability(interval_s, mtbf_s, **costs)
 
 
 def _flatten(tree: Any):
@@ -47,6 +128,7 @@ def _leaf_paths(tree: Any) -> list[str]:
 def save(ckpt_dir: str, step: int, tree: Any, process_index: int = 0,
          num_processes: int = 1) -> str:
     """Write one checkpoint. Returns the checkpoint path."""
+    _require_io()
     tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
@@ -129,6 +211,7 @@ def restore(ckpt_dir: str, step: int, target_tree: Any,
     is the elastic-rescale path: the checkpoint's mesh layout at save time
     is irrelevant, shards reassemble to global arrays and redistribute.
     """
+    _require_io()
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     dctx = zstandard.ZstdDecompressor()
     blobs: dict[str, dict] = {}

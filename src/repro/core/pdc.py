@@ -33,6 +33,9 @@ class InitEvent(enum.IntEnum):
     DRAINED = 4        # all started messages fully sent
     ALL_ACKED = 5      # every outstanding reply arrived -> send final close
     CLOSE_ACK = 6      # final ACK for the close command
+    PEER_DEAD = 7      # liveness lost: consecutive dead RTOs crossed the
+    #                    teardown threshold -> abort straight to CLOSED
+    #                    (no drain/handshake — the peer cannot answer)
 
 
 class TgtEvent(enum.IntEnum):
@@ -67,6 +70,13 @@ _INIT_TABLE = _table({
     (_S.ESTABLISHED, InitEvent.CLOSE_REQ): _S.QUIESCE,
     (_S.QUIESCE, InitEvent.DRAINED): _S.ACK_WAIT,
     (_S.ACK_WAIT, InitEvent.CLOSE_ACK): _S.CLOSED,
+    # liveness teardown: any live state aborts to CLOSED when the peer is
+    # declared unreachable — there is no one left to drain against. The
+    # orderly QUIESCE -> ACK_WAIT path is bypassed by design.
+    (_S.SYN, InitEvent.PEER_DEAD): _S.CLOSED,
+    (_S.ESTABLISHED, InitEvent.PEER_DEAD): _S.CLOSED,
+    (_S.QUIESCE, InitEvent.PEER_DEAD): _S.CLOSED,
+    (_S.ACK_WAIT, InitEvent.PEER_DEAD): _S.CLOSED,
 }, len(InitEvent))
 
 # Target transitions (Fig. 6 right).
@@ -102,6 +112,19 @@ def may_send_data(state: jax.Array) -> jax.Array:
 def may_accept_new_message(state: jax.Array) -> jax.Array:
     """QUIESCE refuses new messages; CLOSED implicitly allocates."""
     return (state == _S.CLOSED) | (state == _S.SYN) | (state == _S.ESTABLISHED)
+
+
+def unreachable(strikes: jax.Array, dead_after: int) -> jax.Array:
+    """[N] bool liveness verdict: a PDC whose consecutive zero-progress
+    RTO-expiry count has reached ``dead_after`` is declared unreachable
+    and must take the PEER_DEAD teardown. ``dead_after <= 0`` disables
+    (never unreachable) — the same contract as
+    ``TransportProfile.pdc_dead_after``. The fabric engine's quarantine
+    lanes (`repro.network.fabric`) mirror exactly this predicate on its
+    per-flow ``rto_strikes`` counter."""
+    if dead_after <= 0:
+        return jnp.zeros(strikes.shape, bool)
+    return strikes >= jnp.int32(dead_after)
 
 
 @jax.tree_util.register_dataclass

@@ -277,6 +277,34 @@ def derive_plan(cfg: ArchConfig, shape: "ShapeConfig | str", *,
         active_param_bytes=active_param_bytes, demands=tuple(demands))
 
 
+def replan_onto_survivors(plan: ParallelismPlan,
+                          failed_hosts: int = 1) -> ParallelismPlan:
+    """Recovery replan: re-derive the collective schedule on the mesh
+    that SURVIVES ``failed_hosts`` node losses.
+
+    A DP replica spans ``tp * pp`` devices and a failed host takes its
+    whole replica out of rotation (worst case: every failed host hits a
+    distinct replica), so the surviving mesh is ``dp - failed_hosts``
+    replicas wide. The checkpoint restores elastically onto it
+    (``repro.ckpt.checkpointing.restore`` reshards on load), the global
+    batch is unchanged — each survivor carries more tokens and a larger
+    per-rank DP payload, which is exactly the degraded step time the
+    recovery-pricing path charges until the fleet is healed."""
+    if failed_hosts < 0:
+        raise ValueError(f"failed_hosts must be >= 0, got {failed_hosts}")
+    if failed_hosts == 0:
+        return plan
+    new_dp = plan.dp - failed_hosts
+    if new_dp < 1:
+        raise ValueError(
+            f"cannot replan: {failed_hosts} failed hosts leave no "
+            f"surviving DP replica (dp={plan.dp})")
+    from repro import configs
+    cfg = configs.get(plan.arch)
+    return derive_plan(cfg, plan.shape, dp=new_dp, tp=plan.tp, pp=plan.pp,
+                       layout=plan.layout, dtype_bytes=plan.dtype_bytes)
+
+
 def describe(plan: ParallelismPlan) -> str:
     lines = [f"{plan.arch} x {plan.shape}: dp={plan.dp} tp={plan.tp} "
              f"pp={plan.pp} layout={plan.layout} "

@@ -86,6 +86,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import inc, pds
+from repro.core import pdc as pdc_fsm
 from repro.core.cms.nscc import NSCCParams
 from repro.core.lb.schemes import LBPolicy, LBScheme, LBState, _mix32
 from repro.core.lb.schemes import _pick_lane as _pick
@@ -255,7 +256,13 @@ class SimState:
     #: trace tiers via SimResult.timeouts / .ev_evictions / ...)
     timeouts: jax.Array       # [] int32 RTO expiries (incl. ROD rewinds)
     ev_evictions: jax.Array   # [] int32 EVs blacklisted by the LB policy
-    ticks_degraded: jax.Array  # [] int32 ticks with >= 1 link dead
+    ticks_degraded: jax.Array  # [] int32 ticks with >= 1 link/host dead
+    #: PDC liveness lanes (value-inert unless the profile sets
+    #: ``pdc_dead_after > 0`` — the updates are statically elided)
+    rto_strikes: jax.Array    # [F] int32 consecutive zero-progress RTOs
+    quarantined: jax.Array    # [F] bool PDC torn down, flow abandoned
+    flows_abandoned: jax.Array    # [] int32 PDCs declared unreachable
+    ticks_unreachable: jax.Array  # [] int32 ticks with >= 1 quarantined flow
 
 
 def _first_set_bit(ring: jax.Array) -> jax.Array:
@@ -334,6 +341,9 @@ def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
         rto=jnp.full((F,), p.timeout_ticks, jnp.int32),
         timeouts=jnp.int32(0), ev_evictions=jnp.int32(0),
         ticks_degraded=jnp.int32(0),
+        rto_strikes=jnp.zeros((F,), jnp.int32),
+        quarantined=jnp.zeros((F,), jnp.bool_),
+        flows_abandoned=jnp.int32(0), ticks_unreachable=jnp.int32(0),
     )
 
 
@@ -360,7 +370,8 @@ def _rank_within(target: jax.Array, valid: jax.Array,
 
 
 def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
-              lossy: bool = False, tel: "TelemetrySpec | None" = None):
+              lossy: bool = False, tel: "TelemetrySpec | None" = None,
+              hosty: bool = False):
     """Build the per-tick transition function for one transport profile.
 
     The tick is composed from the profile's pluggable policy objects: a
@@ -387,6 +398,13 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
     signals the tick already computed — for the telemetry lanes riding
     the stats carry. Disabled (the default), no probe is built and the
     compiled step is bitwise the pre-telemetry one.
+
+    ``hosty`` is the endpoint analogue of ``lossy``: the per-host
+    outage/NIC-stall semantics (dead hosts stop injecting, processing
+    ACKs, and absorbing deliveries; stalled hosts only stop injecting)
+    are compiled in only when the dispatching schedule actually carries
+    host faults, so all-healthy runs pay nothing and stay bitwise the
+    pre-endpoint-fault program.
     """
     tel_on = tel is not None and tel.enabled
     rt = RoutingTables(g)
@@ -420,6 +438,18 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
     evict_on = profile.ev_eviction
     rto_cap = int(p.timeout_ticks) * int(profile.rto_max_scale)
     lane_ids = jnp.arange(Q + F, dtype=jnp.uint32)
+    # PDC liveness teardown static (mirrors repro.core.pdc.unreachable):
+    # off (the default) elides every quarantine lane update below.
+    pdc_on = profile.pdc_dead_after > 0
+    dead_after = int(profile.pdc_dead_after)
+    if hosty:
+        # static queue -> host map for the dead-host downlink mask (only
+        # each host's final downlink is host-owned; fabric queues carry
+        # -1 and never inherit a host outage)
+        qh_np = np.full((Q,), -1, np.int64)
+        qh_np[np.asarray(g.host_queue, np.int64)] = np.arange(H)
+        q_is_host = jnp.asarray(qh_np >= 0)
+        q_host = jnp.asarray(np.where(qh_np >= 0, qh_np, 0), jnp.int32)
 
     def step(s: SimState, tick: jax.Array, wl: Workload,
              fault: FaultSchedule):
@@ -430,6 +460,21 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         # mask degenerates to fail_at=0, heal_at=NEVER_TICK, making this
         # window test bitwise the old constant mask.
         dead = (fault.fail_at <= tick) & (tick < fault.heal_at)
+        if hosty:
+            # endpoint fault lanes: hd = dead hosts (no inject / no ACK
+            # / no absorb), nic = stalled NICs (no inject only). A dead
+            # host's downlink eats enqueues like a dead link — silent
+            # drops, counted below — and the host's flows are frozen via
+            # the per-flow masks.
+            hd = (fault.host_fail_at <= tick) & (tick < fault.host_heal_at)
+            nic = (fault.nic_stall_at <= tick) & (tick < fault.nic_heal_at)
+            dead = dead | (q_is_host & hd[q_host])
+            src_dead = hd[flow_src]            # [F] source host is dead
+            dst_dead = hd[flow_dst]            # [F] destination host is dead
+            # a dead destination does NOT freeze the source: it keeps
+            # retransmitting into the dead downlink (silent drops) until
+            # the PDC liveness teardown quarantines the flow
+            inj_frozen = src_dead | nic[flow_src]
 
         # ------------------------------------------------ 1. control events
         evs = s.ev_buf[slot]                                  # [E, 6]
@@ -441,6 +486,13 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         ets = evs[:, EVF_TSENT]
         is_ack = et == EV_ACK
         is_nack = (et == EV_NACK) | (et == EV_OOO)
+        if hosty:
+            # a dead SOURCE host processes no returning control traffic:
+            # its lanes' ACKs/NACKs are lost on arrival (the events were
+            # consumed from the ring, so nothing replays after heal)
+            lane_src_dead = src_dead[jnp.clip(ef, 0, F - 1)]
+            is_ack = is_ack & ~lane_src_dead
+            is_nack = is_nack & ~lane_src_dead
 
         # Per-flow densification of the ACK lanes: a flow's ACKs all come
         # from its destination's single host downlink, so at most ONE ACK
@@ -574,6 +626,9 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         safe_dep = jnp.where(wl.dep >= 0, wl.dep, 0)
         dep_ok = (wl.dep < 0) | done[safe_dep]
         active = ~done & (tick >= wl.start) & dep_ok
+        if pdc_on:
+            # a torn-down PDC holds no receiver credit claim
+            active = active & ~s.quarantined
         cc_st = cc_pol.on_grant_tick(cc_st, flow_dst, active, H)
 
         # --------------------------------------------------- 3. injection
@@ -593,6 +648,8 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         timeout_rod = jnp.zeros((F,), jnp.bool_)
         if any_rod:
             timeout_rod = (inflight > 0) & overdue
+            if pdc_on:
+                timeout_rod = timeout_rod & ~s.quarantined
             rewind = rod_gbn | timeout_rod
             if mixed_rod:
                 rewind = rewind & rod_mask
@@ -613,6 +670,14 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         can_new = (next_psn < wl.size) & mp_ok
         eligible = (tick >= wl.start) & ~done & dep_ok & win_ok \
             & (has_rtx | can_new)
+        if hosty:
+            # frozen injectors: dead source hosts and stalled NICs emit
+            # nothing. A stalled NIC's flows stay ACK-live and simply
+            # wait; a dead host's flows decay into the timeout path.
+            eligible = eligible & ~inj_frozen
+        if pdc_on:
+            # a quarantined flow gets no retransmit bandwidth
+            eligible = eligible & ~s.quarantined
 
         # fair per-host pick: per-tick pseudo-random rotation, flow id in
         # the low bits so exactly one winner exists per host
@@ -675,6 +740,14 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         safe_pf = jnp.where(nonempty, pf, 0)
         nq = rt.route_step(qidx, flow_src[safe_pf], flow_dst[safe_pf], pe)
         deliver = nonempty & (nq == DELIVERED)
+        if hosty:
+            # packets dequeued toward a dead destination vanish at the
+            # dead NIC (silent drops, counted in section 7): the
+            # dead-queue mask only eats ENQUEUES, so packets already
+            # queued when the host died drain through here — and a dead
+            # host must not ACK, so they may not count as deliveries
+            dst_gone = deliver & dst_dead[safe_pf]
+            deliver = deliver & ~dst_gone
         forward = nonempty & (nq >= 0)
 
         # --------------------------------------------- 5. delivery at FEPs
@@ -812,6 +885,9 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         # and corruption drops)
         drops = drops + is_dead.sum(dtype=jnp.int32) \
             + is_lost.sum(dtype=jnp.int32)
+        if hosty:
+            # dequeue-time losses at a dead destination NIC (section 5)
+            drops = drops + dst_gone.sum(dtype=jnp.int32)
 
         # ------------------------------------------- 8. schedule control TC
         out_slot = (tick + p.ack_return_ticks) % D
@@ -861,6 +937,18 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             # terminal phase of every flap scenario).
             unacked = src_track.base.astype(jnp.int32) < next_psn
             stalled = ((inflight > 0) | unacked) & overdue & ~done
+            if hosty:
+                # a dead endpoint is itself a stall trigger: a frozen
+                # source never sends, so `unacked` can't arm — yet the
+                # flow can only end via liveness teardown. Keep its RTO
+                # clock running so strikes accrue and quarantine fires.
+                # (NIC stalls are excluded on purpose: the host is
+                # ACK-live, the flow just waits for the heal.)
+                stalled = stalled | ((src_dead | dst_dead)
+                                     & overdue & ~done)
+            if pdc_on:
+                # a torn-down PDC stops timing out (and stops striking)
+                stalled = stalled & ~s.quarantined
             if mixed_rod:
                 stalled = stalled & ~rod_mask  # ROD timeouts rewind instead
             rtx = _set_own_bit(rtx, jnp.zeros((F,), jnp.int32),
@@ -913,6 +1001,36 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             ev_evictions = s.ev_evictions
         timeouts = s.timeouts + timeout_fire.sum(dtype=jnp.int32)
         ticks_degraded = s.ticks_degraded + dead.any().astype(jnp.int32)
+        if pdc_on:
+            # PDC liveness teardown (the fabric-engine mirror of
+            # repro.core.pdc.unreachable / InitEvent.PEER_DEAD):
+            # consecutive zero-progress RTO expiries accumulate strikes;
+            # any ACK is forward progress and resets the count. At
+            # `pdc_dead_after` strikes the peer is declared dead and the
+            # flow quarantined — no retransmit bandwidth (section 3), no
+            # further expiries (section 9), and the quiescence predicate
+            # counts it as settled, so permanent endpoint death
+            # terminates the run early. A quarantined flow can never
+            # complete, so its dependents can never start: collapse the
+            # dependency chain (one hop per tick) so those scenarios
+            # terminate too.
+            rto_strikes = (jnp.where(has_ack, 0, s.rto_strikes)
+                           + timeout_fire.astype(jnp.int32))
+            newly = (~s.quarantined & ~done
+                     & pdc_fsm.unreachable(rto_strikes, dead_after))
+            newly = newly | (~s.quarantined & ~done & (wl.dep >= 0)
+                             & s.quarantined[safe_dep])
+            quarantined = s.quarantined | newly
+            inflight = jnp.where(quarantined, 0, inflight)
+            flows_abandoned = s.flows_abandoned \
+                + newly.sum(dtype=jnp.int32)
+            ticks_unreachable = s.ticks_unreachable \
+                + quarantined.any().astype(jnp.int32)
+        else:
+            rto_strikes = s.rto_strikes
+            quarantined = s.quarantined
+            flows_abandoned = s.flows_abandoned
+            ticks_unreachable = s.ticks_unreachable
 
         ns = SimState(
             q_pkt=q_pkt, q_head=q_head, q_len=q_len,
@@ -926,6 +1044,9 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             rod_rejects=rod_rejects, retransmits=retransmits,
             rto=rto, timeouts=timeouts, ev_evictions=ev_evictions,
             ticks_degraded=ticks_degraded,
+            rto_strikes=rto_strikes, quarantined=quarantined,
+            flows_abandoned=flows_abandoned,
+            ticks_unreachable=ticks_unreachable,
         )
         out = {
             "delivered": fresh_f.astype(jnp.int32),
@@ -999,7 +1120,9 @@ class SimResult:
     ``timeouts``        RTO expiries (RUD stalls + ROD timeout rewinds)
     ``rtx_packets``     retransmitted packets injected
     ``ev_evictions``    path (EV) evictions by the recovery loop
-    ``ticks_degraded``  executed ticks with at least one dead link
+    ``ticks_degraded``  executed ticks with at least one dead link/host
+    ``flows_abandoned`` PDCs declared unreachable and torn down
+    ``ticks_unreachable``  executed ticks with >= 1 quarantined flow
     ==================  ====================================================
     """
 
@@ -1022,6 +1145,8 @@ class SimResult:
     stat_win_delivered: "np.ndarray | None" = None   # [F] packets in window
     goodput_window: "tuple[int, int] | None" = None
     qlen_peak: "int | None" = None
+    #: first tick any PDC teardown fired (-1 = none; stats tier only)
+    stat_abandon_tick: "int | None" = None
     #: reconstructed probe-lane time series (telemetry=TelemetrySpec.on())
     telemetry: "telem.FabricTrace | None" = None
 
@@ -1134,8 +1259,33 @@ class SimResult:
 
     @property
     def ticks_degraded(self) -> int:
-        """Executed ticks during which at least one link was dead."""
+        """Executed ticks during which at least one link or host was
+        dead."""
         return int(self.state.ticks_degraded)
+
+    @property
+    def flows_abandoned(self) -> int:
+        """Flows whose PDC was declared unreachable and torn down (0
+        unless ``TransportProfile.pdc_dead_after`` is set)."""
+        return int(self.state.flows_abandoned)
+
+    @property
+    def ticks_unreachable(self) -> int:
+        """Executed ticks during which at least one flow sat
+        quarantined (the unavailability window a recovery controller
+        would observe)."""
+        return int(self.state.ticks_unreachable)
+
+    @property
+    def abandon_tick(self) -> int:
+        """First tick at which any PDC teardown fired (-1 = none).
+        Streamed on the ``trace="stats"`` tier — the detection-time
+        signal the recovery-pricing path converts to seconds."""
+        if self.stat_abandon_tick is None:
+            raise ValueError(
+                "abandon_tick is streamed on the trace='stats' tier "
+                "only; rerun with trace='stats'")
+        return int(self.stat_abandon_tick)
 
 
 # --------------------------------------------------------------------------
@@ -1156,8 +1306,15 @@ def _quiescent(s: SimState, wl: Workload) -> jax.Array:
     epoch state, stale control-ring timestamp lanes), so the engine
     FREEZES the carry once a scenario is quiescent: the executed prefix,
     final counters, and completion ticks are bitwise what a longer fixed
-    run would produce."""
-    done = (s.src_track.base.astype(jnp.int32) >= wl.size).all()
+    run would produce.
+
+    A quarantined flow (PDC liveness teardown, `pdc_dead_after`) counts
+    as settled: it can make no further progress by construction, so a
+    permanently dead endpoint no longer pins the scenario to the full
+    tick budget. (With the lane all-False — every default — the
+    predicate is value-identical to the pre-quarantine one.)"""
+    done = ((s.src_track.base.astype(jnp.int32) >= wl.size)
+            | s.quarantined).all()
     idle = (s.inflight == 0).all() & (s.q_len == 0).all()
     drained = (s.ev_buf[:, :, EVF_TYPE] == EV_NONE).all()
     return done & idle & drained
@@ -1179,6 +1336,7 @@ def _stats_init(F: int) -> dict:
         "src_comp": jnp.full((F,), -1, jnp.int32),
         "win_delivered": jnp.zeros((F,), jnp.int32),
         "qlen_peak": jnp.int32(0),
+        "abandon_tick": jnp.int32(-1),
     }
 
 
@@ -1197,6 +1355,11 @@ def _stats_update(st: dict, prev: SimState, s: SimState, wl: Workload,
                               st["src_comp"]),
         "win_delivered": st["win_delivered"] + jnp.where(inwin, fresh, 0),
         "qlen_peak": jnp.maximum(st["qlen_peak"], s.q_len.max()),
+        # first tick any PDC teardown fired — the recovery-pricing
+        # detection-time signal (-1 = no abandonment this run)
+        "abandon_tick": jnp.where(
+            (st["abandon_tick"] < 0) & (s.flows_abandoned > 0),
+            tick, st["abandon_tick"]),
     }
 
 
@@ -1214,7 +1377,8 @@ _RUN_CACHE: dict = {}
 
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
                F: int, batched: bool, trace: str = "stats", shard=None,
-               lossy: bool = False, tel: "TelemetrySpec | None" = None):
+               lossy: bool = False, tel: "TelemetrySpec | None" = None,
+               hosty: bool = False):
     # the horizon (p.ticks) is a traced bound, not a compiled constant:
     # strip it so one executable serves every tick budget. `shard` is
     # None (unsharded) or the device-id tuple a sharded executable was
@@ -1223,15 +1387,18 @@ def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
     # (a TelemetrySpec, static like the profile) selects the executable
     # with the probe lanes compiled in; None and the off spec share the
     # pre-telemetry entry.
+    # `hosty` selects the executable with the endpoint-fault lanes
+    # compiled in (host/NIC outage windows; see make_step) — schedules
+    # without host lanes share the pre-endpoint entry.
     if tel is not None and not tel.enabled:
         tel = None
     return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace,
-            shard, lossy, tel)
+            shard, lossy, tel, hosty)
 
 
 def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
                F: int, batched: bool, trace: str, lossy: bool = False,
-               tel: "TelemetrySpec | None" = None):
+               tel: "TelemetrySpec | None" = None, hosty: bool = False):
     """(init, run) pair for one trace tier — UN-jitted, so the sharded
     engine (repro.network.shard) can wrap the same driver in shard_map
     before compiling. `_get_fns` jits and caches; behavior contract:
@@ -1266,7 +1433,8 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
             "telemetry lanes ride the streaming stats carry — enabled "
             "TelemetrySpec requires trace='stats' (the full tier already "
             "records dense per-tick lanes)")
-    step = make_step(g, profile, p, F, lossy, tel if tel_on else None)
+    step = make_step(g, profile, p, F, lossy, tel if tel_on else None,
+                     hosty=hosty)
     chunk = int(p.chunk_ticks)
     if chunk < 1:
         raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
@@ -1394,14 +1562,15 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
              F: int, batched: bool, trace: str, lossy: bool = False,
-             tel: "TelemetrySpec | None" = None):
+             tel: "TelemetrySpec | None" = None, hosty: bool = False):
     """Jitted + cached (init, run) pair — see `_build_fns` for the
     driver contract. Both runs donate the carry."""
-    key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy, tel=tel)
+    key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy, tel=tel,
+                     hosty=hosty)
     fns = _RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = _build_fns(g, profile, p, F, batched, trace, lossy,
-                                  tel)
+                                  tel, hosty)
         fns = (jax.jit(init_fn), jax.jit(run, donate_argnums=(0,)))
         _RUN_CACHE[key] = fns
     return fns
@@ -1532,6 +1701,7 @@ def _stats_result(final: SimState, st: dict, msg_size, horizon: int,
         goodput_window=(None if goodput_window is None
                         else tuple(int(w) for w in goodput_window)),
         qlen_peak=int(st["qlen_peak"]),
+        stat_abandon_tick=int(st["abandon_tick"]),
         telemetry=trace_obj,
     )
 
@@ -1600,12 +1770,14 @@ def simulate(g: QueueGraph, wl: Workload,
     budget = int(p.ticks if max_ticks is None else max_ticks)
     F = int(wl.src.shape[0])
     profile.delivery_modes(F)  # validate per-flow tuples early
-    fault = as_schedule(g.num_queues, failed, faults)
+    fault = as_schedule(g.num_queues, failed, faults,
+                        g_num_hosts=g.num_hosts)
     if fault is None:
         fault = FaultSchedule.from_mask(_failed_to_mask(g, failed))
     lossy = bool(np.asarray(fault.loss_p).any())
+    hosty = fault.has_host_faults
     init, run = _get_fns(g, profile, p, F, batched=False, trace=trace,
-                         lossy=lossy, tel=tel)
+                         lossy=lossy, tel=tel, hosty=hosty)
     s0 = init(wl, jnp.uint32(seed))
     if trace == "stats":
         w0, w1 = _window_bounds(goodput_window, budget)
@@ -1657,8 +1829,9 @@ def _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
     B, F = wls.src.shape
     profile.delivery_modes(F)
     lossy = bool(np.asarray(fault.loss_p).any())
+    hosty = fault.has_host_faults
     init, run = _get_fns(g, profile, p, F, batched=True, trace=trace,
-                         lossy=lossy, tel=tel)
+                         lossy=lossy, tel=tel, hosty=hosty)
     s0 = init(wls, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
@@ -1782,7 +1955,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
             "graphs to share num_queues — run unequal groups separately")
     fault = None
     if not mixed_q:
-        fault = as_schedule(g.num_queues, failed, faults, batch=B)
+        fault = as_schedule(g.num_queues, failed, faults, batch=B,
+                            g_num_hosts=g.num_hosts)
         if fault is None:
             if failed is None:
                 dead = np.zeros((B, g.num_queues), bool)

@@ -1,4 +1,4 @@
-"""Dynamic fault schedules: link flaps, gray (lossy) links, mid-run death.
+"""Dynamic fault schedules: link flaps, gray links, and dead endpoints.
 
 The engine's original failure model was a static per-scenario ``failed=``
 queue mask — links dead from tick 0 to the horizon, drops silent. At
@@ -19,20 +19,39 @@ Hyperscale"), so the mask generalizes to a :class:`FaultSchedule`:
   state in the carry — so the draw stream is reproducible across
   batch/shard/chunk boundaries and identical between ``simulate`` and
   ``simulate_batch`` lanes.
+* ``host_fail_at`` / ``host_heal_at`` — per-HOST outage lanes (node
+  death): while ``host_fail_at <= tick < host_heal_at`` the host stops
+  injecting, stops processing/ emitting ACKs, and stops absorbing
+  deliveries on every queue it touches (its downlink eats enqueues as
+  silent drops). Detection and teardown are the transport's job — see
+  ``TransportProfile.pdc_dead_after`` and DESIGN.md "Endpoint failure &
+  recovery contract".
+* ``nic_stall_at`` / ``nic_heal_at`` — the NIC-stall variant: injection
+  freezes but the host stays ACK-live (inbound deliveries are absorbed
+  and acknowledged, the RTO clock keeps running). Models a wedged send
+  engine / PCIe backpressure rather than node death.
+
+Host lanes are width-[H] and OPTIONAL: schedules built without
+``num_hosts`` carry zero-width lanes, dispatch detects the all-healthy
+case (``has_host_faults``) and compiles the exact pre-endpoint-fault
+program — all-healthy schedules stay bitwise-inert.
 
 All lanes are TRACED inputs (like workloads and seeds): sweeping fault
 schedules never recompiles, and a ``[B, ...]``-stacked schedule rides the
 scenario axis of ``simulate_batch`` / ``shard=True`` like any other
-per-scenario input. Both kinds of fault drop packets silently (no trim
-header, no NACK); recovery is the transport's job — RTO (+ optional
-exponential backoff), OOO/EV loss inference, and LB path eviction (see
-``TransportProfile.ev_eviction`` and DESIGN.md "Fault model & recovery
+per-scenario input. Link faults drop packets silently (no trim header,
+no NACK); recovery is the transport's job — RTO (+ optional exponential
+backoff), OOO/EV loss inference, LB path eviction, and PDC liveness
+teardown (see ``TransportProfile`` and DESIGN.md "Fault model & recovery
 contract").
 
 ``python -m repro.network.faults`` runs the recovery smoke used by
 ``scripts/check.sh``: a mid-run flap must be survived (timeouts fire,
 the flow completes after heal) and a permanent mid-run failure must be
-escaped via path eviction.
+escaped via path eviction. ``--endpoint`` runs the endpoint canary
+instead: a never-healing dead host under a ``pdc_dead_after`` profile
+must be detected and quarantined, quiescing EARLY with abandonment
+visible while the surviving flows complete.
 """
 from __future__ import annotations
 
@@ -48,44 +67,79 @@ from repro.core.types import NEVER_TICK
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class FaultSchedule:
-    """Per-queue fault lanes for one scenario ([Q]) or a stacked
-    scenario batch ([B, Q]; ``seed`` is [] / [B]).
+    """Per-queue + per-host fault lanes for one scenario ([Q] / [H]) or
+    a stacked scenario batch ([B, Q] / [B, H]; ``seed`` is [] / [B]).
 
     Build with :meth:`healthy` / :meth:`from_mask`, then layer faults
-    with :meth:`flap` / :meth:`lossy`; stack scenarios with
-    :meth:`stack`. Dead window: ``fail_at <= tick < heal_at``.
+    with :meth:`flap` / :meth:`lossy` / :meth:`host_fail` /
+    :meth:`nic_stall`; stack scenarios with :meth:`stack`. Dead windows:
+    ``fail_at <= tick < heal_at`` (links),
+    ``host_fail_at <= tick < host_heal_at`` (hosts). Host lanes may be
+    zero-width (no endpoint faults expressible — the default).
     """
 
     fail_at: jax.Array   # [.., Q] int32 first dead tick (NEVER = healthy)
     heal_at: jax.Array   # [.., Q] int32 first live-again tick (NEVER = forever)
     loss_p: jax.Array    # [.., Q] float32 per-packet loss probability
     seed: jax.Array      # [..] uint32 loss-draw stream seed
+    host_fail_at: jax.Array  # [.., H] int32 host dead from (NEVER = healthy)
+    host_heal_at: jax.Array  # [.., H] int32 host live again (NEVER = forever)
+    nic_stall_at: jax.Array  # [.., H] int32 injection frozen from
+    nic_heal_at: jax.Array   # [.., H] int32 injection live again
 
     # -- builders ---------------------------------------------------------
     @staticmethod
     def healthy(num_queues: int, batch: "int | None" = None,
-                seed: int = 0) -> "FaultSchedule":
-        """All-healthy lanes ([Q], or [batch, Q] when batch is given)."""
+                seed: int = 0, num_hosts: int = 0) -> "FaultSchedule":
+        """All-healthy lanes ([Q], or [batch, Q] when batch is given).
+        ``num_hosts`` sizes the per-host lanes (0 — the default — builds
+        a schedule that cannot express endpoint faults and is free)."""
         shape = (num_queues,) if batch is None else (batch, num_queues)
+        hshape = shape[:-1] + (num_hosts,)
         return FaultSchedule(
             fail_at=jnp.full(shape, NEVER_TICK, jnp.int32),
             heal_at=jnp.full(shape, NEVER_TICK, jnp.int32),
             loss_p=jnp.zeros(shape, jnp.float32),
             seed=jnp.full(shape[:-1], seed, jnp.uint32),
+            host_fail_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            host_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            nic_stall_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            nic_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
         )
 
     @staticmethod
     def from_mask(mask, seed: int = 0) -> "FaultSchedule":
         """The degenerate static schedule: queues set in ``mask`` (bool,
         [Q] or [B, Q]) are dead from tick 0 forever — bitwise the old
-        ``failed=`` semantics."""
+        ``failed=`` semantics. Host lanes are zero-width."""
         mask = jnp.asarray(mask, bool)
+        hshape = mask.shape[:-1] + (0,)
         return FaultSchedule(
             fail_at=jnp.where(mask, 0, NEVER_TICK).astype(jnp.int32),
             heal_at=jnp.full(mask.shape, NEVER_TICK, jnp.int32),
             loss_p=jnp.zeros(mask.shape, jnp.float32),
             seed=jnp.full(mask.shape[:-1], seed, jnp.uint32),
+            host_fail_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            host_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            nic_stall_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
+            nic_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
         )
+
+    def with_hosts(self, num_hosts: int) -> "FaultSchedule":
+        """Widen zero-width host lanes to [.., num_hosts] all-healthy
+        lanes (so :meth:`host_fail` / :meth:`nic_stall` can address
+        hosts). A schedule already at ``num_hosts`` is returned as-is;
+        any other nonzero width is an error."""
+        if self.num_hosts == num_hosts:
+            return self
+        if self.num_hosts != 0:
+            raise ValueError(
+                f"schedule already has host lanes over {self.num_hosts} "
+                f"hosts; cannot re-widen to {num_hosts}")
+        hshape = self.fail_at.shape[:-1] + (num_hosts,)
+        never = jnp.full(hshape, NEVER_TICK, jnp.int32)
+        return replace(self, host_fail_at=never, host_heal_at=never,
+                       nic_stall_at=never, nic_heal_at=never)
 
     # -- combinators (return a new schedule; queues are ids into [Q]) -----
     def flap(self, queues, fail_at: int,
@@ -113,13 +167,59 @@ class FaultSchedule:
         return replace(self, loss_p=jnp.where(hot, jnp.float32(p),
                                               self.loss_p))
 
+    def _host_window(self, hosts, at: int, heal_at: int, kind: str
+                     ) -> tuple:
+        if self.num_hosts == 0:
+            raise ValueError(
+                f"{kind} needs host lanes: build the schedule with "
+                f"FaultSchedule.healthy(num_queues, num_hosts=H) or call "
+                f".with_hosts(H) first")
+        hs = np.atleast_1d(np.asarray(hosts, np.int64))
+        if hs.size and (hs.min() < 0 or hs.max() >= self.num_hosts):
+            raise ValueError(f"{kind} host ids must be in "
+                             f"[0, {self.num_hosts}), got {hs.tolist()}")
+        hot = np.zeros((self.num_hosts,), bool)
+        hot[hs] = True
+        hot = jnp.broadcast_to(jnp.asarray(hot), self.host_fail_at.shape)
+        return hot, jnp.int32(at), jnp.int32(heal_at)
+
+    def host_fail(self, hosts, fail_at: int,
+                  heal_at: int = NEVER_TICK) -> "FaultSchedule":
+        """Kill ``hosts`` over [fail_at, heal_at): no injection, no ACK
+        processing or generation, no delivery absorption. One window per
+        host (a later call overwrites an earlier one)."""
+        hot, f, h = self._host_window(hosts, fail_at, heal_at, "host_fail")
+        return replace(self,
+                       host_fail_at=jnp.where(hot, f, self.host_fail_at),
+                       host_heal_at=jnp.where(hot, h, self.host_heal_at))
+
+    def nic_stall(self, hosts, stall_at: int,
+                  heal_at: int = NEVER_TICK) -> "FaultSchedule":
+        """Freeze ``hosts``' injection over [stall_at, heal_at) while
+        keeping them ACK-live (deliveries absorbed + acknowledged, RTO
+        clocks running) — the wedged-send-engine fault class."""
+        hot, f, h = self._host_window(hosts, stall_at, heal_at, "nic_stall")
+        return replace(self,
+                       nic_stall_at=jnp.where(hot, f, self.nic_stall_at),
+                       nic_heal_at=jnp.where(hot, h, self.nic_heal_at))
+
     def with_seed(self, seed) -> "FaultSchedule":
         return replace(self, seed=jnp.broadcast_to(
             jnp.asarray(seed, jnp.uint32), self.seed.shape))
 
     @staticmethod
     def stack(scheds: "list[FaultSchedule]") -> "FaultSchedule":
-        """Stack per-scenario [Q] schedules into a [B, Q] batch."""
+        """Stack per-scenario [Q] schedules into a [B, Q] batch. Mixed
+        host-lane widths {0, H} are normalized (zero-width lanes widen
+        to all-healthy [H] lanes); two distinct nonzero widths are an
+        error."""
+        widths = {s.num_hosts for s in scheds}
+        nz = sorted(w for w in widths if w)
+        if len(nz) > 1:
+            raise ValueError(f"cannot stack schedules with host lanes "
+                             f"over different host counts: {nz}")
+        if nz and 0 in widths:
+            scheds = [s.with_hosts(nz[0]) for s in scheds]
         return jax.tree_util.tree_map(
             lambda *ls: jnp.stack(ls), *scheds)
 
@@ -128,11 +228,38 @@ class FaultSchedule:
     def num_queues(self) -> int:
         return int(self.fail_at.shape[-1])
 
+    @property
+    def num_hosts(self) -> int:
+        """Width of the per-host lanes (0 = no endpoint faults)."""
+        return int(self.host_fail_at.shape[-1])
+
+    @property
+    def has_host_faults(self) -> bool:
+        """True iff any host outage / NIC stall is actually scheduled —
+        the dispatch-time static that selects the endpoint-aware
+        executable (mirrors the gray-link ``lossy`` static). All-healthy
+        host lanes compile the exact pre-endpoint-fault program."""
+        if self.num_hosts == 0:
+            return False
+        return bool(
+            (np.asarray(self.host_fail_at) != NEVER_TICK).any()
+            or (np.asarray(self.nic_stall_at) != NEVER_TICK).any())
+
     def dead_at(self, tick) -> jax.Array:
         """[.., Q] bool — queues dead at ``tick`` (the engine's per-tick
         derivation; exposed for tests/diagnostics)."""
         t = jnp.asarray(tick, jnp.int32)
         return (self.fail_at <= t) & (t < self.heal_at)
+
+    def host_dead_at(self, tick) -> jax.Array:
+        """[.., H] bool — hosts dead at ``tick``."""
+        t = jnp.asarray(tick, jnp.int32)
+        return (self.host_fail_at <= t) & (t < self.host_heal_at)
+
+    def nic_stalled_at(self, tick) -> jax.Array:
+        """[.., H] bool — hosts with frozen injection at ``tick``."""
+        t = jnp.asarray(tick, jnp.int32)
+        return (self.nic_stall_at <= t) & (t < self.nic_heal_at)
 
 
 def loss_threshold(loss_p: jax.Array) -> jax.Array:
@@ -146,10 +273,11 @@ def loss_threshold(loss_p: jax.Array) -> jax.Array:
 
 
 def as_schedule(g_num_queues: int, failed, faults, batch: "int | None" = None,
-                ) -> FaultSchedule:
+                g_num_hosts: "int | None" = None) -> FaultSchedule:
     """Normalize the public (failed=, faults=) pair to one FaultSchedule
     with [Q] (serial) or [batch, Q] leaves. Exactly one of the two may
-    be given; neither means all-healthy."""
+    be given; neither means all-healthy. ``g_num_hosts`` (when given)
+    validates nonzero host lanes against the topology."""
     if faults is not None:
         if failed is not None:
             raise ValueError("pass either failed= (static mask) or "
@@ -161,6 +289,11 @@ def as_schedule(g_num_queues: int, failed, faults, batch: "int | None" = None,
             raise ValueError(
                 f"fault schedule is over {faults.num_queues} queues but "
                 f"the topology has {g_num_queues}")
+        if (g_num_hosts is not None and faults.num_hosts
+                and faults.num_hosts != g_num_hosts):
+            raise ValueError(
+                f"fault schedule host lanes are over {faults.num_hosts} "
+                f"hosts but the topology has {g_num_hosts}")
         if batch is None:
             if faults.fail_at.ndim != 1:
                 raise ValueError("serial simulate() takes a [Q] fault "
@@ -225,5 +358,58 @@ def _smoke() -> int:  # pragma: no cover — CLI smoke for scripts/check.sh
     return 0
 
 
+def _endpoint_smoke() -> int:  # pragma: no cover — CLI canary (check.sh)
+    """Endpoint canary: a never-healing dead host under a
+    ``pdc_dead_after`` profile must be DETECTED (flows to/from it
+    quarantined, abandonment visible in the stat lanes) and the run must
+    quiesce EARLY — strictly before the tick budget — while every
+    surviving flow still completes. The pdc-off twin burns the whole
+    budget on the same schedule (the liveness hazard the quarantine
+    path exists to fix)."""
+    from repro.network import workloads
+    from repro.network.fabric import SimParams, simulate_batch
+
+    g, wls, scheds, exp = workloads.host_fault_sweep()
+    budget = int(exp["budget"])
+    p = SimParams(ticks=budget, timeout_ticks=64)
+    rs = simulate_batch(g, wls, exp["profile"], p, faults=scheds)
+    by = dict(zip(exp["names"], rs))
+
+    r = by["host_dead"]
+    dead_flows = exp["dead_flows"]
+    assert r.horizon < budget, \
+        f"dead host must quiesce early, ran {r.horizon}/{budget}"
+    assert r.flows_abandoned == len(dead_flows), \
+        (r.flows_abandoned, dead_flows)
+    assert r.ticks_unreachable > 0 and r.abandon_tick > 0
+    ct = r.completion_ticks()
+    surviving = [f for f in range(ct.shape[0]) if f not in dead_flows]
+    assert all(ct[f] > 0 for f in surviving), ct
+    assert all(ct[f] == -1 for f in dead_flows), ct
+
+    r_off = by["host_dead_pdc_off"]
+    assert r_off.horizon == budget, \
+        f"pdc-off twin must burn the budget, exited at {r_off.horizon}"
+    assert r_off.flows_abandoned == 0
+
+    r_stall = by["nic_stall"]
+    assert r_stall.flows_abandoned == 0, \
+        "an ACK-live NIC stall must not be declared dead"
+    assert r_stall.completion_tick() > 0, "stall heals -> all complete"
+
+    healthy = by["healthy"]
+    assert healthy.flows_abandoned == 0 and healthy.ticks_unreachable == 0
+    print(f"endpoint smoke ok: dead host detected at tick "
+          f"{r.abandon_tick} ({r.flows_abandoned} flows abandoned, "
+          f"{r.ticks_unreachable} unreachable ticks), quiesced at "
+          f"{r.horizon}/{budget} vs pdc-off stuck at {r_off.horizon}; "
+          f"NIC stall stayed live (completion "
+          f"{r_stall.completion_tick()})")
+    return 0
+
+
 if __name__ == "__main__":  # pragma: no cover
+    import sys
+    if "--endpoint" in sys.argv[1:]:
+        raise SystemExit(_endpoint_smoke())
     raise SystemExit(_smoke())

@@ -110,6 +110,18 @@ class TransportProfile:
     #: instead of re-rolling into them (SMaRTT-style path penalization).
     #: Static: eviction-off profiles compile the exact pre-eviction tick.
     ev_eviction: bool = False
+    #: PDC liveness teardown (the endpoint-failure recovery loop): after
+    #: this many CONSECUTIVE RTO expiries with zero forward progress (no
+    #: ACK between them), the flow's Packet Delivery Context is declared
+    #: unreachable and torn down — the flow is QUARANTINED (no further
+    #: injection or retransmit bandwidth), counted in
+    #: ``SimResult.flows_abandoned``, and treated as settled by the
+    #: quiescence predicate so permanent endpoint death terminates the
+    #: run early instead of burning the whole tick budget. 0 disables
+    #: (bitwise the pre-teardown behavior; the lanes are statically
+    #: elided). Detection time ~ the sum of the backed-off RTO series,
+    #: so compose with ``rto_backoff`` for production-style spacing.
+    pdc_dead_after: int = 0
     name: str = field(default="custom", compare=False)
 
     def __post_init__(self):
@@ -125,6 +137,10 @@ class TransportProfile:
         if self.rto_max_scale < 1:
             raise ValueError(f"rto_max_scale must be >= 1, got "
                              f"{self.rto_max_scale}")
+        if self.pdc_dead_after < 0:
+            raise ValueError(f"pdc_dead_after must be >= 0 (got "
+                             f"{self.pdc_dead_after}); 0 disables liveness "
+                             f"teardown")
 
     # -- named constructors (paper Sec. 2.2 profile table) ----------------
     @classmethod
@@ -144,6 +160,17 @@ class TransportProfile:
         return cls(**{"cc": CCAlgo.NSCC_AND_RCCC, "lb": LBScheme.REPS,
                       "delivery": DeliveryMode.ROD, "name": "hpc",
                       **overrides})
+
+    @classmethod
+    def resilient(cls, **overrides) -> "TransportProfile":
+        """ai_full plus the whole recovery loop: exponential RTO backoff,
+        EV path eviction, and PDC liveness teardown after 4 consecutive
+        dead RTOs — the endpoint-failure operating point the resilience
+        sweep and the host-fault canary run."""
+        return cls(**{"cc": CCAlgo.NSCC, "lb": LBScheme.OBLIVIOUS,
+                      "delivery": DeliveryMode.RUD, "rto_backoff": 2.0,
+                      "ev_eviction": True, "pdc_dead_after": 4,
+                      "name": "resilient", **overrides})
 
     # -- derived views -----------------------------------------------------
     def delivery_modes(self, num_flows: int) -> np.ndarray:
@@ -166,6 +193,8 @@ class TransportProfile:
                     f"(cap {self.rto_max_scale}x)")
         if self.ev_eviction:
             rec += ", ev_eviction=on"
+        if self.pdc_dead_after:
+            rec += f", pdc_dead_after={self.pdc_dead_after}"
         return (f"{self.name}(cc={self.cc.name}, lb={self.lb.name}, "
                 f"delivery={d}{inc}{rec})")
 

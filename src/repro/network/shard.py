@@ -66,7 +66,7 @@ def resolve_devices(devices, shard: bool):
 
 
 def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
-                 lossy: bool = False, tel=None):
+                 lossy: bool = False, tel=None, hosty: bool = False):
     """Jitted + cached (init, run) pair whose scenario axis is sharded
     over `devs`. Same driver as the unsharded batched engine, wrapped in
     shard_map before jit; cached beside it under the device-id tuple.
@@ -75,11 +75,12 @@ def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
     is sharded on its leading scenario axis like the other stat lanes."""
     key = fabric._cache_key(g, profile, p, F, True, trace,
                             shard=tuple(d.id for d in devs), lossy=lossy,
-                            tel=tel)
+                            tel=tel, hosty=hosty)
     fns = fabric._RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = fabric._build_fns(g, profile, p, F, batched=True,
-                                         trace=trace, lossy=lossy, tel=tel)
+                                         trace=trace, lossy=lossy, tel=tel,
+                                         hosty=hosty)
         mesh = Mesh(np.array(devs), (_AXIS,))
         sc, rep = P(_AXIS), P()
         if trace == "stats":
@@ -115,14 +116,19 @@ def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
     B, F = wls.src.shape
     profile.delivery_modes(F)
     lossy = bool(np.asarray(fault.loss_p).any())
+    hosty = fault.has_host_faults
     wls_p, pad = pad_scenarios(wls, n)
     if pad:
+        # padding lanes get all-healthy schedules at the batch's own
+        # host-lane width (zero-width when no endpoint faults ride)
         fault = jax.tree_util.tree_map(
             lambda a, e: jnp.concatenate([a, e.astype(a.dtype)]),
-            fault, FaultSchedule.healthy(g.num_queues, batch=pad))
+            fault, FaultSchedule.healthy(g.num_queues, batch=pad,
+                                         num_hosts=fault.num_hosts))
         seeds = jnp.concatenate(
             [seeds, jnp.full((pad,), fabric.DEFAULT_SEED, jnp.uint32)])
-    init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy, tel=tel)
+    init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy, tel=tel,
+                             hosty=hosty)
     s0 = init(wls_p, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":

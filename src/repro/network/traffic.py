@@ -36,6 +36,15 @@ fabric's compile cache via F; byte-scaled sizes, starts and deps are
 traced lanes, so a sweep of plans with equal flow counts shares
 executables, and `stack_padded` merges unequal ones.
 
+The module also closes the endpoint-failure loop ABOVE the fabric
+(:func:`price_recovery`): kill one DP-replica host under a
+liveness-enabled profile, read the simulated fault->PDC-teardown
+detection latency off ``abandon_tick``, price the sharded checkpoint
+restore (:func:`checkpoint_seconds`) and the replan onto survivors
+(`replan_onto_survivors` + a degraded-rate step), and hand the
+resulting :class:`RecoveryCosts` to `repro.ckpt.checkpointing`'s
+Young/Daly closed forms for effective-throughput pricing.
+
 ``python -m repro.network.traffic`` runs a one-config canary asserting
 the simulated step time lands within a sane band of the analytic bound.
 """
@@ -364,6 +373,134 @@ def step_time(plan: ParallelismPlan, g: "QueueGraph | None" = None,
     r = simulate(g, compiled.workload, profile, p or SimParams(),
                  faults=faults, failed=failed, max_ticks=budget)
     return price_step(compiled, r)
+
+
+# ---------------------------------------------------------------------------
+# recovery pricing: host fault -> PDC teardown -> checkpoint-restart economics
+# ---------------------------------------------------------------------------
+
+def checkpoint_seconds(plan: ParallelismPlan, *,
+                       storage_gbps: float = 100.0,
+                       state_factor: float = 3.0) -> float:
+    """Seconds to write (or restore) one sharded checkpoint: every host
+    moves only its own shard (`repro.ckpt.checkpointing.save`), so the
+    cost is per-host state bytes over per-host storage bandwidth.
+    ``state_factor`` scales params to full train state (params + grads +
+    optimizer moments ~ 3x for Adam at matching precision)."""
+    if storage_gbps <= 0:
+        raise ValueError(f"storage_gbps must be > 0, got {storage_gbps}")
+    bytes_per_host = state_factor * plan.param_bytes / plan.devices
+    return bytes_per_host / (storage_gbps * 1e9 / 8)
+
+
+@dataclass(frozen=True)
+class RecoveryCosts:
+    """Measured cost of losing one host, priced in seconds — the inputs
+    to :func:`repro.ckpt.checkpointing.availability`.
+
+    ``detect_s`` is SIMULATED: the gap between the scheduled host death
+    and the fabric's PDC-teardown signal (``abandon_tick``), i.e. the
+    backed-off RTO strike run that declares the peer unreachable.
+    ``restore_s`` is the sharded checkpoint read; ``replan_s`` is one
+    wasted step at the degraded (survivor) rate while the collective
+    groups re-form."""
+    detect_s: float
+    detect_ticks: int
+    restore_s: float
+    replan_s: float
+    healthy_tokens_per_sec: float
+    degraded_tokens_per_sec: float
+    flows_abandoned: int
+    horizon: int              # fault run's quiescence tick
+    budget: int               # fault run's tick budget
+
+    @property
+    def downtime_s(self) -> float:
+        """Fixed per-failure cost, excluding the half-interval of lost
+        work (that term depends on the checkpoint interval)."""
+        return self.detect_s + self.restore_s + self.replan_s
+
+
+def price_recovery(plan: ParallelismPlan, g: "QueueGraph | None" = None,
+                   profile=None, p: "SimParams | None" = None, *,
+                   fail_at: int = 64, fabric=None,
+                   storage_gbps: float = 100.0,
+                   **compile_kw) -> RecoveryCosts:
+    """Price the endpoint-failure recovery loop for one plan.
+
+    Three runs of the compiled step schedule:
+
+    1. healthy — baseline tokens/sec;
+    2. the same schedule with one DP-replica host killed at ``fail_at``
+       under a liveness-enabled profile (``TransportProfile.resilient``
+       by default): the victim's flows strike out, the PDC tears down,
+       quarantine quiesces the run early, and ``abandon_tick - fail_at``
+       is the measured detection latency in ticks (seconds via
+       ``FabricSpec.tick_seconds``);
+    3. the replanned schedule on the survivors
+       (:func:`repro.distributed.plan.replan_onto_survivors`) — the
+       degraded rate, whose step time also prices the replan barrier.
+
+    Returns a :class:`RecoveryCosts`; feed it to
+    :func:`repro.ckpt.checkpointing.availability` /
+    :func:`~repro.ckpt.checkpointing.effective_rate` with an MTBF and
+    checkpoint interval to get effective throughput."""
+    from repro.distributed.netmodel import FabricSpec
+    from repro.distributed.plan import replan_onto_survivors
+    from repro.network.faults import FaultSchedule
+    from repro.network.profile import TransportProfile
+
+    g = g if g is not None else leaf_spine(4, 4, 4)
+    profile = profile if profile is not None else TransportProfile.resilient()
+    if profile.pdc_dead_after <= 0:
+        raise ValueError(f"profile {profile.name!r} has pdc_dead_after=0: "
+                         f"recovery pricing needs PDC liveness teardown")
+    p = p if p is not None else SimParams(timeout_ticks=64)
+    fabric = fabric or FabricSpec()
+
+    compiled = compile_step(plan, g, **compile_kw)
+    sim_dp = compiled.meta["sim_dp"]
+    if sim_dp < 2:
+        raise ValueError(f"plan dp={plan.dp}: recovery pricing needs a DP "
+                         f"axis to lose (dp >= 2)")
+    budget = compiled.default_budget() + 8000
+
+    healthy = price_step(
+        compiled,
+        simulate(g, compiled.workload, profile, p, max_ticks=budget),
+        fabric=fabric)
+
+    # kill DP replica (sim_dp - 1)'s first host: the last leaf's rank-0
+    # host in compile_step's grid — a full replica loss, not a TP peer
+    victim = int(np.nonzero(np.asarray(g.host_leaf) == sim_dp - 1)[0][0])
+    sched = FaultSchedule.healthy(
+        g.num_queues, num_hosts=g.num_hosts).host_fail(victim, fail_at)
+    rf = simulate(g, compiled.workload, profile, p, faults=sched,
+                  max_ticks=budget)
+    if rf.flows_abandoned == 0 or rf.abandon_tick < 0:
+        raise RuntimeError(
+            f"host {victim} died at tick {fail_at} but no flow was "
+            f"abandoned within {budget} ticks — liveness teardown never "
+            f"fired (pdc_dead_after={profile.pdc_dead_after})")
+    detect_ticks = int(rf.abandon_tick) - fail_at
+    detect_s = detect_ticks * fabric.tick_seconds
+
+    plan2 = replan_onto_survivors(plan, 1)
+    compiled2 = compile_step(plan2, g, **compile_kw)
+    degraded = price_step(
+        compiled2,
+        simulate(g, compiled2.workload, profile, p,
+                 max_ticks=compiled2.default_budget()),
+        fabric=fabric)
+
+    return RecoveryCosts(
+        detect_s=detect_s, detect_ticks=detect_ticks,
+        restore_s=checkpoint_seconds(plan, storage_gbps=storage_gbps),
+        replan_s=degraded.step_s,
+        healthy_tokens_per_sec=healthy.tokens_per_sec,
+        degraded_tokens_per_sec=degraded.tokens_per_sec,
+        flows_abandoned=int(rf.flows_abandoned),
+        horizon=int(rf.horizon), budget=budget)
 
 
 # ---------------------------------------------------------------------------

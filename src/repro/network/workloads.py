@@ -237,6 +237,58 @@ def fault_sweep(spines: int = 4, hosts_per_leaf: int = 8, size: int = 600,
     }
 
 
+def host_fault_sweep(spines: int = 4, hosts_per_leaf: int = 4,
+                     size: int = 600, fail_at: int = 100,
+                     stall_heal: int = 800, budget: int = 6000):
+    """The endpoint-failure grid as one batch: per-scenario host/NIC
+    outage lanes riding the scenario axis (repro.network.faults), under
+    the ``resilient`` profile's PDC liveness teardown. ONE definition
+    shared by the resilience bench, the endpoint canary
+    (``python -m repro.network.faults --endpoint``) and the tests.
+
+    Four scenarios over cross-leaf pairs (flow i: leaf-0 host i ->
+    leaf-1 host i):
+
+    0. ``host_dead`` — flow 1's SOURCE host and flow 0's DESTINATION
+       host die at ``fail_at`` and never heal (both teardown directions:
+       a dead source stops ACK-processing and injecting; a dead
+       destination silently eats traffic until the PDC strikes out).
+       Must quiesce EARLY with exactly those flows abandoned.
+    1. ``host_dead_pdc_off`` — the same schedule under a
+       ``pdc_dead_after=0`` twin profile: no teardown, the run burns the
+       whole tick budget (the liveness hazard the quarantine fixes).
+    2. ``nic_stall`` — flow 0's source NIC freezes over
+       [fail_at, stall_heal) but stays ACK-live: no teardown, every
+       flow completes after the heal.
+    3. ``healthy`` — no faults (the bitwise-inertness anchor).
+
+    Returns (g, wls [4, F], faults [4, Q]/[4, H], expectations) with
+    ``expectations["profile"]`` the per-scenario profile LIST (feed it
+    straight to ``simulate_batch``), ``["dead_flows"]`` the flow ids
+    scenario 0 must abandon, and ``["budget"]`` the tick budget the
+    early-quiescence assertions are made against.
+    """
+    from repro.network.faults import FaultSchedule
+
+    g = leaf_spine(leaves=2, spines=spines, hosts_per_leaf=hosts_per_leaf)
+    f = hosts_per_leaf
+    wl = Workload.of(list(range(f)), [f + i for i in range(f)], size)
+    prof = TransportProfile.resilient()
+    prof_off = replace(prof, pdc_dead_after=0, name="resilient-pdc_off")
+    healthy = FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts)
+    dead = healthy.host_fail([1, f], fail_at)   # flow 1 src, flow 0 dst
+    stall = healthy.nic_stall(0, fail_at, stall_heal)
+    scheds = [dead, dead, stall, healthy]
+    names = ["host_dead", "host_dead_pdc_off", "nic_stall", "healthy"]
+    wls = Workload.stack([wl] * len(scheds))
+    return g, wls, FaultSchedule.stack(scheds), {
+        "names": names,
+        "profile": [prof, prof_off, prof, prof],
+        "dead_flows": (0, 1),
+        "budget": budget,
+    }
+
+
 def size_sweep(sizes, fan_in: int = 4):
     """Incast message-size sweep: same flow set, per-scenario sizes.
 

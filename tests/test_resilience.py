@@ -1,0 +1,407 @@
+"""Endpoint-failure resilience: host faults, PDC liveness teardown, and
+the priced checkpoint-restart recovery loop — contracts.
+
+Locked here (see DESIGN.md "Endpoint failure & recovery contract"):
+
+* host-fault lanes are OPT-IN and validated: addressing hosts needs
+  ``num_hosts``-widened lanes, host ids are range-checked, widths
+  compose across ``stack``/``with_seed``/``with_hosts`` with exactly
+  one nonzero host count, and schedules are checked against the
+  topology's host count at dispatch;
+* all-healthy host lanes are bitwise inert — widening a schedule with
+  ``num_hosts`` without scheduling an endpoint fault compiles and runs
+  the exact pre-endpoint-fault program;
+* QUARANTINE LIVENESS: a permanent endpoint death (dead host, or a
+  never-healing outage of every uplink a host's traffic rides) under a
+  ``pdc_dead_after`` profile is detected via consecutive zero-progress
+  RTO strikes, torn down, and the run quiesces EARLY — strictly before
+  the tick budget — with the surviving flows' delivered payload
+  identical to the pdc-off twin's (which burns the whole budget);
+* an ACK-live NIC stall is NOT death: nothing is abandoned and the
+  stalled flows complete after heal;
+* the new stat lanes (``flows_abandoned``, ``ticks_unreachable``,
+  ``abandon_tick``, quarantine/strike state) are bitwise identical
+  serial vs batched vs sharded with per-lane host faults riding the
+  scenario axis;
+* the PDC FSM takes PEER_DEAD from every live state straight to CLOSED
+  and ``pdc.unreachable`` mirrors the engine's strike predicate;
+* the recovery loop is PRICED: ``traffic.price_recovery`` measures
+  detection/restore/replan for one lost DP host, and the Young/Daly
+  closed forms in ``repro.ckpt.checkpointing`` are optimal (tau* is the
+  availability argmax) and monotone in MTBF.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdc
+from repro.core.types import PDCState
+from repro.network.fabric import SimParams, Workload, simulate, simulate_batch
+from repro.network.faults import FaultSchedule
+from repro.network.profile import TransportProfile
+from repro.network.topology import leaf_spine
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4; set by tests/conftest.py unless overridden)")
+
+
+def _state_equal(a, b) -> bool:
+    return all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)))
+
+
+def _small():
+    """2 leaves x 2 spines, 4 hosts/leaf. Flows 0/1 cross leaves (ride
+    leaf-0 uplinks), flow 2 stays inside leaf 0, flow 3 crosses from
+    leaf 1 (rides leaf-1 uplinks + spine->leaf-0 downlinks only)."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2, 6], [4, 5, 3, 0], 150)
+    ups = [int(g.up1_table[0, i]) for i in range(2)]
+    return g, wl, ups
+
+
+# ------------------------------------------------------------------------
+# host-lane API validation + composition
+# ------------------------------------------------------------------------
+
+def test_host_builders_require_host_lanes():
+    g, _, _ = _small()
+    s = FaultSchedule.healthy(g.num_queues)
+    with pytest.raises(ValueError, match="needs host lanes"):
+        s.host_fail(0, 100)
+    with pytest.raises(ValueError, match="needs host lanes"):
+        s.nic_stall(0, 100)
+    # with_hosts unlocks them
+    s2 = s.with_hosts(g.num_hosts).host_fail(1, 100)
+    assert s2.num_hosts == g.num_hosts and s2.has_host_faults
+
+
+def test_host_ids_are_range_checked():
+    g, _, _ = _small()
+    s = FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts)
+    with pytest.raises(ValueError, match="host ids"):
+        s.host_fail(g.num_hosts, 100)
+    with pytest.raises(ValueError, match="host ids"):
+        s.nic_stall(-1, 100)
+
+
+def test_with_hosts_rewiden_is_an_error():
+    g, _, _ = _small()
+    s = FaultSchedule.healthy(g.num_queues, num_hosts=8)
+    assert s.with_hosts(8) is s
+    with pytest.raises(ValueError, match="re-widen"):
+        s.with_hosts(4)
+
+
+def test_stack_normalizes_mixed_host_widths():
+    g, _, _ = _small()
+    plain = FaultSchedule.healthy(g.num_queues)
+    hosty = FaultSchedule.healthy(
+        g.num_queues, num_hosts=g.num_hosts).host_fail(1, 100)
+    st = FaultSchedule.stack([plain, hosty])
+    assert st.num_hosts == g.num_hosts
+    assert st.host_fail_at.shape == (2, g.num_hosts)
+    # lane 0 widened all-healthy, lane 1 carries the window
+    assert not np.asarray(st.host_dead_at(100))[0].any()
+    assert np.asarray(st.host_dead_at(100))[1, 1]
+    other = FaultSchedule.healthy(g.num_queues, num_hosts=4)
+    with pytest.raises(ValueError, match="different host counts"):
+        FaultSchedule.stack([hosty, other])
+
+
+def test_with_seed_composes_with_host_lanes():
+    g, _, ups = _small()
+    s = (FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts)
+         .host_fail(2, 50, 90).nic_stall(3, 60)
+         .lossy(ups[0], 0.1).with_seed(7))
+    assert int(s.seed) == 7
+    assert bool(np.asarray(s.host_dead_at(50))[2])
+    assert not np.asarray(s.host_dead_at(90))[2]      # healed
+    assert bool(np.asarray(s.nic_stalled_at(1000))[3])  # permanent
+    assert s.has_host_faults
+
+
+def test_schedule_host_count_validated_against_topology():
+    g, wl, _ = _small()
+    bad = FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts + 1)
+    with pytest.raises(ValueError, match="hosts"):
+        simulate(g, wl, TransportProfile.resilient(), SimParams(ticks=10),
+                 faults=bad)
+
+
+def test_all_healthy_host_lanes_are_bitwise_inert():
+    """Widened-but-empty host lanes must select the pre-endpoint-fault
+    executable and reproduce the no-faults run bit for bit."""
+    g, wl, _ = _small()
+    p = SimParams(ticks=700)
+    prof = TransportProfile.ai_full()
+    idle = FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts)
+    assert not idle.has_host_faults
+    a = simulate(g, wl, prof, p)
+    b = simulate(g, wl, prof, p, faults=idle)
+    assert a.horizon == b.horizon
+    assert _state_equal(a.state, b.state)
+
+
+# ------------------------------------------------------------------------
+# profile knob + FSM
+# ------------------------------------------------------------------------
+
+def test_pdc_dead_after_validation_and_resilient_profile():
+    with pytest.raises(ValueError, match="pdc_dead_after"):
+        replace(TransportProfile.ai_full(), pdc_dead_after=-1)
+    prof = TransportProfile.resilient()
+    assert prof.pdc_dead_after > 0
+    assert "pdc_dead_after" in prof.describe()
+    assert TransportProfile.ai_full().pdc_dead_after == 0  # default off
+
+
+def test_peer_dead_aborts_every_live_state_to_closed():
+    ev = jnp.full((4,), int(pdc.InitEvent.PEER_DEAD), jnp.int32)
+    live = jnp.asarray([int(PDCState.SYN), int(PDCState.ESTABLISHED),
+                        int(PDCState.QUIESCE), int(PDCState.ACK_WAIT)],
+                       jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(pdc.step_initiator(live, ev)),
+        np.full(4, int(PDCState.CLOSED)))
+    # CLOSED holds (self-loop): nothing to tear down
+    closed = jnp.asarray([int(PDCState.CLOSED)], jnp.int32)
+    assert int(pdc.step_initiator(closed, ev[:1])[0]) == int(PDCState.CLOSED)
+
+
+def test_unreachable_mirrors_strike_threshold():
+    strikes = jnp.asarray([0, 3, 4, 9], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(pdc.unreachable(strikes, 4)),
+        [False, False, True, True])
+    assert not np.asarray(pdc.unreachable(strikes, 0)).any()  # disabled
+
+
+# ------------------------------------------------------------------------
+# quarantine liveness: the regression the teardown path exists to fix
+# ------------------------------------------------------------------------
+
+def test_dead_uplinks_quiesce_early_with_survivors_intact():
+    """A never-healing outage of BOTH leaf-0 uplinks strands the two
+    cross-leaf flows sourced there forever. Without liveness teardown
+    the run burns the entire tick budget (the pre-PR behavior, locked
+    as the pdc-off twin); with ``pdc_dead_after`` the stranded flows
+    quarantine and the run quiesces early — and the surviving flows
+    (intra-leaf, and cross-leaf from the healthy side) deliver exactly
+    the same payload either way."""
+    g, wl, ups = _small()
+    budget = 4000
+    p = SimParams(ticks=budget, timeout_ticks=64)
+    dead = FaultSchedule.healthy(g.num_queues).flap(ups, 120)  # forever
+    on = TransportProfile.resilient()
+    off = replace(on, pdc_dead_after=0, name="resilient-pdc_off")
+
+    r_off = simulate(g, wl, off, p, faults=dead)
+    assert r_off.horizon == budget, \
+        f"pdc-off must burn the budget, exited at {r_off.horizon}"
+    assert r_off.flows_abandoned == 0
+    assert r_off.completion_tick() == -1
+
+    r_on = simulate(g, wl, on, p, faults=dead)
+    assert r_on.horizon < budget, \
+        f"quarantine must quiesce early, ran {r_on.horizon}/{budget}"
+    assert r_on.flows_abandoned == 2
+    assert r_on.abandon_tick > 120
+    assert r_on.ticks_unreachable > 0
+    ct = r_on.completion_ticks()
+    assert ct[0] == -1 and ct[1] == -1          # stranded, torn down
+    assert ct[2] > 0 and ct[3] > 0              # survivors complete
+    # identical delivered payload on the survivors, either engine
+    dv_on = np.asarray(r_on.state.delivered)
+    dv_off = np.asarray(r_off.state.delivered)
+    np.testing.assert_array_equal(dv_on[2:], dv_off[2:])
+    np.testing.assert_array_equal(dv_on[2:], np.asarray(wl.size)[2:])
+
+
+def test_dead_host_zero_traffic_flow_still_quarantines():
+    """A flow whose source dies BEFORE injecting anything never arms an
+    RTO the normal way; the endpoint-overdue stall path must still
+    strike it out (no silent budget burn)."""
+    g, wl, _ = _small()
+    budget = 4000
+    p = SimParams(ticks=budget, timeout_ticks=64)
+    sched = FaultSchedule.healthy(
+        g.num_queues, num_hosts=g.num_hosts).host_fail(0, 0)  # dead at t=0
+    r = simulate(g, wl, TransportProfile.resilient(), p, faults=sched)
+    # host 0 sources flow 0 and sinks flow 3: both torn down
+    assert r.flows_abandoned == 2
+    assert r.horizon < budget
+    ct = r.completion_ticks()
+    assert ct[0] == -1 and ct[3] == -1
+    assert ct[1] > 0 and ct[2] > 0
+
+
+def test_nic_stall_is_not_death():
+    """Injection frozen but ACK-live: the RTO strike path must NOT tear
+    the flow down, and everything completes after the stall heals."""
+    g, wl, _ = _small()
+    p = SimParams(ticks=6000, timeout_ticks=64)
+    sched = FaultSchedule.healthy(
+        g.num_queues, num_hosts=g.num_hosts).nic_stall(0, 100, 900)
+    r = simulate(g, wl, TransportProfile.resilient(), p, faults=sched)
+    assert r.flows_abandoned == 0
+    assert r.completion_tick() > 0
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  np.asarray(wl.size))
+
+
+# ------------------------------------------------------------------------
+# stat-lane parity: serial == batched == sharded with host lanes riding
+# ------------------------------------------------------------------------
+
+def _host_fault_grid():
+    g, wl, _ = _small()
+    healthy = FaultSchedule.healthy(g.num_queues, num_hosts=g.num_hosts)
+    scheds = [
+        healthy,                                # all-healthy widened lanes
+        healthy.host_fail(0, 100),              # permanent host death
+        healthy.host_fail(5, 100, 400),         # death that heals
+        healthy.nic_stall(1, 100, 500),         # ACK-live stall
+    ]
+    p = SimParams(ticks=4000, timeout_ticks=64)
+    return g, wl, scheds, TransportProfile.resilient(), p
+
+
+def test_batched_host_faults_match_serial_lanes():
+    g, wl, scheds, prof, p = _host_fault_grid()
+    batch = simulate_batch(g, Workload.stack([wl] * len(scheds)), prof, p,
+                           faults=FaultSchedule.stack(scheds))
+    assert batch[1].flows_abandoned > 0      # the grid actually bites
+    assert batch[0].flows_abandoned == 0
+    for i, (sched, r) in enumerate(zip(scheds, batch)):
+        solo = simulate(g, wl, prof, p, faults=sched)
+        assert solo.horizon == r.horizon, f"scenario {i}"
+        assert solo.flows_abandoned == r.flows_abandoned, f"scenario {i}"
+        assert solo.ticks_unreachable == r.ticks_unreachable, f"scenario {i}"
+        assert solo.abandon_tick == r.abandon_tick, f"scenario {i}"
+        np.testing.assert_array_equal(solo.completion_ticks(),
+                                      r.completion_ticks(),
+                                      err_msg=f"scenario {i}")
+        assert _state_equal(solo.state, r.state), f"scenario {i}"
+
+
+@multi_device
+def test_sharded_host_faults_match_batched_lanes():
+    g, wl, scheds, prof, p = _host_fault_grid()
+    wls = Workload.stack([wl] * len(scheds))
+    fs = FaultSchedule.stack(scheds)
+    base = simulate_batch(g, wls, prof, p, faults=fs)
+    shd = simulate_batch(g, wls, prof, p, faults=fs, shard=True)
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"scenario {i}"
+        assert a.flows_abandoned == b.flows_abandoned, f"scenario {i}"
+        assert a.ticks_unreachable == b.ticks_unreachable, f"scenario {i}"
+        assert a.abandon_tick == b.abandon_tick, f"scenario {i}"
+        assert _state_equal(a.state, b.state), f"scenario {i}"
+
+
+# ------------------------------------------------------------------------
+# checkpoint-restart economics
+# ------------------------------------------------------------------------
+
+def test_young_daly_is_the_availability_argmax():
+    from repro.ckpt.checkpointing import availability, young_daly_interval
+    costs = dict(write_s=2.0, detect_s=1.0, restore_s=2.0, replan_s=3.0)
+    for mtbf in (600.0, 3600.0, 86400.0):
+        tau = young_daly_interval(mtbf, costs["write_s"])
+        best = availability(tau, mtbf, **costs)
+        for f in (0.25, 0.5, 0.9, 1.1, 2.0, 4.0):
+            assert best > availability(tau * f, mtbf, **costs), (mtbf, f)
+
+
+def test_availability_monotone_in_mtbf():
+    from repro.ckpt.checkpointing import availability, young_daly_interval
+    prev = 0.0
+    for mtbf in (300.0, 1800.0, 3600.0, 7200.0, 86400.0):
+        av = availability(young_daly_interval(mtbf, 1.5), mtbf,
+                          write_s=1.5, detect_s=0.5, restore_s=1.0,
+                          replan_s=2.0)
+        assert 0.0 < av < 1.0
+        assert av > prev, mtbf
+        prev = av
+
+
+def test_economics_validation_and_effective_rate():
+    from repro.ckpt.checkpointing import (availability, effective_rate,
+                                          young_daly_interval)
+    with pytest.raises(ValueError, match="mtbf_s"):
+        young_daly_interval(0.0, 1.0)
+    with pytest.raises(ValueError, match="write_s"):
+        young_daly_interval(100.0, -1.0)
+    with pytest.raises(ValueError, match="interval_s"):
+        availability(0.0, 100.0, write_s=1.0)
+    with pytest.raises(ValueError, match="restore_s"):
+        availability(10.0, 100.0, write_s=1.0, restore_s=-2.0)
+    av = availability(10.0, 1000.0, write_s=1.0)
+    assert effective_rate(500.0, 10.0, 1000.0, write_s=1.0) \
+        == pytest.approx(500.0 * av)
+
+
+# ------------------------------------------------------------------------
+# replan + priced recovery
+# ------------------------------------------------------------------------
+
+def _train_plan(dp=4):
+    from repro import configs
+    from repro.distributed.plan import derive_plan
+    return derive_plan(configs.get("deepseek-coder-33b"), "train_4k",
+                       dp=dp, tp=4, layout="fsdp_tp")
+
+
+def test_replan_onto_survivors():
+    from repro.distributed.plan import replan_onto_survivors
+    plan = _train_plan()
+    p2 = replan_onto_survivors(plan, 1)
+    assert p2.dp == plan.dp - 1
+    assert (p2.tp, p2.pp, p2.arch, p2.shape, p2.layout) \
+        == (plan.tp, plan.pp, plan.arch, plan.shape, plan.layout)
+    assert p2.tokens_per_step == plan.tokens_per_step  # same global batch
+    assert replan_onto_survivors(plan, 0) is plan
+    with pytest.raises(ValueError, match="failed_hosts"):
+        replan_onto_survivors(plan, -1)
+    with pytest.raises(ValueError, match="surviving"):
+        replan_onto_survivors(plan, plan.dp)
+
+
+def test_price_recovery_rejects_unlosable_plans():
+    from repro.network.traffic import checkpoint_seconds, price_recovery
+    with pytest.raises(ValueError, match="DP axis"):
+        price_recovery(_train_plan(dp=1))
+    prof_off = TransportProfile.ai_full()
+    with pytest.raises(ValueError, match="pdc_dead_after"):
+        price_recovery(_train_plan(), profile=prof_off)
+    with pytest.raises(ValueError, match="storage_gbps"):
+        checkpoint_seconds(_train_plan(), storage_gbps=0.0)
+
+
+@pytest.mark.slow
+def test_price_recovery_end_to_end():
+    """The full loop: healthy rate, one dead DP host detected via the
+    simulated PDC teardown (early quiescence), restore + replan priced,
+    degraded rate strictly below healthy."""
+    from repro.ckpt.checkpointing import effective_rate
+    from repro.network.traffic import checkpoint_seconds, price_recovery
+    plan = _train_plan()
+    rc = price_recovery(plan)
+    assert rc.detect_ticks > 0 and rc.detect_s > 0
+    assert rc.flows_abandoned > 0
+    assert rc.horizon < rc.budget            # teardown ended the run early
+    assert rc.restore_s == pytest.approx(checkpoint_seconds(plan))
+    assert 0 < rc.degraded_tokens_per_sec < rc.healthy_tokens_per_sec
+    assert rc.replan_s > 0 and rc.downtime_s > rc.restore_s
+    eff = effective_rate(rc.healthy_tokens_per_sec, 60.0, 3600.0,
+                         write_s=checkpoint_seconds(plan),
+                         detect_s=rc.detect_s, restore_s=rc.restore_s,
+                         replan_s=rc.replan_s)
+    assert 0 < eff < rc.healthy_tokens_per_sec
