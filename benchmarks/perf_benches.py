@@ -290,7 +290,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     fq = [tuple(np.nonzero(masks[i])[0].tolist()) for i in range(b)]
 
     results = {
-        "api_version": 9,
+        "api_version": 10,
         "backend": jax.default_backend(),
         "topology": g.name,
         "flows": int(wl.src.shape[0]),
@@ -379,6 +379,7 @@ def run_benches(b: int, ticks: int, devices: int = 4) -> dict:
     results["fault_sweep"] = _fault_sweep()
     results["resilience_sweep"] = _resilience_sweep()
     results["fabric_health"] = _fabric_health()
+    results["corruption_sweep"] = _corruption_sweep()
     results["model_sweep"] = _model_sweep()
     results["sharded_sweep"] = _sharded_sweep_subprocess(devices)
     results["calibration"] = _calibration()
@@ -833,6 +834,119 @@ def _fabric_health(ticks: int = 3000) -> dict:
     }
 
 
+def _corruption_sweep() -> dict:
+    """Link-layer reliability on a BER-y fabric: the shared
+    ``workloads.corruption_sweep`` BER grid run through BOTH arms of the
+    LLR-on/off axis (``link=`` is a compile-time static, so the axis is
+    two ``simulate_batch`` calls over the same batch), plus the
+    LLR+CBFC lossless arm and the PFC-vs-CBFC buffer bill.
+
+    In-bench recovery gates (a reliability layer that doesn't beat the
+    recovery path it replaces is measuring nothing):
+
+    * at EVERY nonzero BER, hop-local LLR replay beats end-to-end RTO
+      recovery on tail completion AND per-flow goodput — and confines
+      the loss: zero end-to-end drops, nonzero replays, all flows
+      complete;
+    * at BER=0 the LLR-armed run is bitwise the plain run on every
+      pre-feature lane (the `lossy`-idiom inertness contract), and
+      congestion trims are NOT masked: the clean lane trims end-to-end
+      identically under both arms (LLR protects against PHY corruption
+      only — trims still NACK end-to-end);
+    * the CBFC arm is lossless on the clean congested lane: credit
+      exhaustion back-pressures (``credit_stall_ticks > 0``) instead of
+      trimming (``trims == 0``), and everything still completes;
+    * the Sec. 3.5.2 buffer bill: CBFC's credited buffer undercuts
+      PFC's per-(port, priority) headroom by > 2x on this topology.
+    """
+    from repro.core.link import (fabric_buffer_pricing, state_bitwise_equal)
+    from repro.network import workloads
+    from repro.network.fabric import simulate_batch
+
+    g, wls, scheds, exp = workloads.corruption_sweep()
+    prof, p, budget = exp["profile"], exp["params"], exp["budget"]
+    bers, names = exp["bers"], exp["names"]
+    run_on = lambda: simulate_batch(g, wls, prof, p, faults=scheds,  # noqa: E731
+                                    link=exp["link"])
+    run_off = lambda: simulate_batch(g, wls, prof, p, faults=scheds)  # noqa: E731
+    t0 = time.perf_counter()
+    on = run_on()
+    cold = time.perf_counter() - t0
+    off = run_off()
+    cb = simulate_batch(g, wls, prof, p, faults=scheds, link=exp["cbfc"])
+    warm_on = min(_timed(run_on) for _ in range(2))
+    warm_off = min(_timed(run_off) for _ in range(2))
+
+    def tail(r):
+        ct = r.completion_tick()
+        return ct if ct > 0 else budget
+
+    def scenario_goodput(r):
+        # delivered packets over the makespan (time for EVERY flow to
+        # finish, budget if some never did) — the collective-completion
+        # goodput an app sees. Per-flow mean would reward e2e's failure
+        # mode (a silent drop hurts one flow; an LLR replay holds the
+        # whole queue briefly), but the app waits for the tail.
+        return float(np.sum(np.asarray(r.state.delivered))) / tail(r)
+
+    grid = []
+    for i, (name, ber) in enumerate(zip(names, bers)):
+        t_on, t_off = tail(on[i]), tail(off[i])
+        gp_on, gp_off = scenario_goodput(on[i]), scenario_goodput(off[i])
+        if ber > 0:
+            assert int(on[i].drops) == 0, (name, int(on[i].drops))
+            assert on[i].llr_replays > 0, name
+            assert on[i].completion_tick() > 0, name
+            assert int(off[i].drops) > 0, (name, "BER lane must corrupt")
+            assert t_on < t_off, (name, t_on, t_off)
+            assert gp_on > gp_off, (name, gp_on, gp_off)
+        grid.append({
+            "name": name, "ber": ber,
+            "completion_llr": int(on[i].completion_tick()),
+            "completion_e2e": int(off[i].completion_tick()),
+            "llr_replays": on[i].llr_replays,
+            "e2e_drops": int(off[i].drops),
+            "e2e_timeouts": int(off[i].timeouts),
+            "goodput_llr": round(gp_on, 5),
+            "goodput_e2e": round(gp_off, 5),
+        })
+
+    # clean-lane gates: bitwise inertness + trims not masked
+    drift = state_bitwise_equal(on[0].state, off[0].state)
+    assert drift is None, f"clean-link LLR run drifted: {drift}"
+    assert int(on[0].trims) == int(off[0].trims) > 0, \
+        (int(on[0].trims), int(off[0].trims))
+
+    # CBFC losslessness on the clean congested lane
+    assert int(cb[0].trims) == 0, int(cb[0].trims)
+    assert cb[0].credit_stall_ticks > 0
+    assert all(r.completion_tick() > 0 for r in cb)
+
+    pricing = fabric_buffer_pricing(g.num_queues)
+    assert pricing["cbfc_total_bytes"] < pricing["pfc_total_bytes"] / 2
+
+    worst = grid[-1]
+    return {
+        "scenarios": len(names),
+        "bers": list(bers),
+        "budget": budget,
+        "sweep_cold_s": cold,
+        "sweep_warm_s": warm_on,
+        "sweep_warm_off_s": warm_off,
+        "scenarios_per_sec": len(names) / warm_on,
+        "llr_overhead_warm": warm_on / warm_off,
+        "grid": grid,
+        # headline: e2e-recovery tail over LLR tail at the worst BER
+        "llr_vs_e2e_recovery": round(
+            tail(off[-1]) / tail(on[-1]), 3),
+        "worst_ber_completion": [worst["completion_llr"],
+                                 worst["completion_e2e"]],
+        "cbfc_trims_clean": int(cb[0].trims),
+        "cbfc_stall_ticks_clean": cb[0].credit_stall_ticks,
+        "cbfc_over_pfc_buffer": round(pricing["cbfc_over_pfc"], 3),
+    }
+
+
 def _model_sweep() -> dict:
     """The model-driven co-design grid: 2 models x 2 sharding layouts x
     2 topologies x 3 transport profiles at decode, every operating
@@ -933,6 +1047,7 @@ def main() -> None:
     fs = results["fault_sweep"]
     rz = results["resilience_sweep"]
     fh = results["fabric_health"]
+    cr = results["corruption_sweep"]
     ms = results["model_sweep"]
     sh = results["sharded_sweep"]
     sh_line = (f"sharded sweep skipped ({sh['skipped']})" if "skipped" in sh
@@ -967,6 +1082,12 @@ def main() -> None:
           f"{fh['drop_rate'][2]}/tick, heal trim burst "
           f"{fh['heal_trim_burst']}/tick) at "
           f"{fh['telemetry_overhead']:.2f}x telemetry overhead; "
+          f"corruption grid {cr['scenarios']} BER points at "
+          f"{cr['scenarios_per_sec']:.2f}/s, worst-BER completion LLR "
+          f"{cr['worst_ber_completion'][0]} vs e2e "
+          f"{cr['worst_ber_completion'][1]} "
+          f"({cr['llr_vs_e2e_recovery']:.2f}x recovery win), CBFC buffer "
+          f"{cr['cbfc_over_pfc_buffer']:.2f}x of PFC; "
           f"wrote {out}")
 
 

@@ -27,7 +27,12 @@ new operating point is a config sweep, not a code fork: this script runs
       teardown detects and quarantines it (early quiescence instead of
       a burned budget), and the checkpoint-restart economics turn the
       measured detection/restore/replan costs into effective tokens/sec
-      at the Young/Daly optimal checkpoint interval.
+      at the Young/Daly optimal checkpoint interval,
+  [12] link-layer reliability (Sec 3.5): a BER-y link corrupts frames,
+      LLR replays them at the hop (zero end-to-end drops, tail
+      completion beats end-to-end RTO recovery), CBFC credits make the
+      fabric lossless by back-pressure instead of trims — with the
+      telemetry view showing WHERE the replays landed.
 
 The engine runs every scenario on a chunked while-scan that EXITS as
 soon as the scenario is quiescent — a generous tick budget costs only
@@ -276,6 +281,45 @@ def main():
           f" at a naive 15-min interval)")
     assert (effective_rate(rc.healthy_tokens_per_sec, tau, mtbf, **kw)
             > effective_rate(rc.healthy_tokens_per_sec, 900.0, mtbf, **kw))
+
+    print("\n[12] link-layer reliability (Sec 3.5): corruption confined to "
+          "the hop by LLR replay, losslessness by CBFC credits")
+    # LinkConfig is a compile-key static like TelemetrySpec: off (the
+    # default) compiles the exact pre-feature program; llr=True arms
+    # per-queue go-back-N replay (a corrupted frame is DELAYED by the
+    # link RTT, never dropped), cbfc=True meters enqueues with 20-bit
+    # cyclic credits (exhaustion back-pressures instead of trimming)
+    from repro.core.link import LinkConfig, fabric_buffer_pricing
+    g, wls, scheds, exp = workloads.corruption_sweep(bers=(0.0, 0.04))
+    prof, p = exp["profile"], exp["params"]
+    on = simulate_batch(g, wls, prof, p, faults=scheds, link=exp["link"],
+                        telemetry=TelemetrySpec.on())
+    off = simulate_batch(g, wls, prof, p, faults=scheds)
+    r_llr, r_e2e = on[1], off[1]
+    print(f"    BER 4% on {len(exp['uplinks'])} uplinks: LLR replayed "
+          f"{r_llr.llr_replays} corrupted frames at their hop "
+          f"({int(r_llr.drops)} e2e drops), completion "
+          f"{r_llr.completion_tick()} vs {r_e2e.completion_tick()} under "
+          f"e2e-only recovery ({int(r_e2e.drops)} silent drops, "
+          f"{r_e2e.timeouts} RTOs)")
+    llr_q = np.asarray(on[1].telemetry.final["llr_q"])
+    print(f"    telemetry: replays landed on queues "
+          f"{np.nonzero(llr_q)[0].tolist()} (the corrupted uplinks are "
+          f"{list(exp['uplinks'])})")
+    assert int(r_llr.drops) == 0 and int(r_e2e.drops) > 0
+    assert r_llr.completion_tick() < r_e2e.completion_tick()
+    # CBFC: the congested clean lane stops trimming, and the buffer it
+    # needs undercuts PFC's per-(port, priority) headroom
+    cb = simulate_batch(g, wls, prof, p, faults=scheds,
+                        link=LinkConfig.on(llr=True, cbfc=True))[0]
+    bill = fabric_buffer_pricing(g.num_queues)
+    print(f"    CBFC on the clean congested lane: {int(cb.trims)} trims "
+          f"(e2e arm trimmed {int(off[0].trims)}), "
+          f"{cb.credit_stall_ticks} stall ticks; lossless buffer bill "
+          f"{bill['cbfc_total_bytes'] / 1e6:.1f} MB vs "
+          f"{bill['pfc_total_bytes'] / 1e6:.1f} MB PFC headroom "
+          f"({bill['cbfc_over_pfc']:.2f}x per port)")
+    assert int(cb.trims) == 0 and cb.credit_stall_ticks > 0
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ Guarded metrics (throughput — higher is better):
   committed baseline predates it)
 * ``resilience_sweep.scenarios_per_sec`` (api_version >= 9; the
   endpoint-fault grid, host-fault lanes riding the scenario axis)
+* ``corruption_sweep.scenarios_per_sec`` (api_version >= 10; the BER
+  grid's LLR-armed arm — also gates the link-layer off-gating contract,
+  since every OTHER guarded block runs with ``link=None``)
 
 All guarded throughput blocks run with telemetry OFF — the off spec is
 normalized to the pre-telemetry compile key, so these numbers also gate
@@ -73,6 +76,8 @@ METRICS = (
      ("model_sweep", "scenarios_per_sec")),
     ("resilience_sweep.scenarios_per_sec",
      ("resilience_sweep", "scenarios_per_sec")),
+    ("corruption_sweep.scenarios_per_sec",
+     ("corruption_sweep", "scenarios_per_sec")),
 )
 
 

@@ -15,10 +15,12 @@ Each record carries the run timestamp, api_version, backend, the
 headline throughput metrics (ticks/sec single + batched, scenarios/sec,
 the sweep blocks' scenarios/sec), the calibration reference that makes
 cross-machine numbers comparable, and — api_version >= 8 — the
-``fabric_health`` telemetry overhead ratio, and — api_version >= 9 —
+``fabric_health`` telemetry overhead ratio, — api_version >= 9 —
 the resilience grid's scenarios/sec plus its 1h-MTBF Young/Daly
-availability headline. Missing blocks are simply omitted, so records
-from any bench version coexist in one file.
+availability headline, and — api_version >= 10 — the corruption grid's
+scenarios/sec plus the worst-BER LLR-vs-e2e recovery ratio. Missing
+blocks are simply omitted, so records from any bench version coexist
+in one file.
 """
 import argparse
 import datetime
@@ -51,6 +53,9 @@ HEADLINE = (
     ("shard_devices", ("sharded_sweep", "devices")),
     ("telemetry_overhead", ("fabric_health", "telemetry_overhead")),
     ("fabric_health_warm_s", ("fabric_health", "telemetry_on_warm_s")),
+    ("corruption_scenarios_per_sec",
+     ("corruption_sweep", "scenarios_per_sec")),
+    ("llr_vs_e2e_recovery", ("corruption_sweep", "llr_vs_e2e_recovery")),
 )
 
 

@@ -49,6 +49,14 @@ echo "== telemetry canary: the flap must be visible in the probe lanes =="
 # (repro.network.telemetry).
 python -m repro.network.telemetry
 
+echo "== link-layer canary: LLR confinement + CBFC buffer bill =="
+# The shared corruption grid at two BER points: an LLR-armed BER-y
+# fabric must deliver every flow with ZERO end-to-end drops and beat
+# the e2e-recovery twin on tail completion; the clean-link lane must be
+# bitwise the link-off program; CBFC's credited buffer must undercut
+# PFC headroom (repro.core.link).
+python -m repro.core.link
+
 echo "== traffic engine canary: plan -> schedule -> simulated step time =="
 # One small config priced end-to-end: the simulated network term must
 # land within [1, 10]x of the plan's alpha-beta lower bound

@@ -88,6 +88,7 @@ import numpy as np
 from repro.core import inc, pds
 from repro.core import pdc as pdc_fsm
 from repro.core.cms.nscc import NSCCParams
+from repro.core.link import CTR_MOD, LinkConfig
 from repro.core.lb.schemes import LBPolicy, LBScheme, LBState, _mix32
 from repro.core.lb.schemes import _pick_lane as _pick
 from repro.kernels import ops as kops
@@ -263,6 +264,15 @@ class SimState:
     quarantined: jax.Array    # [F] bool PDC torn down, flow abandoned
     flows_abandoned: jax.Array    # [] int32 PDCs declared unreachable
     ticks_unreachable: jax.Array  # [] int32 ticks with >= 1 quarantined flow
+    #: link-layer reliability lanes (repro.core.link.LinkConfig; the
+    #: per-queue arrays are zero-size unless the dispatching `link=`
+    #: spec arms them — the scalars stream 0 on unarmed runs)
+    llr_busy_until: jax.Array  # [Q] int32 LLR go-back-N replay deadline
+    llr_replays: jax.Array     # [] int32 frames corrupted + replayed at hop
+    cbfc_consumed: jax.Array   # [Q] uint32 20-bit cyclic credits consumed
+    cbfc_freed: jax.Array      # [Q] uint32 20-bit cyclic credits freed
+    cbfc_ret: jax.Array        # [Rd, Q] int32 credit-return delay ring
+    credit_stall_ticks: jax.Array  # [] int32 ticks with >= 1 credit stall
 
 
 def _first_set_bit(ring: jax.Array) -> jax.Array:
@@ -307,8 +317,8 @@ def _own_word(ring: jax.Array, off: jax.Array) -> jax.Array:
 
 
 def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
-               p: SimParams, seed: "int | jax.Array" = DEFAULT_SEED
-               ) -> SimState:
+               p: SimParams, seed: "int | jax.Array" = DEFAULT_SEED,
+               link: "LinkConfig | None" = None) -> SimState:
     Q, C = g.num_queues, p.queue_capacity
     F = wl.src.shape[0]
     D = p.ack_return_ticks + 1
@@ -344,6 +354,17 @@ def init_state(g: QueueGraph, wl: Workload, profile: TransportProfile,
         rto_strikes=jnp.zeros((F,), jnp.int32),
         quarantined=jnp.zeros((F,), jnp.bool_),
         flows_abandoned=jnp.int32(0), ticks_unreachable=jnp.int32(0),
+        llr_busy_until=jnp.zeros(
+            (Q if link is not None and link.llr else 0,), jnp.int32),
+        llr_replays=jnp.int32(0),
+        cbfc_consumed=jnp.zeros(
+            (Q if link is not None and link.cbfc else 0,), jnp.uint32),
+        cbfc_freed=jnp.zeros(
+            (Q if link is not None and link.cbfc else 0,), jnp.uint32),
+        cbfc_ret=jnp.zeros(
+            ((link.credit_return_ticks, Q)
+             if link is not None and link.cbfc else (0, 0)), jnp.int32),
+        credit_stall_ticks=jnp.int32(0),
     )
 
 
@@ -371,7 +392,8 @@ def _rank_within(target: jax.Array, valid: jax.Array,
 
 def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
               lossy: bool = False, tel: "TelemetrySpec | None" = None,
-              hosty: bool = False):
+              hosty: bool = False, corrupty: bool = False,
+              link: "LinkConfig | None" = None):
     """Build the per-tick transition function for one transport profile.
 
     The tick is composed from the profile's pluggable policy objects: a
@@ -405,8 +427,32 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
     are compiled in only when the dispatching schedule actually carries
     host faults, so all-healthy runs pay nothing and stay bitwise the
     pre-endpoint-fault program.
+
+    ``corrupty`` gates the PHY-corruption draw the same way ``lossy``
+    gates the gray-link draw: compiled in only when the dispatching
+    schedule has a nonzero ``corrupt_p`` lane. Corruption is drawn per
+    TRANSMISSION (at dequeue, one frame per queue per tick — so
+    retransmitted frames re-draw) from an independent hash stream.
+
+    ``link`` (a :class:`~repro.core.link.LinkConfig`, static like
+    ``tel``) arms the link-layer reliability lanes: ``llr`` confines a
+    corrupted transmission to the hop — the queue holds its head frame
+    for ``llr_rtt`` ticks (link NACK turnaround + go-back-N replay) and
+    then retransmits it, so delivery is delayed, never dropped; without
+    it a corrupted frame is a silent end-to-end loss. ``cbfc`` puts a
+    20-bit cyclic credit gate at enqueue: a candidate whose target queue
+    has no credited space left is back-pressured in place (the upstream
+    hop keeps its head frame, an injector waits at the NIC) instead of
+    overflowing, with dequeue credits returning after
+    ``credit_return_ticks``. ``link=None`` (or an off spec) compiles
+    the exact pre-feature program.
     """
     tel_on = tel is not None and tel.enabled
+    llr = link is not None and link.llr
+    cbfc = link is not None and link.cbfc
+    llr_rtt = int(link.llr_rtt) if llr else 0
+    Rd = int(link.credit_return_ticks) if cbfc else 1
+    MASK20 = jnp.uint32(CTR_MOD - 1)
     rt = RoutingTables(g)
     Q = g.num_queues
     C = p.queue_capacity
@@ -694,35 +740,94 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         rtx_psn = src_track.base.astype(jnp.int32) + rtx_off
         use_rtx = injected & has_rtx & (rtx_off >= 0)
         psn_out = jnp.where(use_rtx, rtx_psn, next_psn)
-        rtx = _clear_own_bit(rtx, rtx_off, use_rtx)
-        next_psn = jnp.where(injected & ~use_rtx, next_psn + 1, next_psn)
 
         lbs2, ev_sel = lb_pol.select(lbs, psn_out.astype(jnp.uint32), tick)
         if mixed_rod:
             # ROD lanes are pinned to their static single-path EV and do
             # not advance the spraying state
             ev_sel = jnp.where(rod_mask, lb_pol.static_ev(lbs), ev_sel)
-            commit = injected & ~rod_mask
-        else:
-            commit = injected
-        lbs = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(
-                commit.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
-            lbs, lbs2)
-        if evict_on:
-            # remember each flow's most recent EV: the path a later RTO
-            # expiry implicates (covers ROD lanes, whose pinned EV never
-            # passes through commit_selection)
-            lbs = replace(lbs, last_ev=jnp.where(
-                injected, ev_sel.astype(jnp.int32), lbs.last_ev))
         inj_q = rt.injection_queue(flow_src, flow_dst, ev_sel)
-        inflight = inflight + injected.astype(jnp.int32)
-        cc_st = cc_pol.on_inject(cc_st, injected)
-        retransmits = s.retransmits + use_rtx.sum(dtype=jnp.int32)
+
+        def commit_injection(injected, use_rtx, rtx, next_psn, lbs,
+                             inflight, cc_st):
+            """Sender-state commit for this tick's injections. With CBFC
+            off it runs right here (the pre-feature program); with CBFC
+            on it is deferred past the section-7 credit gate, which may
+            cancel injections (`stall_inj`) — a cancelled injection must
+            leave NO sender-state trace, or the flow would leak PSNs and
+            window."""
+            rtx = _clear_own_bit(rtx, rtx_off, use_rtx)
+            next_psn = jnp.where(injected & ~use_rtx, next_psn + 1,
+                                 next_psn)
+            commit = injected & ~rod_mask if mixed_rod else injected
+            lbs = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(
+                    commit.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
+                lbs, lbs2)
+            if evict_on:
+                # remember each flow's most recent EV: the path a later
+                # RTO expiry implicates (covers ROD lanes, whose pinned
+                # EV never passes through commit_selection)
+                lbs = replace(lbs, last_ev=jnp.where(
+                    injected, ev_sel.astype(jnp.int32), lbs.last_ev))
+            inflight = inflight + injected.astype(jnp.int32)
+            cc_st = cc_pol.on_inject(cc_st, injected)
+            retransmits = s.retransmits + use_rtx.sum(dtype=jnp.int32)
+            return rtx, next_psn, lbs, inflight, cc_st, retransmits
+
+        if not cbfc:
+            rtx, next_psn, lbs, inflight, cc_st, retransmits = \
+                commit_injection(injected, use_rtx, rtx, next_psn, lbs,
+                                 inflight, cc_st)
 
         # ------------------------------------------------- 4. forwarding
         qidx = jnp.arange(Q)
         nonempty = s.q_len > 0
+        # link-layer transmission gate: `txq` is the set of queues whose
+        # head frame actually REACHES the next hop this tick, `leaves`
+        # the set whose head frame leaves its queue. With the link
+        # statics off both are `nonempty` and the block compiles away.
+        txq = nonempty
+        if llr:
+            # a queue mid-replay is re-sending the corrupted window at
+            # the link layer: nothing reaches the next hop until
+            # `llr_busy_until` (the hop-confined go-back-N penalty)
+            txq = txq & (tick >= s.llr_busy_until)
+        if corrupty:
+            # per-transmission BER draw hashed from (seed, tick, queue)
+            # — an independent stream from the gray-link draw (distinct
+            # hash constants), equally reproducible across batch/shard/
+            # chunk boundaries. One frame transmits per queue per tick,
+            # so one draw per queue IS per transmission — and replayed
+            # or retransmitted frames re-draw: a bad cable hits those
+            # too.
+            uc = _mix32(_mix32(tick.astype(jnp.uint32)
+                               ^ fault.seed * jnp.uint32(0x85EBCA77))
+                        ^ qidx.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35))
+            corrupt_hit = txq & (uc < loss_threshold(fault.corrupt_p))
+        else:
+            corrupt_hit = jnp.zeros((Q,), jnp.bool_)
+        if llr:
+            # LLR confines the loss to the hop: the corrupted frame is
+            # link-NACKed and the queue holds it for a go-back-N replay
+            # window — delivery is DELAYED, never dropped, and nothing
+            # downstream or end-to-end ever sees the corruption
+            txq = txq & ~corrupt_hit
+            leaves = txq
+            llr_busy_until = jnp.where(
+                corrupt_hit, tick + jnp.int32(llr_rtt), s.llr_busy_until)
+            llr_replays = s.llr_replays + corrupt_hit.sum(dtype=jnp.int32)
+            corrupt_lost = jnp.zeros((Q,), jnp.bool_)
+        else:
+            # no link-layer recovery: the corrupted frame was
+            # transmitted and died on the wire — a silent drop charged
+            # at the transmitting hop (section 7), recovered end-to-end
+            # (RTO / OOO inference) exactly like a gray-link loss
+            corrupt_lost = corrupt_hit
+            leaves = txq
+            txq = txq & ~corrupt_hit
+            llr_busy_until = s.llr_busy_until
+            llr_replays = s.llr_replays
         hpos = s.q_head
         head_pkt = jnp.take_along_axis(
             s.q_pkt, hpos[:, None, None], axis=1)[:, 0]        # [Q, 5]
@@ -732,14 +837,17 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         pm = head_pkt[:, PKT_META]
         pt = head_pkt[:, PKT_TSENT]
         # egress ECN marking: queue length at departure above threshold
-        mark = nonempty & (s.q_len > p.ecn_threshold)
+        mark = txq & (s.q_len > p.ecn_threshold)
         pm = jnp.where(mark, pm | META_ECN, pm)
-        q_head = jnp.where(nonempty, (s.q_head + 1) % C, s.q_head)
-        q_len = jnp.where(nonempty, s.q_len - 1, s.q_len)
+        if not cbfc:
+            # with CBFC the dequeue commit is deferred past the section-7
+            # credit gate, which can hold a head frame in place
+            q_head = jnp.where(leaves, (s.q_head + 1) % C, s.q_head)
+            q_len = jnp.where(leaves, s.q_len - 1, s.q_len)
 
         safe_pf = jnp.where(nonempty, pf, 0)
         nq = rt.route_step(qidx, flow_src[safe_pf], flow_dst[safe_pf], pe)
-        deliver = nonempty & (nq == DELIVERED)
+        deliver = txq & (nq == DELIVERED)
         if hosty:
             # packets dequeued toward a dead destination vanish at the
             # dead NIC (silent drops, counted in section 7): the
@@ -748,7 +856,7 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             # host must not ACK, so they may not count as deliveries
             dst_gone = deliver & dst_dead[safe_pf]
             deliver = deliver & ~dst_gone
-        forward = nonempty & (nq >= 0)
+        forward = txq & (nq >= 0)
 
         # --------------------------------------------- 5. delivery at FEPs
         dtrim = deliver & ((pm & META_TRIMMED) != 0)
@@ -858,6 +966,51 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             cvalid = cvalid & ~is_lost
         else:
             is_lost = jnp.zeros_like(cvalid)
+        if cbfc:
+            # CBFC credit gate (repro.core.link.CBFCState semantics,
+            # vectorized): available = capacity - (consumed - freed)
+            # over 20-bit cyclic counters, where `freed` lags the actual
+            # dequeues by the credit-return latency (the delay ring).
+            # A candidate without credited space is back-pressured IN
+            # PLACE: a forwarded frame never left its upstream queue
+            # (that dequeue is cancelled below) and an injection waits
+            # at the NIC with zero sender-state trace (the deferred
+            # commit_injection). Nothing overflows, so a CBFC fabric
+            # never trims for lack of buffer. Deliveries, INC
+            # absorptions, and dead/gray-eaten candidates are not
+            # enqueues and bypass the gate — no credit leak, and the
+            # sink hop always drains, so credits always return (the
+            # fabric is a DAG: no credit deadlock).
+            arriving = s.cbfc_ret[tick % Rd]
+            freed_now = (s.cbfc_freed + arriving.astype(jnp.uint32)) \
+                & MASK20
+            avail = jnp.int32(C) - ((s.cbfc_consumed - freed_now)
+                                    & MASK20).astype(jnp.int32)
+            # arrival rank within the target queue: candidates past the
+            # credited space stall. Freed credits lag dequeues, so
+            # credit-occupancy >= true occupancy and survivors always
+            # fit (`fits` below stays all-true under CBFC). Stalled
+            # lanes are the per-target rank suffix, so survivor ranks —
+            # and hence enqueue positions — are unchanged.
+            _, crank = _rank_within(cand_q, cvalid,
+                                    jnp.zeros((Q,), jnp.int32))
+            stall = cvalid & (crank >= avail[safe_cq])
+            cvalid = cvalid & ~stall
+            stall_fwd = stall[:Q]
+            stall_inj = stall[Q:]
+            dequeued = leaves & ~stall_fwd
+            q_head = jnp.where(dequeued, (s.q_head + 1) % C, s.q_head)
+            q_len = jnp.where(dequeued, s.q_len - 1, s.q_len)
+            injected = injected & ~stall_inj
+            use_rtx = use_rtx & ~stall_inj
+            rtx, next_psn, lbs, inflight, cc_st, retransmits = \
+                commit_injection(injected, use_rtx, rtx, next_psn, lbs,
+                                 inflight, cc_st)
+            credit_stall_ticks = s.credit_stall_ticks \
+                + stall.any().astype(jnp.int32)
+        else:
+            dequeued = leaves
+            credit_stall_ticks = s.credit_stall_ticks
         pos, _ = _rank_within(cand_q, cvalid, q_len)
         fits = cvalid & (pos < C)
         overflow = cvalid & ~fits
@@ -870,6 +1023,20 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         hot_enq = (cand_q[None, :] == qidx[:, None]) & fits[None, :]  # [Q, n]
         added = hot_enq.sum(axis=1, dtype=jnp.int32)
         q_len = q_len + added
+        if cbfc:
+            # commit the cyclic counters: enqueues consume, this tick's
+            # dequeues become the credit-update message that reaches the
+            # senders `credit_return_ticks` later (the slot just read as
+            # `arriving` is exactly Rd ticks old — overwrite it)
+            cbfc_consumed = (s.cbfc_consumed + added.astype(jnp.uint32)) \
+                & MASK20
+            cbfc_freed = freed_now
+            cbfc_ret = s.cbfc_ret.at[tick % Rd].set(
+                dequeued.astype(jnp.int32))
+        else:
+            cbfc_consumed = s.cbfc_consumed
+            cbfc_freed = s.cbfc_freed
+            cbfc_ret = s.cbfc_ret
 
         # overflow: trim (fast NACK via control TC) or drop
         if p.trimming:
@@ -885,6 +1052,11 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
         # and corruption drops)
         drops = drops + is_dead.sum(dtype=jnp.int32) \
             + is_lost.sum(dtype=jnp.int32)
+        if corrupty and not llr:
+            # corruption without link-layer recovery is a silent drop,
+            # charged at the transmitting hop (disjoint from the
+            # enqueue-side dead/gray counts above)
+            drops = drops + corrupt_lost.sum(dtype=jnp.int32)
         if hosty:
             # dequeue-time losses at a dead destination NIC (section 5)
             drops = drops + dst_gone.sum(dtype=jnp.int32)
@@ -1047,6 +1219,9 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
             rto_strikes=rto_strikes, quarantined=quarantined,
             flows_abandoned=flows_abandoned,
             ticks_unreachable=ticks_unreachable,
+            llr_busy_until=llr_busy_until, llr_replays=llr_replays,
+            cbfc_consumed=cbfc_consumed, cbfc_freed=cbfc_freed,
+            cbfc_ret=cbfc_ret, credit_stall_ticks=credit_stall_ticks,
         )
         out = {
             "delivered": fresh_f.astype(jnp.int32),
@@ -1068,13 +1243,26 @@ def make_step(g: QueueGraph, profile: TransportProfile, p: SimParams, F: int,
                 trim_ev = jnp.zeros_like(overflow)
                 drop_ev = is_dead | is_lost | overflow
             hot_cand = safe_cq[None, :] == qidx[:, None]       # [Q, Q+F]
+            drop_q = (hot_cand & drop_ev[None, :]).sum(
+                axis=1, dtype=jnp.int32)
+            if corrupty and not llr:
+                # unrecovered corruption drops are charged at the
+                # TRANSMITTING queue (the loss is on its egress wire)
+                drop_q = drop_q + corrupt_lost.astype(jnp.int32)
             out["probe"] = {
                 "mark": mark.astype(jnp.int32),
                 "trim": (hot_cand & trim_ev[None, :]).sum(
                     axis=1, dtype=jnp.int32),
-                "drop": (hot_cand & drop_ev[None, :]).sum(
-                    axis=1, dtype=jnp.int32),
+                "drop": drop_q,
                 "rtt": rtt, "has_rtt": has_ack, "cwnd": out["cwnd"],
+                # link-layer channels: per-queue LLR replays fired and
+                # per-target-queue credit stalls this tick (all-zero
+                # lanes when the respective spec is off)
+                "llr": (corrupt_hit.astype(jnp.int32) if llr
+                        else jnp.zeros((Q,), jnp.int32)),
+                "stall": ((hot_cand & stall[None, :]).sum(
+                    axis=1, dtype=jnp.int32) if cbfc
+                    else jnp.zeros((Q,), jnp.int32)),
             }
         return ns, out
 
@@ -1123,6 +1311,10 @@ class SimResult:
     ``ticks_degraded``  executed ticks with at least one dead link/host
     ``flows_abandoned`` PDCs declared unreachable and torn down
     ``ticks_unreachable``  executed ticks with >= 1 quarantined flow
+    ``llr_replays``     frames corrupted on a BER lane and replayed at the
+                        hop by LLR (``link=LinkConfig(llr=True)``)
+    ``credit_stall_ticks``  executed ticks with >= 1 enqueue back-pressured
+                        by CBFC credit exhaustion (``cbfc=True``)
     ==================  ====================================================
     """
 
@@ -1277,6 +1469,21 @@ class SimResult:
         return int(self.state.ticks_unreachable)
 
     @property
+    def llr_replays(self) -> int:
+        """Frames corrupted on a BER lane (``FaultSchedule.corrupt``)
+        and replayed at the hop by link-level retry — each one a loss
+        that never reached end-to-end recovery (0 unless the run was
+        dispatched with ``link=LinkConfig(llr=True)``)."""
+        return int(self.state.llr_replays)
+
+    @property
+    def credit_stall_ticks(self) -> int:
+        """Executed ticks on which at least one enqueue was
+        back-pressured by CBFC credit exhaustion instead of overflowing
+        (0 unless ``link=LinkConfig(cbfc=True)``)."""
+        return int(self.state.credit_stall_ticks)
+
+    @property
     def abandon_tick(self) -> int:
         """First tick at which any PDC teardown fired (-1 = none).
         Streamed on the ``trace="stats"`` tier — the detection-time
@@ -1378,7 +1585,8 @@ _RUN_CACHE: dict = {}
 def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
                F: int, batched: bool, trace: str = "stats", shard=None,
                lossy: bool = False, tel: "TelemetrySpec | None" = None,
-               hosty: bool = False):
+               hosty: bool = False, corrupty: bool = False,
+               link: "LinkConfig | None" = None):
     # the horizon (p.ticks) is a traced bound, not a compiled constant:
     # strip it so one executable serves every tick budget. `shard` is
     # None (unsharded) or the device-id tuple a sharded executable was
@@ -1390,15 +1598,24 @@ def _cache_key(g: QueueGraph, profile: TransportProfile, p: SimParams,
     # `hosty` selects the executable with the endpoint-fault lanes
     # compiled in (host/NIC outage windows; see make_step) — schedules
     # without host lanes share the pre-endpoint entry.
+    # `corrupty` (schedule-derived, like lossy/hosty) selects the
+    # executable with the PHY-corruption draw compiled in; `link` (a
+    # LinkConfig, user-static like tel) selects the one with the
+    # LLR/CBFC lanes armed — None and the off spec share the
+    # pre-link-layer entry.
     if tel is not None and not tel.enabled:
         tel = None
+    if link is not None and not link.enabled:
+        link = None
     return (id(g), g.name, profile, replace(p, ticks=0), F, batched, trace,
-            shard, lossy, tel, hosty)
+            shard, lossy, tel, hosty, corrupty, link)
 
 
 def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
                F: int, batched: bool, trace: str, lossy: bool = False,
-               tel: "TelemetrySpec | None" = None, hosty: bool = False):
+               tel: "TelemetrySpec | None" = None, hosty: bool = False,
+               corrupty: bool = False,
+               link: "LinkConfig | None" = None):
     """(init, run) pair for one trace tier — UN-jitted, so the sharded
     engine (repro.network.shard) can wrap the same driver in shard_map
     before compiling. `_get_fns` jits and caches; behavior contract:
@@ -1434,14 +1651,14 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
             "TelemetrySpec requires trace='stats' (the full tier already "
             "records dense per-tick lanes)")
     step = make_step(g, profile, p, F, lossy, tel if tel_on else None,
-                     hosty=hosty)
+                     hosty=hosty, corrupty=corrupty, link=link)
     chunk = int(p.chunk_ticks)
     if chunk < 1:
         raise ValueError(f"chunk_ticks must be >= 1, got {chunk}")
     xs = jnp.arange(chunk, dtype=jnp.int32)
 
     def init_one(wl, seed):
-        return init_state(g, wl, profile, p, seed)
+        return init_state(g, wl, profile, p, seed, link=link)
 
     # the stat transition with the telemetry lanes riding inside it:
     # st["tel"] carries the probe rings (see repro.network.telemetry).
@@ -1562,15 +1779,16 @@ def _build_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
 
 def _get_fns(g: QueueGraph, profile: TransportProfile, p: SimParams,
              F: int, batched: bool, trace: str, lossy: bool = False,
-             tel: "TelemetrySpec | None" = None, hosty: bool = False):
+             tel: "TelemetrySpec | None" = None, hosty: bool = False,
+             corrupty: bool = False, link: "LinkConfig | None" = None):
     """Jitted + cached (init, run) pair — see `_build_fns` for the
     driver contract. Both runs donate the carry."""
     key = _cache_key(g, profile, p, F, batched, trace, lossy=lossy, tel=tel,
-                     hosty=hosty)
+                     hosty=hosty, corrupty=corrupty, link=link)
     fns = _RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = _build_fns(g, profile, p, F, batched, trace, lossy,
-                                  tel, hosty)
+                                  tel, hosty, corrupty, link)
         fns = (jax.jit(init_fn), jax.jit(run, donate_argnums=(0,)))
         _RUN_CACHE[key] = fns
     return fns
@@ -1731,13 +1949,27 @@ def _check_telemetry(telemetry, trace: str) -> "TelemetrySpec | None":
     return telemetry
 
 
+def _check_link(link) -> "LinkConfig | None":
+    """Normalize/validate the link= kwarg: None or an off spec is the
+    free pre-link-layer path (identical cache key, identical program)."""
+    if link is None:
+        return None
+    if not isinstance(link, LinkConfig):
+        raise TypeError(f"link= takes a LinkConfig, got "
+                        f"{type(link).__name__}")
+    if not link.enabled:
+        return None
+    return link
+
+
 def simulate(g: QueueGraph, wl: Workload,
              profile: "TransportProfile | SimParams | None" = None,
              p: "SimParams | None" = None, *,
              seed: int = DEFAULT_SEED, failed=None, faults=None,
              trace: str = "stats", max_ticks: "int | None" = None,
              goodput_window: "tuple[int, int] | None" = None,
-             telemetry: "TelemetrySpec | None" = None) -> SimResult:
+             telemetry: "TelemetrySpec | None" = None,
+             link: "LinkConfig | None" = None) -> SimResult:
     """Run one scenario for at most ``max_ticks`` (default p.ticks),
     exiting early at the first chunk boundary where the scenario is
     quiescent.
@@ -1763,10 +1995,16 @@ def simulate(g: QueueGraph, wl: Workload,
              attach the reconstructed :class:`~repro.network.telemetry.
              FabricTrace` as ``result.telemetry``. ``None`` / the off
              spec compile the identical pre-telemetry program.
+    link:    a :class:`~repro.core.link.LinkConfig` (static, like the
+             profile and the telemetry spec): arms per-queue LLR replay
+             and/or the CBFC credit gate — see ``make_step``. ``None`` /
+             ``LinkConfig.off()`` compile the identical pre-link-layer
+             program.
     """
     profile, p, failed = _normalize_call(profile, p, failed)
     _check_trace(trace)
     tel = _check_telemetry(telemetry, trace)
+    link = _check_link(link)
     budget = int(p.ticks if max_ticks is None else max_ticks)
     F = int(wl.src.shape[0])
     profile.delivery_modes(F)  # validate per-flow tuples early
@@ -1776,8 +2014,10 @@ def simulate(g: QueueGraph, wl: Workload,
         fault = FaultSchedule.from_mask(_failed_to_mask(g, failed))
     lossy = bool(np.asarray(fault.loss_p).any())
     hosty = fault.has_host_faults
+    corrupty = fault.has_corruption
     init, run = _get_fns(g, profile, p, F, batched=False, trace=trace,
-                         lossy=lossy, tel=tel, hosty=hosty)
+                         lossy=lossy, tel=tel, hosty=hosty,
+                         corrupty=corrupty, link=link)
     s0 = init(wl, jnp.uint32(seed))
     if trace == "stats":
         w0, w1 = _window_bounds(goodput_window, budget)
@@ -1821,17 +2061,21 @@ def _split_full_results(final, outs, sizes, horizon, budget,
 
 
 def _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
-               goodput_window, devices=None, tel=None) -> "list[SimResult]":
+               goodput_window, devices=None, tel=None,
+               link=None) -> "list[SimResult]":
     if devices is not None:
         from repro.network import shard
         return shard.run_sharded(g, wls, profile, p, fault, seeds, trace,
-                                 budget, goodput_window, devices, tel=tel)
+                                 budget, goodput_window, devices, tel=tel,
+                                 link=link)
     B, F = wls.src.shape
     profile.delivery_modes(F)
     lossy = bool(np.asarray(fault.loss_p).any())
     hosty = fault.has_host_faults
+    corrupty = fault.has_corruption
     init, run = _get_fns(g, profile, p, F, batched=True, trace=trace,
-                         lossy=lossy, tel=tel, hosty=hosty)
+                         lossy=lossy, tel=tel, hosty=hosty,
+                         corrupty=corrupty, link=link)
     s0 = init(wls, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":
@@ -1855,7 +2099,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
                    trace: str = "stats", max_ticks: "int | None" = None,
                    goodput_window: "tuple[int, int] | None" = None,
                    shard: bool = False, devices=None,
-                   telemetry: "TelemetrySpec | None" = None
+                   telemetry: "TelemetrySpec | None" = None,
+                   link: "LinkConfig | None" = None
                    ) -> "list[SimResult]":
     """Run B scenarios as compiled, batched chunked while-scans.
 
@@ -1901,6 +2146,10 @@ def simulate_batch(g: QueueGraph, wls: Workload,
              scenario axis, sharded with it, inert on padding lanes —
              and attach per-scenario ``result.telemetry`` traces,
              bitwise identical to the serial ``simulate`` call's.
+    link:    one :class:`~repro.core.link.LinkConfig` for the whole
+             batch (static, like the telemetry spec): arms the LLR /
+             CBFC lanes on every scenario. ``None`` / the off spec
+             compile the identical pre-link-layer program.
 
     Returns one SimResult per scenario, bitwise identical to the
     corresponding serial ``simulate`` call: the tick function is the same
@@ -1936,6 +2185,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
     profile, p, failed = _normalize_call(profile, p, failed)
     _check_trace(trace)
     tel = _check_telemetry(telemetry, trace)
+    link = _check_link(link)
     budget = int(p.ticks if max_ticks is None else max_ticks)
     B, F = wls.src.shape
     if graphs is not None and len(graphs) != B:
@@ -1976,7 +2226,8 @@ def simulate_batch(g: QueueGraph, wls: Workload,
 
     if profiles is None and graphs is None:
         return _run_batch(g, wls, profile, p, fault, seeds, trace, budget,
-                          goodput_window, devices=devices, tel=tel)
+                          goodput_window, devices=devices, tel=tel,
+                          link=link)
 
     # per-scenario profiles and/or topologies: group scenarios by the
     # (static) pair and run each group as one vmapped scan — one
@@ -2010,7 +2261,7 @@ def simulate_batch(g: QueueGraph, wls: Workload,
         gr, prof, idxs, sub_wls, sub_fault, sub_seeds = item
         return idxs, _run_batch(gr, sub_wls, prof, p, sub_fault, sub_seeds,
                                 trace, budget, goodput_window,
-                                devices=devices, tel=tel)
+                                devices=devices, tel=tel, link=link)
 
     if len(items) > 1:
         from concurrent.futures import ThreadPoolExecutor

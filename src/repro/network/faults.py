@@ -19,6 +19,15 @@ Hyperscale"), so the mask generalizes to a :class:`FaultSchedule`:
   state in the carry — so the draw stream is reproducible across
   batch/shard/chunk boundaries and identical between ``simulate`` and
   ``simulate_batch`` lanes.
+* ``corrupt_p`` — per-queue PHY bit-error probability, drawn per
+  TRANSMISSION (a counter-based hash of ``(seed, tick, queue)`` at
+  dequeue, a stream independent of the gray-link draw). Distinct from
+  ``loss_p`` by recoverability: a corrupted frame is LINK-recoverable —
+  with ``LinkConfig(llr=True)`` armed the hop replays it and delivery
+  is merely delayed — while gray-link drops are not (they vanish
+  whatever the link layer does, like congestion drops minus the trim
+  header). Without LLR a corrupted frame is silently dropped, exactly
+  like ``loss_p`` but charged at the transmitting hop.
 * ``host_fail_at`` / ``host_heal_at`` — per-HOST outage lanes (node
   death): while ``host_fail_at <= tick < host_heal_at`` the host stops
   injecting, stops processing/ emitting ACKs, and stops absorbing
@@ -81,6 +90,7 @@ class FaultSchedule:
     fail_at: jax.Array   # [.., Q] int32 first dead tick (NEVER = healthy)
     heal_at: jax.Array   # [.., Q] int32 first live-again tick (NEVER = forever)
     loss_p: jax.Array    # [.., Q] float32 per-packet loss probability
+    corrupt_p: jax.Array  # [.., Q] float32 per-transmission BER (PHY)
     seed: jax.Array      # [..] uint32 loss-draw stream seed
     host_fail_at: jax.Array  # [.., H] int32 host dead from (NEVER = healthy)
     host_heal_at: jax.Array  # [.., H] int32 host live again (NEVER = forever)
@@ -100,6 +110,7 @@ class FaultSchedule:
             fail_at=jnp.full(shape, NEVER_TICK, jnp.int32),
             heal_at=jnp.full(shape, NEVER_TICK, jnp.int32),
             loss_p=jnp.zeros(shape, jnp.float32),
+            corrupt_p=jnp.zeros(shape, jnp.float32),
             seed=jnp.full(shape[:-1], seed, jnp.uint32),
             host_fail_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
             host_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
@@ -118,6 +129,7 @@ class FaultSchedule:
             fail_at=jnp.where(mask, 0, NEVER_TICK).astype(jnp.int32),
             heal_at=jnp.full(mask.shape, NEVER_TICK, jnp.int32),
             loss_p=jnp.zeros(mask.shape, jnp.float32),
+            corrupt_p=jnp.zeros(mask.shape, jnp.float32),
             seed=jnp.full(mask.shape[:-1], seed, jnp.uint32),
             host_fail_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
             host_heal_at=jnp.full(hshape, NEVER_TICK, jnp.int32),
@@ -166,6 +178,21 @@ class FaultSchedule:
         hot = jnp.broadcast_to(jnp.asarray(hot), self.loss_p.shape)
         return replace(self, loss_p=jnp.where(hot, jnp.float32(p),
                                               self.loss_p))
+
+    def corrupt(self, queues, p: float) -> "FaultSchedule":
+        """Give ``queues`` a PHY bit-error rate: each TRANSMISSION out of
+        the queue is corrupted independently w.p. ``p``. Link-recoverable
+        (see the module docstring) — arm ``LinkConfig(llr=True)`` to
+        replay at the hop instead of dropping silently."""
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(
+                f"corruption probability must be in [0, 1], got {p}")
+        qs = np.atleast_1d(np.asarray(queues, np.int64))
+        hot = np.zeros(self.corrupt_p.shape[-1:], bool)
+        hot[qs] = True
+        hot = jnp.broadcast_to(jnp.asarray(hot), self.corrupt_p.shape)
+        return replace(self, corrupt_p=jnp.where(hot, jnp.float32(p),
+                                                 self.corrupt_p))
 
     def _host_window(self, hosts, at: int, heal_at: int, kind: str
                      ) -> tuple:
@@ -244,6 +271,14 @@ class FaultSchedule:
         return bool(
             (np.asarray(self.host_fail_at) != NEVER_TICK).any()
             or (np.asarray(self.nic_stall_at) != NEVER_TICK).any())
+
+    @property
+    def has_corruption(self) -> bool:
+        """True iff any queue has a nonzero BER lane — the dispatch-time
+        static (``corrupty``) that selects the corruption-aware
+        executable, mirroring ``lossy``. BER-free schedules compile the
+        exact pre-corruption program."""
+        return bool(np.asarray(self.corrupt_p).any())
 
     def dead_at(self, tick) -> jax.Array:
         """[.., Q] bool — queues dead at ``tick`` (the engine's per-tick

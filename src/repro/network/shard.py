@@ -66,7 +66,8 @@ def resolve_devices(devices, shard: bool):
 
 
 def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
-                 lossy: bool = False, tel=None, hosty: bool = False):
+                 lossy: bool = False, tel=None, hosty: bool = False,
+                 corrupty: bool = False, link=None):
     """Jitted + cached (init, run) pair whose scenario axis is sharded
     over `devs`. Same driver as the unsharded batched engine, wrapped in
     shard_map before jit; cached beside it under the device-id tuple.
@@ -75,12 +76,14 @@ def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
     is sharded on its leading scenario axis like the other stat lanes."""
     key = fabric._cache_key(g, profile, p, F, True, trace,
                             shard=tuple(d.id for d in devs), lossy=lossy,
-                            tel=tel, hosty=hosty)
+                            tel=tel, hosty=hosty, corrupty=corrupty,
+                            link=link)
     fns = fabric._RUN_CACHE.get(key)
     if fns is None:
         init_fn, run = fabric._build_fns(g, profile, p, F, batched=True,
                                          trace=trace, lossy=lossy, tel=tel,
-                                         hosty=hosty)
+                                         hosty=hosty, corrupty=corrupty,
+                                         link=link)
         mesh = Mesh(np.array(devs), (_AXIS,))
         sc, rep = P(_AXIS), P()
         if trace == "stats":
@@ -102,8 +105,8 @@ def _sharded_fns(g, profile, p, F: int, trace: str, devs: tuple,
 
 
 def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
-                goodput_window, devs: tuple,
-                tel=None) -> "list[fabric.SimResult]":
+                goodput_window, devs: tuple, tel=None,
+                link=None) -> "list[fabric.SimResult]":
     """One profile group's batch, sharded over `devs`. Called by
     ``fabric._run_batch`` — same inputs/outputs, bitwise-identical
     per-scenario results. ``fault`` is a [B, Q]-leaved FaultSchedule;
@@ -117,6 +120,7 @@ def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
     profile.delivery_modes(F)
     lossy = bool(np.asarray(fault.loss_p).any())
     hosty = fault.has_host_faults
+    corrupty = fault.has_corruption
     wls_p, pad = pad_scenarios(wls, n)
     if pad:
         # padding lanes get all-healthy schedules at the batch's own
@@ -128,7 +132,7 @@ def run_sharded(g, wls, profile, p, fault, seeds, trace: str, budget: int,
         seeds = jnp.concatenate(
             [seeds, jnp.full((pad,), fabric.DEFAULT_SEED, jnp.uint32)])
     init, run = _sharded_fns(g, profile, p, F, trace, devs, lossy, tel=tel,
-                             hosty=hosty)
+                             hosty=hosty, corrupty=corrupty, link=link)
     s0 = init(wls_p, seeds)
     sizes = np.asarray(wls.size)
     if trace == "stats":

@@ -32,9 +32,11 @@ any of the scenario engine's contracts:
 Channels (each independently selectable):
 
 * ``queues`` — per-queue occupancy EWMA (+ running peak) and CUMULATIVE
-  egress ECN-mark / trim / silent-drop counters. Cumulative counters
-  survive decimation losslessly: the rate over any window between two
-  surviving samples is exact, not subsampled.
+  egress ECN-mark / trim / silent-drop counters, plus the link-layer
+  reliability counters (LLR replays fired and CBFC credit stalls per
+  queue — all-zero unless the run armed ``link=LinkConfig(...)``).
+  Cumulative counters survive decimation losslessly: the rate over any
+  window between two surviving samples is exact, not subsampled.
 * ``flows``  — per-flow latest RTT sample (from real ACK timestamps)
   and congestion-window samples.
 * ``gauges`` — scenario-wide inflight packets, cumulative degraded
@@ -130,12 +132,16 @@ def create(spec: TelemetrySpec, Q: int, F: int) -> dict:
         "ecn_q": jnp.zeros((Qc,), jnp.int32),
         "trim_q": jnp.zeros((Qc,), jnp.int32),
         "drop_q": jnp.zeros((Qc,), jnp.int32),
+        "llr_q": jnp.zeros((Qc,), jnp.int32),
+        "stall_q": jnp.zeros((Qc,), jnp.int32),
         "rtt_f": jnp.zeros((Fc,), jnp.float32),
         # decimated ring lanes (slot i <-> tick i * stride * probe_every)
         "s_occ": jnp.zeros((S, Qc), jnp.float32),
         "s_ecn": jnp.zeros((S, Qc), jnp.int32),
         "s_trim": jnp.zeros((S, Qc), jnp.int32),
         "s_drop": jnp.zeros((S, Qc), jnp.int32),
+        "s_llr": jnp.zeros((S, Qc), jnp.int32),
+        "s_stall": jnp.zeros((S, Qc), jnp.int32),
         "s_rtt": jnp.zeros((S, Fc), jnp.float32),
         "s_cwnd": jnp.zeros((S, Fc), jnp.float32),
         "s_inflight": jnp.zeros((S, Gc), jnp.int32),
@@ -182,6 +188,8 @@ def make_update(spec: TelemetrySpec, Q: int, F: int):
         ecn_q = tel["ecn_q"] + probe["mark"][:Qc]
         trim_q = tel["trim_q"] + probe["trim"][:Qc]
         drop_q = tel["drop_q"] + probe["drop"][:Qc]
+        llr_q = tel["llr_q"] + probe["llr"][:Qc]
+        stall_q = tel["stall_q"] + probe["stall"][:Qc]
         rtt_f = jnp.where(probe["has_rtt"][:Fc], probe["rtt"][:Fc],
                           tel["rtt_f"])
 
@@ -207,11 +215,14 @@ def make_update(spec: TelemetrySpec, Q: int, F: int):
             "stamp": jnp.where(hot, tick, ring(tel["stamp"])),
             "ewma_q": ewma_q, "peak_q": peak_q,
             "ecn_q": ecn_q, "trim_q": trim_q, "drop_q": drop_q,
+            "llr_q": llr_q, "stall_q": stall_q,
             "rtt_f": rtt_f,
             "s_occ": put(tel["s_occ"], ewma_q),
             "s_ecn": put(tel["s_ecn"], ecn_q),
             "s_trim": put(tel["s_trim"], trim_q),
             "s_drop": put(tel["s_drop"], drop_q),
+            "s_llr": put(tel["s_llr"], llr_q),
+            "s_stall": put(tel["s_stall"], stall_q),
             "s_rtt": put(tel["s_rtt"], rtt_f),
             "s_cwnd": put(tel["s_cwnd"], probe["cwnd"][:Fc]),
             "s_inflight": put(tel["s_inflight"],
@@ -256,6 +267,8 @@ class FabricTrace:
     ecn: np.ndarray                        # [n, Qc] cumulative marks
     trim: np.ndarray                       # [n, Qc] cumulative trims
     drop: np.ndarray                       # [n, Qc] cumulative drops
+    llr: np.ndarray                        # [n, Qc] cumulative LLR replays
+    stall: np.ndarray                      # [n, Qc] cumulative credit stalls
     peak_q: np.ndarray                     # [Qc] running peak occupancy
     rtt: np.ndarray                        # [n, Fc] latest RTT sample
     cwnd: np.ndarray                       # [n, Fc] congestion window
@@ -274,14 +287,16 @@ class FabricTrace:
             spec=spec, horizon=int(horizon),
             ticks=g["stamp"][:n].astype(np.int64),
             occ=g["s_occ"][:n], ecn=g["s_ecn"][:n], trim=g["s_trim"][:n],
-            drop=g["s_drop"][:n], peak_q=g["peak_q"],
+            drop=g["s_drop"][:n], llr=g["s_llr"][:n],
+            stall=g["s_stall"][:n], peak_q=g["peak_q"],
             rtt=g["s_rtt"][:n], cwnd=g["s_cwnd"][:n],
             inflight=_col(g["s_inflight"][:n]),
             degraded=_col(g["s_degraded"][:n]),
             delivered=_col(g["s_delivered"][:n]),
             stride=int(g["stride"]),
             final={"ecn_q": g["ecn_q"], "trim_q": g["trim_q"],
-                   "drop_q": g["drop_q"], "ewma_q": g["ewma_q"],
+                   "drop_q": g["drop_q"], "llr_q": g["llr_q"],
+                   "stall_q": g["stall_q"], "ewma_q": g["ewma_q"],
                    "rtt_f": g["rtt_f"]},
         )
 
@@ -339,6 +354,8 @@ class FabricTrace:
                 marks_total=int(self.final["ecn_q"].sum()),
                 trims_total=int(self.final["trim_q"].sum()),
                 drops_total=int(self.final["drop_q"].sum()),
+                llr_replays_total=int(self.final["llr_q"].sum()),
+                credit_stalls_total=int(self.final["stall_q"].sum()),
                 mark_rate=float(self.final["ecn_q"].sum()) / self.horizon,
                 trim_rate=float(self.final["trim_q"].sum()) / self.horizon,
                 drop_rate=float(self.final["drop_q"].sum()) / self.horizon,
@@ -375,7 +392,8 @@ class FabricTrace:
                         else None)
                 dt = float(t - (self.ticks[i - 1] if i else -1))
                 for ch, lane in (("mark", self.ecn), ("trim", self.trim),
-                                 ("drop", self.drop)):
+                                 ("drop", self.drop), ("llr", self.llr),
+                                 ("stall", self.stall)):
                     base = lane[i - 1] if i else np.zeros_like(lane[0])
                     counter(f"{label}.{ch}_rate", t,
                             {f"q{q}": float((lane[i, q] - base[q]) / dt)

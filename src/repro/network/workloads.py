@@ -289,6 +289,52 @@ def host_fault_sweep(spines: int = 4, hosts_per_leaf: int = 4,
     }
 
 
+def corruption_sweep(bers=(0.0, 0.01, 0.03, 0.08), pairs: int = 4,
+                     uplinks: int = 2, size: int = 400, budget: int = 6000):
+    """The link-corruption grid as one batch: the victim-share pattern
+    (:func:`victim_sweep`) with a per-scenario bit-error rate on leaf-0's
+    uplinks — the BER axis of the BER x LLR-on/off grid. ONE definition
+    shared by the ``corruption_sweep`` bench block, the link canary
+    (``python -m repro.core.link``) and the tests.
+
+    The LLR-on/off axis is a COMPILE-TIME static (``link=`` selects the
+    executable like a ``TelemetrySpec``), so it cannot ride the scenario
+    axis: callers run the SAME returned batch twice, once with
+    ``link=exp["link"]`` (LLR armed) and once with ``link=None``
+    (corruption leaks into end-to-end recovery). The BER=0 lane is the
+    bitwise-inertness anchor — with nothing to corrupt, the two arms
+    must agree bit-for-bit on every pre-feature lane.
+
+    Returns (g, wls [B, F], faults [B, Q], expectations) with
+    ``expectations["link"]`` the LLR spec for the on arm,
+    ``["cbfc"]`` the LLR+CBFC spec (the lossless-credit arm),
+    ``["params"]`` the shared SimParams (a large ``timeout_ticks`` so
+    hop-local replay at ~link RTT visibly beats end-to-end RTO tails),
+    ``["bers"]``/``["names"]`` the BER axis, ``["uplinks"]`` the
+    corrupted queue ids, and ``["budget"]`` the tick budget.
+    """
+    from repro.core.lb.schemes import LBScheme
+    from repro.core.link import LinkConfig
+    from repro.network.fabric import SimParams
+    from repro.network.faults import FaultSchedule
+
+    g, wl, exp = victim_sweep(pairs, uplinks, size=size)
+    healthy = FaultSchedule.healthy(g.num_queues)
+    scheds = [healthy.corrupt(exp["uplinks"], ber) if ber else healthy
+              for ber in bers]
+    wls = Workload.stack([wl] * len(scheds))
+    return g, wls, FaultSchedule.stack(scheds), dict(
+        exp,
+        names=[f"ber_{ber:g}" for ber in bers],
+        bers=tuple(float(b) for b in bers),
+        link=LinkConfig.on(llr=True),
+        cbfc=LinkConfig.on(llr=True, cbfc=True),
+        params=SimParams(ticks=budget, timeout_ticks=256, ooo_threshold=24),
+        profile=TransportProfile.ai_full(lb=LBScheme.REPS),
+        budget=budget,
+    )
+
+
 def size_sweep(sizes, fan_in: int = 4):
     """Incast message-size sweep: same flow set, per-scenario sizes.
 

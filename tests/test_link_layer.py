@@ -1,0 +1,299 @@
+"""Traced link-layer reliability (LLR replay + CBFC credits): contracts.
+
+Locked here (see DESIGN.md "Link-layer reliability contract"):
+
+* link-layer OFF is FREE — ``link=None`` and ``LinkConfig.off()``
+  normalize to the same compile-cache key as the pre-link engine, and
+  an off-run's ``trace="full"`` lanes stay bitwise equal to the PR-2
+  golden anchors;
+* a clean link is bitwise inert — with BER=0, an LLR/CBFC-armed run's
+  final SimState equals the off-run's on every pre-feature lane (only
+  the link-owned lanes, which differ in shape, are excluded);
+* NO corruption escapes an LLR-enabled link: across seeds and BERs,
+  end-to-end drops stay zero, every flow completes, and recovery is
+  hop-local (``llr_replays`` counts it) — while the LLR-off twin leaks
+  the same corruption into end-to-end recovery;
+* LLR does NOT mask congestion: trims still NACK end-to-end;
+* CBFC back-pressures instead of overflowing: zero trims on a clean
+  congested fabric, with ``credit_stall_ticks`` pricing the stalls;
+* the new stat lanes are bitwise deterministic across serial / batched /
+  device-sharded execution;
+* ``workloads.corruption_sweep`` is the ONE BER-grid definition shared
+  by the bench block, the ``python -m repro.core.link`` canary and
+  these tests.
+
+conftest.py forces 4 virtual CPU devices; sharded tests skip (not
+fail) with fewer than 2.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.link import (LINK_STATE_LANES, LinkConfig,
+                             fabric_buffer_pricing, state_bitwise_equal)
+from repro.network import workloads
+from repro.network.fabric import (SimParams, Workload, _cache_key, simulate,
+                                  simulate_batch)
+from repro.network.faults import FaultSchedule
+from repro.network.profile import TransportProfile
+from repro.network.telemetry import TelemetrySpec
+from repro.network.topology import leaf_spine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "fabric_golden.npz")
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4; set by tests/conftest.py unless overridden)")
+
+
+def _state_equal(a, b) -> bool:
+    return all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)))
+
+
+def _grid(bers=(0.0, 0.03)):
+    """The shared corruption grid at test scale."""
+    return workloads.corruption_sweep(bers=bers)
+
+
+# ------------------------------------------------------------------------
+# the event-driven LLRLink reference model
+# ------------------------------------------------------------------------
+
+def test_llr_stale_nack_clamps_to_send_base():
+    """Regression: a NACK naming frames BELOW the cumulative-ACK base
+    (a duplicate/reordered NACK arriving after the ACK that freed them)
+    must clamp to ``send_base`` — replaying freed frames would read a
+    replay buffer that no longer holds them, and the old code also
+    overcounted ``retransmissions`` by the already-freed span.
+
+    Lives here rather than test_link_tss.py so it runs without the
+    optional hypothesis dependency."""
+    from repro.core.link import LLRLink
+
+    llr = LLRLink(replay_capacity=16, timeout=8)
+    for _ in range(10):
+        llr.send()
+    llr.on_ack(6)                   # frames 0..6 freed; send_base == 7
+    resend = llr.on_nack(2)         # stale: names freed frames 2..6
+    assert resend == [7, 8, 9]      # replay starts at send_base, never before
+    assert llr.retransmissions == 3  # not 8: freed span is not re-counted
+    # and a fresh NACK at the base behaves as before
+    resend = llr.on_nack(7)
+    assert resend == [7, 8, 9]
+
+
+# ------------------------------------------------------------------------
+# spec validation + off-gating
+# ------------------------------------------------------------------------
+
+def test_linkconfig_validation():
+    assert not LinkConfig.off().enabled
+    assert LinkConfig.on(llr=True).enabled
+    assert LinkConfig.on(llr=False, cbfc=True).enabled
+    with pytest.raises(ValueError, match="llr_rtt"):
+        LinkConfig(llr=True, llr_rtt=0)
+    with pytest.raises(ValueError, match="credit_return_ticks"):
+        LinkConfig(cbfc=True, credit_return_ticks=0)
+
+
+def test_wrong_link_type_rejected():
+    g, wls, scheds, exp = _grid()
+    wl = jax.tree_util.tree_map(lambda a: a[0], wls)
+    with pytest.raises(TypeError, match="LinkConfig"):
+        simulate(g, wl, exp["profile"], exp["params"], link=True)
+
+
+def test_off_spec_shares_the_pre_link_cache_key():
+    """None and LinkConfig.off() must hit the SAME executable as the
+    pre-link engine; an enabled spec must not."""
+    g = leaf_spine(leaves=2, spines=2, hosts_per_leaf=2)
+    prof = TransportProfile.ai_full()
+    p = SimParams()
+    base = _cache_key(g, prof, p, 2, True, "stats")
+    assert base == _cache_key(g, prof, p, 2, True, "stats", link=None)
+    assert base == _cache_key(g, prof, p, 2, True, "stats",
+                              link=LinkConfig.off())
+    on = _cache_key(g, prof, p, 2, True, "stats", link=LinkConfig.on())
+    assert on != base
+    # the spec's knobs pick the program: a different replay RTT, the
+    # CBFC axis, and the corruption lane each recompile
+    assert on != _cache_key(g, prof, p, 2, True, "stats",
+                            link=LinkConfig.on(llr_rtt=16))
+    assert on != _cache_key(g, prof, p, 2, True, "stats",
+                            link=LinkConfig.on(cbfc=True))
+    assert base != _cache_key(g, prof, p, 2, True, "stats", corrupty=True)
+
+
+def test_link_off_keeps_golden_full_trace_bitwise():
+    """An explicit off spec through the public API reproduces the PR-2
+    golden lanes bitwise — link-off IS the pre-link engine."""
+    gold = np.load(GOLDEN)
+    g = leaf_spine(leaves=2, spines=4, hosts_per_leaf=4)
+    wl = Workload.of([0, 1, 2], [4, 5, 6], 200)
+    r = simulate(g, wl, TransportProfile.ai_full(), SimParams(ticks=300),
+                 trace="full", link=LinkConfig.off())
+    h = r.horizon
+    np.testing.assert_array_equal(r.delivered_per_tick,
+                                  gold["a_delivered"][:h])
+    np.testing.assert_array_equal(r.cwnd_per_tick, gold["a_cwnd"][:h])
+    np.testing.assert_array_equal(np.asarray(r.state.delivered),
+                                  gold["a_state_delivered"])
+
+
+def test_clean_link_armed_run_is_bitwise_inert():
+    """BER=0 + LLR/CBFC armed must be bitwise the plain run on every
+    pre-feature lane — and congestion trims are NOT masked (they land
+    identically, end-to-end, under both arms)."""
+    g, wls, scheds, exp = _grid(bers=(0.0,))
+    prof, p = exp["profile"], exp["params"]
+    on = simulate_batch(g, wls, prof, p, faults=scheds, link=exp["link"])[0]
+    off = simulate_batch(g, wls, prof, p, faults=scheds)[0]
+    drift = state_bitwise_equal(on.state, off.state)
+    assert drift is None, f"clean-link armed run drifted: {drift}"
+    assert int(on.trims) == int(off.trims) > 0, \
+        "the congested clean lane must trim identically under both arms"
+    assert on.llr_replays == 0 and on.credit_stall_ticks == 0
+    # the link-owned lanes are exactly the shape-changing ones
+    assert LINK_STATE_LANES == {
+        "llr_busy_until", "llr_replays", "cbfc_consumed", "cbfc_freed",
+        "cbfc_ret", "credit_stall_ticks"}
+
+
+# ------------------------------------------------------------------------
+# the confinement property: no corruption escapes an LLR link
+# ------------------------------------------------------------------------
+
+def test_no_corruption_escapes_llr_across_seeds_and_bers():
+    """Seeded property sweep: for every (seed, BER) point, the LLR arm
+    delivers every flow with ZERO end-to-end drops and hop-local
+    replays, while the off arm leaks the same corruption as silent
+    end-to-end drops. One executable per arm (seed and BER are traced)."""
+    g, wls, _, exp = _grid(bers=(0.03,))
+    wl = jax.tree_util.tree_map(lambda a: a[0], wls)
+    prof, p, link = exp["profile"], exp["params"], exp["link"]
+    total = int(np.asarray(wl.size).sum())
+    for seed in (1, 0xBEEF, 12345):
+        for ber in (0.02, 0.08):
+            sched = FaultSchedule.healthy(g.num_queues).corrupt(
+                exp["uplinks"], ber)
+            r = simulate(g, wl, prof, p, faults=sched, seed=seed, link=link)
+            assert int(r.drops) == 0, (seed, ber, int(r.drops))
+            assert r.llr_replays > 0, (seed, ber)
+            assert r.completion_tick() > 0, (seed, ber)
+            assert int(np.asarray(r.state.delivered).sum()) == total
+            leak = simulate(g, wl, prof, p, faults=sched, seed=seed)
+            assert int(leak.drops) > 0, (seed, ber)
+
+
+def test_cbfc_backpressures_instead_of_trimming():
+    """Clean congested fabric, CBFC armed: credit exhaustion must stall
+    (``credit_stall_ticks > 0``) instead of trimming (zero trims), with
+    everything still completing — lossless by back-pressure, with the
+    buffer bill undercutting PFC headroom."""
+    g, wls, scheds, exp = _grid(bers=(0.0,))
+    prof, p = exp["profile"], exp["params"]
+    off = simulate_batch(g, wls, prof, p, faults=scheds)[0]
+    cb = simulate_batch(g, wls, prof, p, faults=scheds,
+                        link=LinkConfig.on(llr=False, cbfc=True))[0]
+    assert int(off.trims) > 0, "the scenario must congest"
+    assert int(cb.trims) == 0
+    assert cb.credit_stall_ticks > 0
+    assert cb.completion_tick() > 0
+    assert int(cb.drops) == 0
+    pricing = fabric_buffer_pricing(g.num_queues)
+    assert pricing["cbfc_total_bytes"] < pricing["pfc_total_bytes"] / 2
+
+
+# ------------------------------------------------------------------------
+# serial == batched == sharded for the new stat lanes
+# ------------------------------------------------------------------------
+
+def test_batched_link_lanes_match_serial_bitwise():
+    g, wls, scheds, exp = _grid(bers=(0.0, 0.02, 0.08))
+    prof, p = exp["profile"], exp["params"]
+    link = exp["cbfc"]            # LLR + CBFC: every new lane live
+    rs = simulate_batch(g, wls, prof, p, faults=scheds, link=link)
+    for i, r in enumerate(rs):
+        solo = simulate(
+            g, jax.tree_util.tree_map(lambda a: a[i], wls), prof, p,
+            faults=jax.tree_util.tree_map(lambda a: a[i], scheds),
+            link=link)
+        assert solo.horizon == r.horizon, f"lane {i}"
+        assert _state_equal(solo.state, r.state), f"lane {i}"
+        assert solo.llr_replays == r.llr_replays, f"lane {i}"
+        assert solo.credit_stall_ticks == r.credit_stall_ticks, f"lane {i}"
+
+
+@multi_device
+def test_sharded_link_lanes_match_batched_bitwise():
+    """B=3 on all devices (ragged -> one padding lane) with corruption
+    lanes riding: the sharded link stat lanes equal the unsharded ones
+    (shard padding pads ``corrupt_p`` with healthy zeros)."""
+    g, wls, scheds, exp = _grid(bers=(0.0, 0.02, 0.08))
+    prof, p = exp["profile"], exp["params"]
+    link = exp["cbfc"]
+    base = simulate_batch(g, wls, prof, p, faults=scheds, link=link)
+    shd = simulate_batch(g, wls, prof, p, faults=scheds, link=link,
+                         shard=True)
+    assert len(shd) == len(base) == 3
+    for i, (a, b) in enumerate(zip(base, shd)):
+        assert a.horizon == b.horizon, f"lane {i}"
+        assert _state_equal(a.state, b.state), f"lane {i}"
+        assert a.llr_replays == b.llr_replays, f"lane {i}"
+        assert a.credit_stall_ticks == b.credit_stall_ticks, f"lane {i}"
+
+
+# ------------------------------------------------------------------------
+# telemetry channels + the shared grid definition
+# ------------------------------------------------------------------------
+
+def test_telemetry_llr_channel_mirrors_the_replay_scalar():
+    """With probes on, the cumulative per-queue ``llr`` channel's final
+    total equals the ``llr_replays`` scalar, the replays land on the
+    corrupted queues only, and arming telemetry+link together perturbs
+    nothing vs the probe-free run."""
+    g, wls, scheds, exp = _grid(bers=(0.04,))
+    wl = jax.tree_util.tree_map(lambda a: a[0], wls)
+    sched = jax.tree_util.tree_map(lambda a: a[0], scheds)
+    prof, p, link = exp["profile"], exp["params"], exp["link"]
+    r = simulate(g, wl, prof, p, faults=sched, link=link,
+                 telemetry=TelemetrySpec.on())
+    bare = simulate(g, wl, prof, p, faults=sched, link=link)
+    assert _state_equal(r.state, bare.state)
+    tr = r.telemetry
+    llr_q = np.asarray(tr.final["llr_q"])
+    assert int(llr_q.sum()) == r.llr_replays > 0
+    hot = set(np.nonzero(llr_q)[0].tolist())
+    assert hot <= set(exp["uplinks"]), (hot, exp["uplinks"])
+    assert int(tr.llr[-1].sum()) == int(llr_q.sum())
+    # stall channel: all-zero without CBFC armed
+    assert int(np.asarray(tr.final["stall_q"]).sum()) == 0
+
+
+def test_corruption_sweep_is_the_shared_definition():
+    g, wls, scheds, exp = workloads.corruption_sweep(
+        bers=(0.0, 0.01, 0.05))
+    assert exp["bers"] == (0.0, 0.01, 0.05)
+    assert exp["names"] == ["ber_0", "ber_0.01", "ber_0.05"]
+    assert wls.src.shape[0] == 3
+    assert exp["link"].llr and not exp["link"].cbfc
+    assert exp["cbfc"].llr and exp["cbfc"].cbfc
+    assert exp["params"].ticks == exp["budget"]
+    # every lane is the same victim-share workload as victim_sweep's
+    gv, wl, expv = workloads.victim_sweep(pairs=4, uplinks=2, size=400)
+    assert exp["uplinks"] == expv["uplinks"]
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(wls.src[i]),
+                                      np.asarray(wl.src))
+    # lane 0 is healthy; nonzero lanes corrupt exactly the uplinks
+    cp = np.asarray(scheds.corrupt_p)
+    assert (cp[0] == 0).all()
+    for i, ber in enumerate(exp["bers"][1:], start=1):
+        assert set(np.nonzero(cp[i])[0].tolist()) == set(exp["uplinks"])
+        np.testing.assert_allclose(cp[i][list(exp["uplinks"])], ber)
